@@ -1,0 +1,79 @@
+"""Paper Figs. 6–11: autotuning traces for gemm / syr2k / covariance, with and
+without the parallelization transformation (cost-model measurement calibrated
+to the paper's Xeon 8180M — this container has one CPU core; see DESIGN.md §4).
+
+Reports per run: best configuration + pragmas, experiment number of the best,
+status counts (red-node fraction), and the new-best trace (the red line)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (PAPER_WORKLOADS, CostModelBackend, SearchSpace)
+from repro.core.strategies import run_greedy
+
+from .common import ascii_trace, save_result, trace_csv
+
+BUDGET = 400
+
+
+def run_one(wname: str, parallelize: bool) -> dict:
+    w = PAPER_WORKLOADS[wname]
+    space = SearchSpace(root=w.nest(), enable_parallelize=parallelize)
+    be = CostModelBackend()
+    t0 = time.perf_counter()
+    log = run_greedy(w, space, be, budget=BUDGET)
+    dt = time.perf_counter() - t0
+    best = log.best()
+    first = (type(best.config.transformations[0]).__name__
+             if best.config.transformations else "baseline")
+    rec = {
+        "workload": wname,
+        "parallelize": parallelize,
+        "budget": BUDGET,
+        "baseline_time_s": log.baseline.result.time_s,
+        "best_time_s": best.result.time_s,
+        "best_experiment": best.number,
+        "best_pragmas": best.pragmas.splitlines(),
+        "best_first_transformation": first,
+        "speedup": log.baseline.result.time_s / best.result.time_s,
+        "counts": log.counts(),
+        "new_best_trace": log.new_best_trace(),
+        "tuner_wall_s": dt,
+    }
+    tag = f"fig_{wname}_{'par' if parallelize else 'nopar'}"
+    save_result(tag, rec)
+    (save_result.__self__ if False else None)
+    from .common import RESULTS
+    (RESULTS / f"{tag}.csv").write_text(trace_csv(log))
+    return rec, log
+
+
+def main(emit=print):
+    rows = []
+    for wname in ("gemm", "syr2k", "covariance"):
+        for par in (True, False):
+            rec, log = run_one(wname, par)
+            label = f"{wname}{'/par' if par else '/nopar'}"
+            emit(f"\n=== {label} (paper Fig. "
+                 f"{ {'gemm': '6/7', 'syr2k': '8/9', 'covariance': '10/11'}[wname] }) ===")
+            emit(ascii_trace(log))
+            emit(f"baseline={rec['baseline_time_s']:.3f}s best={rec['best_time_s']:.3f}s "
+                 f"(exp #{rec['best_experiment']}, speedup {rec['speedup']:.1f}x) "
+                 f"counts={rec['counts']}")
+            for l in rec["best_pragmas"]:
+                emit("   " + l)
+            us = rec["best_time_s"] * 1e6
+            rows.append(f"autotune_{label},{us:.1f},"
+                        f"speedup={rec['speedup']:.2f};red={_red(rec)}")
+    return rows
+
+
+def _red(rec):
+    c = rec["counts"]
+    n = sum(c.values())
+    return round((c.get("illegal", 0) + c.get("compile_error", 0)) / n, 3)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Beyond-paper transformations (paper §VIII future work): enabling Unroll and
+Vectorize in the search space — same greedy driver, same budget, richer tree."""
+
+from __future__ import annotations
+
+from repro.core import GEMM, CostModelBackend, SearchSpace
+from repro.core.strategies import run_greedy, run_mcts
+
+from .common import save_result
+
+BUDGET = 500
+
+
+def main(emit=print):
+    be = CostModelBackend()
+    emit("\n=== beyond-paper transformations: +unroll +vectorize "
+         "(gemm, no parallelize — serial kernel quality) ===")
+    base_space = SearchSpace(root=GEMM.nest(), enable_parallelize=False)
+    rich_space = SearchSpace(root=GEMM.nest(), enable_parallelize=False,
+                             enable_unroll=True, enable_vectorize=True)
+    g0 = run_greedy(GEMM, base_space, be, budget=BUDGET)
+    g1 = run_greedy(GEMM, rich_space, be, budget=BUDGET)
+    m1 = run_mcts(GEMM, SearchSpace(root=GEMM.nest(), enable_parallelize=False,
+                                    enable_unroll=True, enable_vectorize=True),
+                  be, budget=BUDGET, seed=0)
+    rows = []
+    res = {
+        "tile+interchange (paper set)": g0.best(),
+        "+unroll+vectorize greedy": g1.best(),
+        "+unroll+vectorize mcts": m1.best(),
+    }
+    payload = {}
+    for name, best in res.items():
+        emit(f"  {name:32s} best={best.result.time_s:8.3f}s "
+             f"(exp #{best.number}, depth {len(best.config)})")
+        for line in best.pragmas.splitlines():
+            emit("     " + line)
+        key = name.split()[0].strip("+")
+        rows.append(f"beyond_{key},{best.result.time_s*1e6:.1f},"
+                    f"depth={len(best.config)}")
+        payload[name] = {"time_s": best.result.time_s,
+                         "pragmas": best.pragmas.splitlines()}
+    save_result("beyond_transforms", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Kernel micro-benchmarks: wall-clock of the jit'd Pallas wrappers (interpret
+mode on this CPU container — correctness-representative, not TPU timings) plus
+the TPU-v5e cost-model projection for the tuned block configurations."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Configuration, GEMM, Tile, TPU_V5E, estimate_time
+from repro.core.workloads import matmul_workload
+from repro.kernels import ops
+
+from .common import save_result
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def main(emit=print):
+    rng = np.random.default_rng(0)
+    rows = []
+    emit("\n=== kernel micro-benchmarks (interpret-mode wallclock + "
+         "TPU cost-model projection) ===")
+
+    # matmul at a few block configs — the tuned default vs a naive block
+    x = rng.standard_normal((512, 512)).astype(np.float32)
+    y = rng.standard_normal((512, 512)).astype(np.float32)
+    for bm, bn, bk in ((64, 64, 64), (256, 256, 512)):
+        dt = _time(lambda a, b: ops.matmul(a, b, block_m=bm, block_n=bn,
+                                           block_k=bk), x, y)
+        w = matmul_workload("mm512", 512, 512, 512)
+        cfg = Configuration().child(
+            Tile(loops=("i", "j", "k"),
+                 sizes=(min(bm, 511), min(bn, 511), min(bk, 511))))
+        proj = estimate_time(cfg.apply(w.nest()), TPU_V5E)
+        emit(f"  matmul 512³ blocks=({bm},{bn},{bk}): interpret={dt*1e3:7.1f}ms "
+             f"tpu-v5e-model={proj*1e6:7.1f}us")
+        rows.append(f"kernel_matmul_b{bm}x{bn}x{bk},{dt*1e6:.1f},"
+                    f"tpu_proj_us={proj*1e6:.1f}")
+
+    a = rng.standard_normal((256, 256)).astype(np.float32)
+    b = rng.standard_normal((256, 256)).astype(np.float32)
+    dt = _time(lambda p, q: ops.syr2k(p, q, block_i=64, block_j=64,
+                                      block_k=64), a, b)
+    rows.append(f"kernel_syr2k_256,{dt*1e6:.1f},interpret")
+    emit(f"  syr2k 256²×256: interpret={dt*1e3:7.1f}ms")
+
+    d = rng.standard_normal((256, 256)).astype(np.float32)
+    dt = _time(lambda p: ops.covariance(p, block_i=64, block_j=64,
+                                        block_k=64), d)
+    rows.append(f"kernel_covariance_256,{dt*1e6:.1f},interpret")
+    emit(f"  covariance 256²: interpret={dt*1e3:7.1f}ms")
+
+    q = rng.standard_normal((1, 4, 256, 64)).astype(np.float32)
+    k = rng.standard_normal((1, 2, 256, 64)).astype(np.float32)
+    v = rng.standard_normal((1, 2, 256, 64)).astype(np.float32)
+    dt = _time(lambda a1, a2, a3: ops.flash_attention(
+        a1, a2, a3, block_q=64, block_kv=64), q, k, v)
+    rows.append(f"kernel_flash_attn_256,{dt*1e6:.1f},interpret")
+    emit(f"  flash attention (4h GQA, S=256): interpret={dt*1e3:7.1f}ms")
+
+    xs = (0.1 * rng.standard_normal((4, 256, 32))).astype(np.float32)
+    dts = (0.1 + 0.5 * rng.random((4, 256, 1))).astype(np.float32)
+    aa = (-1.0 - rng.random((4, 1, 1))).astype(np.float32)
+    bb = (rng.standard_normal((4, 256, 16)) / 4).astype(np.float32)
+    cc = rng.standard_normal((4, 256, 16)).astype(np.float32)
+    dt = _time(lambda *a: ops.ssd_scan(*a, chunk=64), xs, dts, aa, bb, cc)
+    rows.append(f"kernel_ssd_256,{dt*1e6:.1f},interpret")
+    emit(f"  SSD scan (4 heads, L=256, chunk=64): interpret={dt*1e3:7.1f}ms")
+
+    save_result("kernel_micro", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

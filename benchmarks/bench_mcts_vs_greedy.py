@@ -1,0 +1,46 @@
+"""Beyond-paper (paper §VIII / ProTuner): MCTS vs the paper's greedy strategy
+vs beam and random search, same budget, on all three PolyBench kernels with
+parallelization enabled (where greedy gets trapped, §VI)."""
+
+from __future__ import annotations
+
+from repro.core import PAPER_WORKLOADS, CostModelBackend, SearchSpace
+from repro.core.strategies import run_beam, run_greedy, run_mcts, run_random
+
+from .common import save_result
+
+BUDGET = 600
+SEEDS = (0, 1, 2)
+
+
+def main(emit=print):
+    be = CostModelBackend()
+    rows = []
+    summary = {}
+    emit("\n=== MCTS vs greedy (budget %d, parallelize enabled) ===" % BUDGET)
+    for wname, w in PAPER_WORKLOADS.items():
+        res = {}
+        g = run_greedy(w, SearchSpace(root=w.nest()), be, budget=BUDGET)
+        res["greedy"] = g.best().result.time_s
+        res["mcts"] = min(
+            run_mcts(w, SearchSpace(root=w.nest()), be, budget=BUDGET,
+                     seed=s).best().result.time_s for s in SEEDS)
+        res["beam"] = run_beam(w, SearchSpace(root=w.nest()), be,
+                               budget=BUDGET, width=4).best().result.time_s
+        res["random"] = min(
+            run_random(w, SearchSpace(root=w.nest()), be, budget=BUDGET,
+                       seed=s).best().result.time_s for s in SEEDS)
+        base = g.baseline.result.time_s
+        emit(f"  {wname:11s} baseline={base:8.2f}s  " + "  ".join(
+            f"{k}={v:7.3f}s({base / v:5.1f}x)" for k, v in res.items()))
+        summary[wname] = {"baseline_s": base, **{f"{k}_s": v
+                                                 for k, v in res.items()}}
+        for k, v in res.items():
+            rows.append(f"strategy_{wname}_{k},{v*1e6:.1f},"
+                        f"speedup={base/v:.2f}")
+    save_result("mcts_vs_greedy", summary)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""§Roofline table: render the 40-cell × 2-mesh dry-run results.
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun) and
+emits the per-cell three-term roofline with dominant-bottleneck calls and
+MODEL_FLOPS/HLO_FLOPs usefulness ratios."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).parent / "results" / "dryrun"
+
+ARCHS = ["qwen1_5_32b", "internlm2_1_8b", "qwen1_5_110b", "glm4_9b",
+         "kimi_k2_1t_a32b", "deepseek_v3_671b", "whisper_base",
+         "phi_3_vision_4_2b", "recurrentgemma_2b", "mamba2_130m"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str) -> list[dict]:
+    rows = []
+    for a in ARCHS:
+        for s in SHAPES:
+            p = DRYRUN / f"{a}__{s}__{mesh}.json"
+            if not p.exists():
+                rows.append({"arch": a, "shape": s, "mesh": mesh,
+                             "skip": "missing"})
+                continue
+            rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def table(mesh: str) -> str:
+    out = [f"\n### Roofline — {mesh} pod mesh "
+           f"({'2×16×16 = 512' if mesh == 'multi' else '16×16 = 256'} chips)\n",
+           "| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | step ms | useful-flops | roofline-frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r.get("skip"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP({r['skip'][:40]}…) | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"**{r['dominant']}** | {r['step_time_s']*1e3:.2f} | "
+            f"{r['useful_flops_fraction']:.3f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main(emit=print):
+    rows = []
+    for mesh in ("single", "multi"):
+        emit(table(mesh))
+        for r in load(mesh):
+            if r.get("skip"):
+                continue
+            rows.append(
+                f"dryrun_{r['arch']}_{r['shape']}_{mesh},"
+                f"{r['step_time_s']*1e6:.1f},"
+                f"dom={r['dominant']};rf={r['roofline_fraction']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bench_pragma_stacking   paper Fig. 1 (pragma stacking on gemm)
+  bench_autotune          paper Figs. 6–11 (greedy traces ± parallelize)
+  bench_mcts_vs_greedy    paper §VIII / ProTuner (beyond-paper strategies)
+  bench_kernels           Pallas kernel micro-benchmarks
+  bench_roofline          §Roofline table from the 80-cell dry-run records
+
+Prints a final ``name,us_per_call,derived`` CSV.  Run with
+``PYTHONPATH=src python -m benchmarks.run`` (add ``--only <name>`` to subset).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    from . import (bench_autotune, bench_beyond_transforms, bench_kernels,
+                   bench_mcts_vs_greedy, bench_pragma_stacking,
+                   bench_roofline)
+
+    suites = {
+        "pragma_stacking": bench_pragma_stacking.main,
+        "autotune": bench_autotune.main,
+        "mcts_vs_greedy": bench_mcts_vs_greedy.main,
+        "beyond_transforms": bench_beyond_transforms.main,
+        "kernels": bench_kernels.main,
+        "roofline": bench_roofline.main,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    all_rows: list[str] = []
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            rows = fn()
+            all_rows.extend(rows or [])
+            print(f"\n[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:          # noqa: BLE001
+            print(f"\n[{name}] FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr, flush=True)
+            all_rows.append(f"{name},,FAILED:{type(e).__name__}")
+
+    print("\n" + "=" * 60)
+    print("name,us_per_call,derived")
+    for r in all_rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

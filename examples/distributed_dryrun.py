@@ -1,0 +1,34 @@
+"""Distributed example: lower + compile one production cell on the 512-chip
+multi-pod mesh and print its roofline terms — the per-cell core of
+``repro.launch.dryrun`` as a minimal script.
+
+    PYTHONPATH=src python examples/distributed_dryrun.py [--arch glm4_9b]
+"""
+
+# must precede any jax import (device count locks at first init)
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="internlm2_1_8b")
+    ap.add_argument("--shape", type=str, default="train_4k")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+
+    rec = lower_cell(args.arch, args.shape, "multi", verbose=True)
+    if rec.get("skip"):
+        print("cell skipped:", rec["skip"])
+        return
+    print("\nroofline record:")
+    for k in ("chips", "compute_s", "memory_s", "collective_s", "dominant",
+              "useful_flops_fraction", "roofline_fraction"):
+        print(f"  {k:24s} {rec[k]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving example: batched prefill + KV-cache decode through the engine,
+with a cache-correctness cross-check against uncached prefill.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = get_config("glm4_9b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    eng = ServeEngine(cfg, params, max_batch=4, max_seq=256)
+
+    reqs = [
+        Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=16),
+        Request(prompt=[42, 17], max_new_tokens=16),
+        Request(prompt=[7, 7, 7, 7, 7, 7, 7], max_new_tokens=16),
+        Request(prompt=[100, 200, 300], max_new_tokens=16),
+    ]
+    t0 = time.perf_counter()
+    out = eng.generate(reqs)
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out) for r in out)
+    print(f"generated {total} tokens for {len(reqs)} requests "
+          f"in {dt:.2f}s ({total/dt:.1f} tok/s, reduced config on CPU)")
+    for i, r in enumerate(out):
+        print(f"  req{i} prompt={r.prompt} → {r.out}")
+
+    # cross-check the longest request (no left-padding) against uncached
+    # greedy decoding.  NOTE: shorter requests in a mixed-length wave attend
+    # to their left-pad tokens — a known engine limitation; production would
+    # use per-sequence masks / paged attention (DESIGN.md §8).
+    longest = max(range(len(reqs)), key=lambda i: len(out[i].prompt))
+    seq = list(out[longest].prompt)
+    want = []
+    for _ in range(4):
+        logits, _ = m.prefill(params, {"tokens": jnp.asarray([seq], jnp.int32)})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        want.append(nxt)
+        seq.append(nxt)
+    ok = out[longest].out[:4] == want
+    print(f"\nKV-cache correctness (unpadded request) vs uncached prefill: "
+          f"{'MATCH ✓' if ok else f'MISMATCH {out[longest].out[:4]} vs {want}'}")
+
+
+if __name__ == "__main__":
+    main()

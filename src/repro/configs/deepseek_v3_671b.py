@@ -1,0 +1,32 @@
+"""DeepSeek-V3 (671B total / 37B active) — MLA attention, 256 routed experts
+top-8 + 1 shared, 3 leading dense layers, MTP module.  [arXiv:2412.19437]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,          # MLA: per-head kv reconstructed from the latent
+    head_dim=128,
+    d_ff=18432,              # dense-layer hidden
+    moe_d_ff=2048,           # per-expert hidden (assignment: d_ff=2048)
+    vocab_size=129280,
+    n_experts=256,
+    n_shared_experts=1,
+    top_k=8,
+    n_dense_layers=3,
+    use_mla=True,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    mtp=True,
+    rope_theta=10_000.0,
+    act="silu",
+    param_dtype="bfloat16",   # 0.7-1T params: f32 master does not fit 512x16GB
+    citation="arXiv:2412.19437",
+)

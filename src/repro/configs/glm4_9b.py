@@ -1,0 +1,20 @@
+"""GLM4-9B — dense decoder, GQA kv=2, RoPE.  kv=2 < model-axis size means the
+decode KV cache must be sequence-sharded (flash-decode combine) — one of the
+§Perf hillclimb candidates.  [hf:THUDM/glm-4-9b]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=151552,
+    rope_theta=10_000.0,
+    act="silu",
+    citation="hf:THUDM/glm-4-9b",
+)

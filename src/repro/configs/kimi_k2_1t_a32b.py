@@ -1,0 +1,26 @@
+"""Kimi K2 (1T total / ~32B active) — MoE, 384 routed experts top-8 + 1 shared,
+GQA kv=8 per the assignment table, 1 leading dense layer.
+[arXiv:2501.kimi2 (paper-table); unverified]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=18432,              # dense-layer hidden (DeepSeek-style)
+    moe_d_ff=2048,           # per-expert hidden (assignment: d_ff=2048)
+    vocab_size=163840,
+    n_experts=384,
+    n_shared_experts=1,
+    top_k=8,
+    n_dense_layers=1,
+    rope_theta=50_000.0,
+    act="silu",
+    param_dtype="bfloat16",   # 0.7-1T params: f32 master does not fit 512x16GB
+    citation="arXiv:2501.kimi2",
+)

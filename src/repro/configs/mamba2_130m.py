@@ -1,0 +1,24 @@
+"""Mamba2-130M — attention-free SSD (state-space duality).  The SSD chunk
+length is literally a tile size in the paper's search space (DESIGN.md §5).
+Sub-quadratic → runs the long_500k cell.  [arXiv:2405.21060]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,               # attention-free
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,          # d_inner=1536 → 24 ssm heads
+    ssm_ngroups=1,
+    conv_kernel=4,
+    ssd_chunk=256,
+    citation="arXiv:2405.21060",
+)

@@ -1,0 +1,21 @@
+"""Phi-3-vision-4.2B — phi3-mini backbone + CLIP frontend STUB per the
+assignment (``input_specs()`` provides precomputed patch embeddings prepended
+to the token sequence).  [hf:microsoft/Phi-3-vision-128k-instruct]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    num_patches=576,         # CLIP-L/14 @336px stub patch embeddings
+    rope_theta=10_000.0,
+    act="silu",
+    citation="hf:microsoft/Phi-3-vision-128k-instruct",
+)

@@ -1,0 +1,20 @@
+"""Qwen1.5-110B — dense decoder, GQA kv=8, QKV bias.  The largest dense
+assignment; primary tensor-parallel scaling subject.  [hf:Qwen/Qwen1.5-110B]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=49152,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    act="silu",
+    citation="hf:Qwen/Qwen1.5-110B",
+)

@@ -1,0 +1,22 @@
+"""RecurrentGemma-2B (Griffin) — RG-LRU recurrent blocks + local attention,
+pattern (rec, rec, attn), MQA kv=1, window 2048.  Sub-quadratic → runs the
+long_500k cell.  [arXiv:2402.19427]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    block_pattern=("rec", "rec", "attn"),
+    lru_width=2560,
+    window=2048,
+    act="gelu_gated",        # GeGLU
+    citation="arXiv:2402.19427",
+)

@@ -1,0 +1,23 @@
+"""Whisper-base — encoder-decoder; the conv frontend is a STUB per the
+assignment (``input_specs()`` provides precomputed 1500-frame embeddings).
+Decoder positions are sized to the requested shape cell.  [arXiv:2212.04356]"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,              # decoder layers
+    enc_layers=6,
+    enc_seq=1500,            # precomputed frame embeddings (stub frontend)
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    act="gelu",              # non-gated GELU MLP, LayerNorm w/ bias
+    qkv_bias=True,
+    rope_theta=0.0,          # absolute sinusoidal positions, no rope
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,49 @@
+"""Core library: the paper's tree-structured loop-transformation search space.
+
+Public API::
+
+    from repro.core import (
+        GEMM, SYR2K, COVARIANCE,          # the paper's PolyBench workloads
+        SearchSpace, Configuration,        # §III search space
+        Tile, Interchange, Parallelize,    # §IV-B transformations
+        Autotuner,                         # §IV-C greedy driver
+        CostModelBackend, WallclockBackend, PallasBackend,
+        STRATEGIES,                        # greedy / mcts / beam / random
+    )
+"""
+
+from .autotuner import Autotuner, Experiment, TuningLog
+from .costmodel import TPU_V5E, XEON_8180M, Machine, estimate_time
+from .legality import IllegalTransform, check_legal, is_legal
+from .loopnest import Access, Loop, LoopNest, make_nest
+from .measure import (
+    Backend,
+    CostModelBackend,
+    PallasBackend,
+    Result,
+    WallclockBackend,
+)
+from .searchspace import DEFAULT_TILE_SIZES, Configuration, SearchSpace
+from .strategies import STRATEGIES, run_beam, run_greedy, run_mcts, run_random
+from .transformations import (
+    Interchange,
+    Parallelize,
+    Tile,
+    TransformError,
+    Transformation,
+    Unroll,
+    Vectorize,
+)
+from .workloads import COVARIANCE, GEMM, PAPER_WORKLOADS, SYR2K, Workload, matmul_workload
+
+__all__ = [
+    "Access", "Autotuner", "Backend", "COVARIANCE", "Configuration",
+    "CostModelBackend", "DEFAULT_TILE_SIZES", "Experiment", "GEMM",
+    "IllegalTransform", "Interchange", "Loop", "LoopNest", "Machine",
+    "PAPER_WORKLOADS", "PallasBackend", "Parallelize", "Result", "SYR2K",
+    "SearchSpace", "STRATEGIES", "TPU_V5E", "Tile", "TransformError",
+    "Transformation", "TuningLog", "Unroll", "Vectorize", "WallclockBackend",
+    "Workload", "XEON_8180M", "check_legal", "estimate_time", "is_legal",
+    "make_nest", "matmul_workload", "run_beam", "run_greedy", "run_mcts",
+    "run_random",
+]

@@ -1,0 +1,158 @@
+"""The autotuning driver — ``mctree autotune`` (paper §IV-C).
+
+Experiment 0 is the baseline (no transformations).  The driver keeps a priority
+queue of successfully evaluated configurations keyed by execution time and
+always expands the fastest configuration whose children have not been explored
+yet — "an extreme form of Monte Carlo tree search with exploitation only ...
+an alternative description could be hill climbing with backtracking".
+
+Children are derived by the :class:`SearchSpace` (no a-priori pruning), each is
+evaluated (compile + legality + measure), failures are recorded as red nodes,
+successes enter the priority queue.  The space is conceptually infinite, so the
+run is bounded by an experiment/time budget instead of queue exhaustion.
+
+Exploration strategies beyond the paper's greedy one live in
+:mod:`repro.core.strategies` and reuse this experiment log format.
+"""
+
+from __future__ import annotations
+
+import heapq
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .measure import Backend, Result
+from .searchspace import Configuration, SearchSpace
+from .workloads import Workload
+
+
+@dataclass
+class Experiment:
+    number: int
+    config: Configuration
+    result: Result
+    parent: int | None = None
+
+    @property
+    def pragmas(self) -> str:
+        return self.config.pragmas()
+
+    def to_dict(self) -> dict:
+        return {
+            "number": self.number,
+            "status": self.result.status,
+            "time_s": self.result.time_s,
+            "note": self.result.note,
+            "parent": self.parent,
+            "pragmas": self.pragmas.splitlines(),
+        }
+
+
+@dataclass
+class TuningLog:
+    workload: str
+    backend: str
+    experiments: list[Experiment] = field(default_factory=list)
+
+    @property
+    def baseline(self) -> Experiment:
+        return self.experiments[0]
+
+    def best(self) -> Experiment:
+        ok = [e for e in self.experiments if e.result.ok]
+        return min(ok, key=lambda e: e.result.time_s)
+
+    def new_best_trace(self) -> list[tuple[int, float]]:
+        """(experiment number, best-so-far time) — the red line of Figs 6–11."""
+        out = []
+        best = float("inf")
+        for e in self.experiments:
+            if e.result.ok and e.result.time_s < best:
+                best = e.result.time_s
+                out.append((e.number, best))
+        return out
+
+    def counts(self) -> dict[str, int]:
+        c: dict[str, int] = {}
+        for e in self.experiments:
+            c[e.result.status] = c.get(e.result.status, 0) + 1
+        return c
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "workload": self.workload,
+                "backend": self.backend,
+                "experiments": [e.to_dict() for e in self.experiments],
+            },
+            indent=1,
+        )
+
+
+class Autotuner:
+    """Paper-faithful greedy driver (exploitation-only priority queue)."""
+
+    def __init__(
+        self,
+        workload: Workload,
+        space: SearchSpace,
+        backend: Backend,
+        max_experiments: int = 400,
+        max_seconds: float | None = None,
+        on_experiment: Callable[[Experiment], None] | None = None,
+    ):
+        self.workload = workload
+        self.space = space
+        self.backend = backend
+        self.max_experiments = max_experiments
+        self.max_seconds = max_seconds
+        self.on_experiment = on_experiment
+
+    def run(self) -> TuningLog:
+        log = TuningLog(workload=self.workload.name, backend=self.backend.name)
+        t_start = time.perf_counter()
+
+        def record(config: Configuration, parent: int | None) -> Experiment:
+            res = self.backend.evaluate(self.workload, config)
+            exp = Experiment(number=len(log.experiments), config=config,
+                             result=res, parent=parent)
+            log.experiments.append(exp)
+            if self.on_experiment:
+                self.on_experiment(exp)
+            return exp
+
+        # Experiment 0: the baseline configuration — executed too, "since it
+        # might be the fastest configuration" (§IV-C).
+        base = record(Configuration(), None)
+        heap: list[tuple[float, int]] = []
+        if base.result.ok:
+            heapq.heappush(heap, (base.result.time_s, base.number))
+
+        seen: set[tuple] = set()
+        while heap:
+            if len(log.experiments) >= self.max_experiments:
+                break
+            if (
+                self.max_seconds is not None
+                and time.perf_counter() - t_start > self.max_seconds
+            ):
+                break
+            _, num = heapq.heappop(heap)
+            parent = log.experiments[num]
+            for child in self.space.children(parent.config):
+                if len(log.experiments) >= self.max_experiments:
+                    break
+                if self.space.dedup:
+                    try:
+                        key = self.space.canonical_key(child)
+                    except Exception:   # noqa: BLE001 — broken structure
+                        key = ("path",) + tuple(t.key() for t in child.transformations)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                exp = record(child, parent.number)
+                if exp.result.ok:
+                    heapq.heappush(heap, (exp.result.time_s, exp.number))
+        return log

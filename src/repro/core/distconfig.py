@@ -1,0 +1,246 @@
+"""Distributed-configuration search: the paper's tree search space applied to
+the *distributed* schedule of a training/serving step (beyond-paper, §Perf).
+
+The mapping is exact (DESIGN.md §2):
+
+* the "loop nest" is the step's logical-axis → mesh-axis rule table plus the
+  scalar knobs (remat policy, microbatching, attention/score layout),
+* a *transformation* mutates one of them — re-mapping a logical axis is the
+  distributed ``parallelize_thread``, changing microbatching is a loop tiling
+  of the batch dimension, changing remat is a recompute/storage trade,
+* "compile and measure" is the AOT dry-run: lower + compile the step on the
+  production mesh and score it by the max of the three roofline terms
+  (compute / memory / collective), with HBM fit as the legality check,
+* the driver is the same exploitation-only priority queue (greedy) — and the
+  same local-minimum caveat applies, which is why the §Perf log also records
+  refuted hypotheses.
+
+Every evaluation is cached by configuration key; EXPERIMENTS.md §Perf is
+generated from the resulting experiment log.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import json
+import time
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable
+
+
+@dataclass(frozen=True)
+class DistConfig:
+    """One node of the distributed search tree."""
+
+    rule_overrides: tuple[tuple[str, Any], ...] = ()   # logical axis → mesh axes
+    remat: str = "full"                 # none | dots | full
+    microbatches: int = 1
+    scores_dtype: str = "compute"       # compute | f32 (attention scores)
+    moe_capacity: float = 1.25
+    flags: tuple[str, ...] = ()         # free-form feature toggles
+
+    def describe(self) -> str:
+        parts = [f"remat={self.remat}", f"mb={self.microbatches}"]
+        for k, v in self.rule_overrides:
+            parts.append(f"{k}→{v}")
+        if self.moe_capacity != 1.25:
+            parts.append(f"cap={self.moe_capacity}")
+        parts += list(self.flags)
+        return " ".join(parts)
+
+    def rules(self, base: dict) -> dict:
+        r = dict(base)
+        for k, v in self.rule_overrides:
+            r[k] = tuple(v) if isinstance(v, list) else v
+        return r
+
+    def key(self) -> tuple:
+        return dataclasses.astuple(self)
+
+
+@dataclass(frozen=True)
+class DistTransform:
+    """One edge of the tree: named mutation of a DistConfig."""
+
+    name: str
+    apply: Callable[[DistConfig], DistConfig] = None
+
+    def pragma(self) -> str:
+        return f"#pragma dist {self.name}"
+
+
+def derive_children(cfg: DistConfig, *, kind: str, moe: bool,
+                    multi_pod: bool, base_rules: dict | None = None
+                    ) -> list[tuple[str, DistConfig]]:
+    """Structural children, mirroring SearchSpace._derive.
+
+    Kind-aware: decode has no remat/microbatch/score-tiling levers (S=1);
+    prefill has no backward pass to remat or accumulate.  Mutations that
+    resolve to the cell's effective base rule are identity edges and are
+    skipped (they would waste compile budget, exactly like the paper's
+    duplicate DAG paths)."""
+    out: list[tuple[str, DistConfig]] = []
+    base_rules = base_rules or {}
+
+    def override(c, k, v):
+        kept = tuple((a, b) for a, b in c.rule_overrides if a != k)
+        return replace(c, rule_overrides=kept + ((k, v),))
+
+    def effective(axis):
+        d = dict(cfg.rule_overrides)
+        if axis in d:
+            return d[axis]
+        return base_rules.get(axis, "∅")
+
+    if kind == "train":
+        # remat policy (recompute↔memory trade) — only meaningful with a bwd
+        for r in ("none", "dots", "full"):
+            if r != cfg.remat:
+                out.append((f"remat({r})", replace(cfg, remat=r)))
+        for mb in (2, 4, 8, 1):
+            if mb != cfg.microbatches:
+                out.append((f"microbatch({mb})", replace(cfg, microbatches=mb)))
+    if kind in ("train", "prefill"):
+        # attention query tiling (the paper's Tile on the attention nest):
+        # bounds the O(S²) score working set
+        cur_chunk = next((f for f in cfg.flags
+                          if f.startswith("attn_chunk=")), None)
+        for bq in (2048, 1024, 0):
+            tag = f"attn_chunk={bq}" if bq else None
+            if tag != cur_chunk and not (bq == 0 and cur_chunk is None):
+                flags = tuple(f for f in cfg.flags
+                              if not f.startswith("attn_chunk"))
+                if tag:
+                    flags = flags + (tag,)
+                out.append((f"attn_chunk({bq or 'off'})",
+                            replace(cfg, flags=flags)))
+    # logical-axis re-mapping (the distributed parallelize/interchange)
+    axis_opts = {
+        "seq": (None, "model"),
+        "ff": ("model", None),
+        "heads": ("model", None),
+        "fsdp": (("pod", "data"), None),
+        "batch": (("pod", "data"), ("pod", "data", "model")),
+    }
+    if kind == "decode":
+        axis_opts = {
+            "kv_seq": ("model", None),
+            "kv_heads": ("model", None),
+            "fsdp": (("pod", "data"), None),
+        }
+    for axis, options in axis_opts.items():
+        cur = effective(axis)
+        for v in options:
+            if v != cur and not (v is None and cur is None):
+                out.append((f"map({axis}→{v})", override(cfg, axis, v)))
+    if moe:
+        # fp8 expert storage: halves FSDP-gather wire + resident bytes at
+        # serving time (DeepSeek-style inference quantisation)
+        if kind != "train" and "expert_dtype=float8_e4m3fn" not in cfg.flags:
+            out.append(("expert_fp8",
+                        replace(cfg, flags=cfg.flags
+                                + ("expert_dtype=float8_e4m3fn",))))
+        for cap in (1.0, 2.0, 1.25):
+            if cap != cfg.moe_capacity:
+                out.append((f"capacity({cap})", replace(cfg, moe_capacity=cap)))
+    return out
+
+
+@dataclass
+class DistExperiment:
+    number: int
+    parent: int | None
+    change: str
+    config: DistConfig
+    status: str
+    terms: dict | None = None          # compute_s/memory_s/collective_s/...
+    note: str = ""
+
+    @property
+    def fits(self) -> bool:
+        return self.status == "ok"
+
+    @property
+    def objective(self) -> float:
+        """max roofline term; configurations over the HBM budget carry a
+        proportional penalty (they stay expandable — the baseline of a big
+        cell may itself be over budget, and *fitting* is the first win)."""
+        if self.terms is None:
+            return float("inf")
+        t = max(self.terms["compute_s"], self.terms["memory_s"],
+                self.terms["collective_s"])
+        if self.status == "oom":
+            used = self.terms.get("argument_bytes", 0) + self.terms.get(
+                "temp_bytes", 0)
+            t *= 1.0 + used / 16e9
+        return t
+
+
+class DistAutotuner:
+    """Greedy priority-queue driver over DistConfigs (paper §IV-C shape),
+    with the measurement injected (the dry-run lowering)."""
+
+    def __init__(self, measure: Callable[[DistConfig], dict], *, kind: str,
+                 moe: bool, multi_pod: bool, budget: int = 20,
+                 hbm_limit: float = 16e9, base_rules: dict | None = None):
+        self.measure = measure
+        self.kind = kind
+        self.moe = moe
+        self.multi_pod = multi_pod
+        self.budget = budget
+        self.hbm_limit = hbm_limit
+        self.base_rules = base_rules or {}
+        self.log: list[DistExperiment] = []
+        self._seen: set[tuple] = set()
+
+    def _eval(self, change: str, cfg: DistConfig, parent: int | None
+              ) -> DistExperiment:
+        try:
+            terms = self.measure(cfg)
+            total_mem = terms.get("argument_bytes", 0) + terms.get(
+                "temp_bytes", 0)
+            status = "ok"
+            note = ""
+            if total_mem > self.hbm_limit:
+                status = "oom"
+                note = f"per-device bytes {total_mem/1e9:.1f}G > HBM"
+        except Exception as e:     # noqa: BLE001 — red node
+            terms, status, note = None, "compile_error", f"{type(e).__name__}: {e}"
+        exp = DistExperiment(number=len(self.log), parent=parent,
+                             change=change, config=cfg, status=status,
+                             terms=terms, note=note)
+        self.log.append(exp)
+        return exp
+
+    def run(self, root: DistConfig) -> list[DistExperiment]:
+        import heapq
+
+        base = self._eval("baseline", root, None)
+        heap: list[tuple[float, int]] = []
+        if base.status in ("ok", "oom"):
+            heapq.heappush(heap, (base.objective, base.number))
+        self._seen.add(root.key())
+        while heap and len(self.log) < self.budget:
+            _, num = heapq.heappop(heap)
+            parent = self.log[num]
+            for change, child in derive_children(
+                    parent.config, kind=self.kind, moe=self.moe,
+                    multi_pod=self.multi_pod, base_rules=self.base_rules):
+                if len(self.log) >= self.budget:
+                    break
+                if child.key() in self._seen:
+                    continue
+                self._seen.add(child.key())
+                exp = self._eval(change, child, parent.number)
+                if exp.status in ("ok", "oom"):
+                    heapq.heappush(heap, (exp.objective, exp.number))
+        return self.log
+
+    def best(self) -> DistExperiment:
+        ok = [e for e in self.log if e.status == "ok"]
+        if ok:
+            return min(ok, key=lambda e: e.objective)
+        return min((e for e in self.log if e.terms is not None),
+                   key=lambda e: e.objective)

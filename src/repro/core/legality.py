@@ -1,0 +1,112 @@
+"""Semantic legality — the Polly-analogue dependence analysis (paper §III/§IV-A).
+
+The paper delegates legality to the compiler: "to determine whether a
+transformation is semantically legal, the compiler has to apply a dependency
+analysis ... the compiler is much better suited for this analysis".  Configurations
+rejected here become the red nodes of Fig. 2 and explain the "large number of
+unsuccessful configurations" for syr2k (§VI-B).
+
+Model (sufficient for the paper's kernels and our GEMM-shaped integration points):
+
+* ``reduce`` accesses carry a dependence on every source loop that does *not*
+  index the written array (the accumulation loop).  Parallelizing such a loop is
+  illegal — Polly "does not consider the associativity or commutativity of the
+  addition" (§V), and neither do we, which both limits legal permutations and
+  avoids FP rounding differences.
+* Reordering keeps every dependence direction vector lexicographically positive:
+  a pure accumulation dependence (0,…,+,…,0) stays positive under any permutation,
+  so interchange of rectangular reduction nests is legal.
+* Triangular bound pairs ``(provider, dependent)`` (``for j <= i``): Polly can
+  tile/interchange non-rectangular nests (§V), but our model compiler — like any
+  conservative dependence check — refuses schedules that place a *point* loop of
+  the dependent var outside a *floor* loop of its provider, or that interchange
+  the pair without having tiled both (bound exchange requires loop skewing, which
+  the pragma set cannot express).  This conservativeness is what reproduces the
+  paper's red-node fraction on syr2k/covariance.
+"""
+
+from __future__ import annotations
+
+from .loopnest import LoopNest
+
+
+class IllegalTransform(Exception):
+    """Dependence analysis rejected the configuration (paper: compile fails with
+    ``-Werror=pass-failed`` → red node)."""
+
+
+def check_legal(nest: LoopNest) -> None:
+    """Raise :class:`IllegalTransform` if the transformed nest violates the
+    dependence model.  Called by the measurement backends before codegen —
+    i.e. at "compile" time, *not* at search-space derivation time (paper §IV-B:
+    no a-priori pruning)."""
+
+    red = set(nest.reduction_vars())
+
+    # 1. No parallelized loop may carry the accumulation dependence.
+    for l in nest.loops:
+        if l.parallel and l.origin in red:
+            raise IllegalTransform(
+                f"loop {l.name} (origin {l.origin}) carries a reduction "
+                f"dependence and cannot be thread-parallelized"
+            )
+
+    # 2. Triangular-bound rules.
+    order = [l.name for l in nest.loops]
+    for provider, dependent in nest.triangular:
+        prov = [l for l in nest.loops if l.origin == provider]
+        dep = [l for l in nest.loops if l.origin == dependent]
+        if not prov or not dep:
+            continue
+        # 2a. The outermost dependent-var loop must not precede the outermost
+        #     provider-var loop (bound exchange would need skewing).
+        if order.index(dep[0].name) < order.index(prov[0].name):
+            raise IllegalTransform(
+                f"triangular bound: loop of {dependent!r} ordered before its "
+                f"bound provider {provider!r} (needs loop skewing)"
+            )
+        # 2b. Unbalanced tiling across a triangular pair: a point loop of the
+        #     dependent var outside a floor loop of the provider makes the tile
+        #     bounds non-affine for our model compiler.
+        prov_floor_last = max(
+            (order.index(l.name) for l in prov if not l.is_point), default=-1
+        )
+        dep_point_first = min(
+            (order.index(l.name) for l in dep if l.is_point), default=len(order)
+        )
+        if dep_point_first < prov_floor_last:
+            raise IllegalTransform(
+                f"triangular bound: point loop of {dependent!r} hoisted above a "
+                f"floor loop of {provider!r}"
+            )
+        # 2c. Unbalanced tile sizes across the pair: a dependent-var tile wider
+        #     than the provider's tile straddles the diagonal in a way our
+        #     model compiler cannot bound affinely — it conservatively fails,
+        #     exactly like Polly's dependency check on syr2k/covariance
+        #     ("large number of unsuccessful configurations", paper §VI-B).
+        prov_pts = [l.trips for l in prov if l.is_point]
+        dep_pts = [l.trips for l in dep if l.is_point]
+        for ps, ds in zip(prov_pts, dep_pts):
+            if ds > ps:
+                raise IllegalTransform(
+                    f"triangular bound: tile of {dependent!r} ({ds}) wider "
+                    f"than tile of its bound provider {provider!r} ({ps})"
+                )
+        if dep_pts and not prov_pts:
+            raise IllegalTransform(
+                f"triangular bound: {dependent!r} tiled while its bound "
+                f"provider {provider!r} is not"
+            )
+
+    # 3. Mixed tiling depth inside one reuse chain: a var tiled more than twice
+    #    exceeds what the code generators support → structural compile failure
+    #    (cost model still accepts it; the Pallas/XLA backends re-check).
+    # (No dependence violation — handled by backends.)
+
+
+def is_legal(nest: LoopNest) -> bool:
+    try:
+        check_legal(nest)
+        return True
+    except IllegalTransform:
+        return False

@@ -1,0 +1,249 @@
+"""Loop-nest IR — the JAX-side analogue of Polly's ``-polly-output-loopnest`` JSON.
+
+The paper (Kruse/Finkel/Wu 2020, §IV-A) extracts the loop-nest structure of every
+polyhedral-representable region as a JSON tree whose nodes carry unique loop
+identifiers.  Transformations are expressed against those identifiers, and applying
+a transformation *replaces* the affected loop objects with fresh ones representing
+the post-transformation structure (§IV-B: "tiling n loops removes those objects and
+reinserts twice as many in their place").
+
+Here the same IR is built directly from a workload description (an einsum-like
+statement with affine accesses).  The IR is deliberately minimal but faithful:
+
+* every loop has a unique name (``i``, then ``i1``/``i2`` after tiling, etc. —
+  the paper's naming scheme),
+* a parallelized loop is marked and "not considered to be any more transformable",
+* triangular (non-rectangular) bounds are tracked as a dependency between loops,
+  because Polly supports tiling/interchanging them only under conditions the
+  legality checker models (§V: syr2k/covariance are non-rectangular).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Sequence
+
+
+@dataclass(frozen=True)
+class Loop:
+    """One loop of a perfect nest band.
+
+    ``origin`` is the name of the *source-level* loop this loop was derived from
+    (itself for literal loops).  Tiling ``i`` by 64 produces the floor loop
+    ``i1`` (trips = extent/64) and the point loop ``i2`` (trips = 64), both with
+    ``origin == "i"``.  The origin is what array accesses are expressed against:
+    an access ``A[i][k]`` touches a slice whose extent along the first dim is the
+    product of the trip counts of all loops with origin ``i`` that are inside the
+    reuse level — this is what the cost model and the Pallas code generator use.
+    """
+
+    name: str
+    origin: str
+    trips: int                      # trip count (tile size for point loops)
+    parallel: bool = False          # thread-parallelized (OpenMP analogue / mesh axis)
+    is_point: bool = False          # point loop of a tiling (iterates inside a tile)
+    span: int = 1                   # elements of the origin dim one step advances
+                                    # (floor loops: the tile size; enables exact
+                                    # codegen of stacked/multi-level tilings)
+    unroll: int = 1                 # unroll factor (beyond-paper transformation)
+    vectorize: bool = False         # map to VPU lanes (beyond-paper)
+
+    def pretty(self) -> str:
+        tags = []
+        if self.parallel:
+            tags.append("par")
+        if self.is_point:
+            tags.append("pt")
+        if self.unroll > 1:
+            tags.append(f"unroll{self.unroll}")
+        if self.vectorize:
+            tags.append("vec")
+        t = ",".join(tags)
+        return f"{self.name}[{self.trips}{';' + t if t else ''}]"
+
+
+@dataclass(frozen=True)
+class Access:
+    """An affine array access of the statement: ``array[vars[0]][vars[1]]...``.
+
+    ``kind`` is one of ``"read"`` | ``"write"`` | ``"reduce"``; ``reduce`` means a
+    read-modify-write accumulation (``C[i][j] += ...``) whose carried dependence
+    lives on every loop *not* indexing the array.
+    """
+
+    array: str
+    vars: tuple[str, ...]           # source-level loop names, one per array dim
+    kind: str = "read"
+    elem_bytes: int = 8             # PolyBench EXTRALARGE uses double
+
+
+@dataclass(frozen=True)
+class LoopNest:
+    """A perfect loop nest band + its innermost statement.
+
+    ``loops`` is ordered outermost→innermost.  ``extents`` maps source-level loop
+    names to their full trip counts.  ``triangular`` lists ``(provider, dependent)``
+    pairs where the dependent loop's bound is a function of the provider
+    (``for j <= i`` → ``("i", "j")``).
+    """
+
+    name: str
+    loops: tuple[Loop, ...]
+    accesses: tuple[Access, ...]
+    extents: dict[str, int] = field(default_factory=dict)
+    triangular: tuple[tuple[str, str], ...] = ()
+    flops_per_point: int = 2        # flops executed per innermost iteration
+    _fresh: int = 0                 # counter for unique loop names
+
+    # -- structure queries ---------------------------------------------------
+
+    def loop(self, name: str) -> Loop:
+        for l in self.loops:
+            if l.name == name:
+                return l
+        raise KeyError(f"no loop named {name!r} in nest {self.name}")
+
+    def index_of(self, name: str) -> int:
+        for k, l in enumerate(self.loops):
+            if l.name == name:
+                return k
+        raise KeyError(name)
+
+    def bands(self) -> list[tuple[Loop, ...]]:
+        """Maximal runs of transformable (non-parallelized) loops.
+
+        The paper: "an already parallelized loop is not considered to be any more
+        transformable" — it splits the perfect band for the purposes of deriving
+        further tilings/interchanges.
+        """
+        out: list[tuple[Loop, ...]] = []
+        run: list[Loop] = []
+        for l in self.loops:
+            if l.parallel:
+                if run:
+                    out.append(tuple(run))
+                    run = []
+            else:
+                run.append(l)
+        if run:
+            out.append(tuple(run))
+        return out
+
+    def source_vars(self) -> tuple[str, ...]:
+        seen: dict[str, None] = {}
+        for a in self.accesses:
+            for v in a.vars:
+                seen.setdefault(v)
+        return tuple(seen)
+
+    def reduction_vars(self) -> tuple[str, ...]:
+        """Source loops that carry an accumulation dependence.
+
+        A loop carries the reduction iff some ``reduce`` access does *not* index
+        by it (distinct iterations hit the same element).
+        """
+        red: dict[str, None] = {}
+        srcs = {l.origin for l in self.loops} | set(self.extents)
+        for a in self.accesses:
+            if a.kind == "reduce":
+                for v in srcs:
+                    if v not in a.vars:
+                        red.setdefault(v)
+        return tuple(red)
+
+    def total_flops(self) -> int:
+        n = 1
+        for v, e in self.extents.items():
+            n *= e
+        # triangular nests execute ~half the iteration space per triangular pair
+        for _ in self.triangular:
+            n //= 2
+        return n * self.flops_per_point
+
+    def fresh_name(self, base: str) -> tuple[str, "LoopNest"]:
+        nm = f"{base}_{self._fresh}" if any(l.name == base for l in self.loops) else base
+        nest = replace(self, _fresh=self._fresh + 1)
+        return nm, nest
+
+    # -- structural edits (used by transformations.py) ------------------------
+
+    def with_loops(self, loops: Sequence[Loop]) -> "LoopNest":
+        return replace(self, loops=tuple(loops))
+
+    def structure_key(self) -> tuple:
+        """Canonical key of the *resulting* structure — used for DAG dedup
+        (paper §VIII future work: merge equal configurations reached through
+        different paths)."""
+        return tuple(
+            (l.origin, l.trips, l.parallel, l.is_point, l.span, l.unroll,
+             l.vectorize)
+            for l in self.loops
+        )
+
+    def pretty(self) -> str:
+        return f"{self.name}: " + " / ".join(l.pretty() for l in self.loops)
+
+
+def make_nest(
+    name: str,
+    loop_order: Sequence[str],
+    extents: dict[str, int],
+    accesses: Sequence[Access],
+    triangular: Sequence[tuple[str, str]] = (),
+    flops_per_point: int = 2,
+) -> LoopNest:
+    loops = tuple(
+        Loop(name=v, origin=v, trips=extents[v]) for v in loop_order
+    )
+    return LoopNest(
+        name=name,
+        loops=loops,
+        accesses=tuple(accesses),
+        extents=dict(extents),
+        triangular=tuple(triangular),
+        flops_per_point=flops_per_point,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Schedule extraction: map the transformed loop structure back to per-source-dim
+# tiling chains + band order — what codegen and the cost model consume.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Flattened view of a transformed nest.
+
+    * ``order``: loop names outermost→innermost (post-transformation).
+    * ``tiles``: source var → chain of trip counts, outermost level first,
+      e.g. ``i`` tiled by 64 then 8 → ``(extent/64, 64//8?, ...)`` — stored as the
+      actual trip counts of each derived loop.
+    * ``parallel``: names of parallelized loops.
+    """
+
+    nest: LoopNest
+
+    @property
+    def order(self) -> tuple[str, ...]:
+        return tuple(l.name for l in self.nest.loops)
+
+    def loops(self) -> tuple[Loop, ...]:
+        return self.nest.loops
+
+    def tile_sizes(self, var: str) -> tuple[int, ...]:
+        """Tile-size chain for a source var: trip counts of its point loops,
+        outer→inner.  Empty if the var was never tiled."""
+        return tuple(
+            l.trips for l in self.nest.loops if l.origin == var and l.is_point
+        )
+
+    def grid_loops(self) -> tuple[Loop, ...]:
+        """Loops that become the Pallas grid (non-point loops of tiled vars and
+        any untiled loops that carry tiling elsewhere)."""
+        return tuple(l for l in self.nest.loops if not l.is_point)
+
+    def point_loops(self) -> tuple[Loop, ...]:
+        return tuple(l for l in self.nest.loops if l.is_point)

@@ -1,0 +1,197 @@
+"""Measurement backends — the paper's "compile it, run it, time it" stage (§IV-C).
+
+Every backend maps (workload, configuration) → :class:`Result`:
+
+* legality is checked first (Polly dependence analysis analogue) — failures are
+  ``illegal`` red nodes;
+* structural codegen failures are ``compile_error`` red nodes (Clang
+  ``-Werror=pass-failed`` analogue);
+* runtime/timeout failures are ``exec_error`` red nodes;
+* success carries the measured/predicted time in seconds.
+
+Backends:
+
+* :class:`CostModelBackend` — deterministic analytic model (Xeon-8180M for
+  paper fidelity, TPU-v5e for kernel tuning).  Used for the paper-reproduction
+  figures since this container has one CPU core.
+* :class:`WallclockBackend` — real execution of the XLA:CPU tiled codegen at a
+  reduced problem scale; cross-checks the model's tiling/interchange rankings.
+* :class:`PallasBackend` — builds the Pallas kernel (interpret=True), verifies
+  it against the jnp oracle, and reports the TPU cost-model time; additionally
+  enforces the VMEM capacity limit (tiles too large → compile_error, exactly
+  what Mosaic would say on hardware).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from . import codegen
+from .costmodel import Machine, TPU_V5E, XEON_8180M, estimate_time
+from .legality import IllegalTransform, check_legal
+from .loopnest import LoopNest
+from .searchspace import Configuration
+from .transformations import TransformError
+from .workloads import Workload
+
+
+@dataclass(frozen=True)
+class Result:
+    status: str                 # ok | illegal | compile_error | exec_error
+    time_s: float | None = None
+    note: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+class Backend:
+    name = "abstract"
+
+    def evaluate(self, workload: Workload, config: Configuration) -> Result:
+        try:
+            nest = config.apply(workload.nest())
+        except TransformError as e:
+            return Result("compile_error", note=str(e))
+        try:
+            check_legal(nest)
+        except IllegalTransform as e:
+            return Result("illegal", note=str(e))
+        return self._measure(workload, nest)
+
+    def _measure(self, workload: Workload, nest: LoopNest) -> Result:
+        raise NotImplementedError
+
+
+@dataclass
+class CostModelBackend(Backend):
+    machine: Machine = XEON_8180M
+    noise: float = 0.0          # multiplicative lognormal sigma (paper: "noise
+                                # in the measurement"); 0 → deterministic
+    seed: int = 0
+    name: str = "costmodel"
+    _rng: np.random.Generator | None = None
+
+    def _measure(self, workload: Workload, nest: LoopNest) -> Result:
+        t = estimate_time(nest, self.machine)
+        if self.noise > 0:
+            if self._rng is None:
+                self._rng = np.random.default_rng(self.seed)
+            t *= float(np.exp(self._rng.normal(0.0, self.noise)))
+        return Result("ok", time_s=t)
+
+
+@dataclass
+class WallclockBackend(Backend):
+    """Real XLA:CPU execution at ``scale`` of the PolyBench extents."""
+
+    scale: float = 0.25
+    reps: int = 3
+    timeout_s: float = 20.0
+    name: str = "wallclock"
+
+    def evaluate(self, workload: Workload, config: Configuration) -> Result:
+        w = workload.scaled(self.scale)
+        try:
+            nest = config.apply(w.nest())
+        except TransformError as e:
+            return Result("compile_error", note=str(e))
+        try:
+            check_legal(nest)
+        except IllegalTransform as e:
+            return Result("illegal", note=str(e))
+        return self._measure(w, nest)
+
+    def _measure(self, w: Workload, nest: LoopNest) -> Result:
+        try:
+            fn = codegen.build_xla(w, nest)
+        except codegen.CodegenError as e:
+            return Result("compile_error", note=str(e))
+        args = {k: np.asarray(v) for k, v in w.make_args().items()}
+        try:
+            t0 = time.perf_counter()
+            out = fn(args)
+            out.block_until_ready()
+            first = time.perf_counter() - t0   # includes compile
+            if first > self.timeout_s:
+                return Result("exec_error", note=f"timeout ({first:.1f}s)")
+            times = []
+            for _ in range(self.reps):
+                t0 = time.perf_counter()
+                fn(args).block_until_ready()
+                times.append(time.perf_counter() - t0)
+            return Result("ok", time_s=float(min(times)))
+        except Exception as e:     # noqa: BLE001 — any XLA failure is a red node
+            return Result("exec_error", note=f"{type(e).__name__}: {e}")
+
+
+@dataclass
+class PallasBackend(Backend):
+    """Builds the Pallas kernel (interpret mode), checks correctness against
+    the jnp oracle at a reduced scale, rejects VMEM-overflowing tiles, and
+    scores with the TPU cost model."""
+
+    machine: Machine = TPU_V5E
+    scale: float = 0.05
+    vmem_limit: int = 128 * 1024 * 1024
+    verify: bool = True
+    name: str = "pallas"
+
+    def _measure(self, workload: Workload, nest: LoopNest) -> Result:
+        try:
+            if codegen.vmem_bytes(workload, nest) > self.vmem_limit:
+                return Result(
+                    "compile_error",
+                    note=f"BlockSpec tiles exceed VMEM "
+                    f"({codegen.vmem_bytes(workload, nest)} B)",
+                )
+        except codegen.CodegenError as e:
+            return Result("compile_error", note=str(e))
+        if self.verify:
+            w = workload.scaled(self.scale)
+            try:
+                nest_small = _retile_to(nest, w)
+                fn = codegen.build_pallas(w, nest_small, interpret=True)
+                args = w.make_args()
+                got = np.asarray(fn(args))
+                want = np.asarray(w.reference(args))
+                if not np.allclose(got, want, rtol=2e-4, atol=2e-4):
+                    return Result(
+                        "exec_error",
+                        note=f"pallas/oracle mismatch: max err "
+                        f"{float(np.abs(got - want).max()):.3e}",
+                    )
+            except codegen.CodegenError as e:
+                return Result("compile_error", note=str(e))
+            except Exception as e:  # noqa: BLE001
+                return Result("exec_error", note=f"{type(e).__name__}: {e}")
+        return Result("ok", time_s=estimate_time(nest, self.machine))
+
+
+def _retile_to(nest: LoopNest, small: Workload) -> LoopNest:
+    """Shrink a schedule's loop structure onto reduced extents so interpret-mode
+    verification stays fast: tile sizes are clamped to the reduced extents."""
+    from dataclasses import replace
+
+    ext = dict(small.extents)
+    new_loops = []
+    per_var_seen: dict[str, int] = {}
+    for l in nest.loops:
+        e = ext.get(l.origin, l.trips)
+        if l.is_point:
+            trips = min(l.trips, max(4, e // 2))
+        else:
+            # floor trips: recompute from remaining extent
+            pts = [x.trips for x in nest.loops if x.origin == l.origin and x.is_point]
+            if pts:
+                tile = min(pts[0], max(4, e // 2))
+                trips = -(-e // tile)
+            else:
+                trips = e
+        new_loops.append(replace(l, trips=trips))
+    return replace(nest, loops=tuple(new_loops), extents=ext)

@@ -1,0 +1,195 @@
+"""Tree-structured search space of composable loop transformations (paper §III).
+
+The baseline nest is the root.  Children of a configuration are derived by
+appending one transformation that is *structurally* applicable to the loop
+structure after the parent's transformations:
+
+* **Tile** every contiguous sub-band of every transformable band, one
+  configuration per element of the Cartesian product of the preconfigured tile
+  sizes (paper §IV-B).  For an n-loop band and s sizes this yields
+  ``sum_{d=1..n} (n-d+1) * s^d`` children — 190 for n=3, s=5 (§V).
+* **Interchange** every non-identity permutation of every band (n! − 1 each).
+* **Parallelize** each not-yet-parallelized loop (one child per loop).
+* Beyond-paper (paper §VIII future work): **Unroll** (factor set) and
+  **Vectorize** (innermost loop), disabled by default so paper-validation counts
+  stay exact.
+
+The space is conceptually infinite (stacked tilings model multi-level caches);
+deduplication of configurations reachable via multiple paths (the DAG property,
+§III) is implemented via canonical structure keys — the paper lists this as
+future work, we enable it behind ``dedup=True``.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Iterator, Sequence
+
+from .loopnest import LoopNest
+from .transformations import (
+    Interchange,
+    Parallelize,
+    Tile,
+    Transformation,
+    TransformError,
+    Unroll,
+    Vectorize,
+    apply_all,
+)
+
+DEFAULT_TILE_SIZES: tuple[int, ...] = (4, 16, 64, 256, 1024)  # paper §V: powers of 4
+DEFAULT_UNROLL_FACTORS: tuple[int, ...] = (2, 4, 8)
+
+
+@dataclass(frozen=True)
+class Configuration:
+    """A node of the search tree: the sequence of transformations from the root."""
+
+    transformations: tuple[Transformation, ...] = ()
+
+    def child(self, t: Transformation) -> "Configuration":
+        return Configuration(self.transformations + (t,))
+
+    def pragmas(self) -> str:
+        return "\n".join(t.pragma() for t in self.transformations)
+
+    def apply(self, root: LoopNest) -> LoopNest:
+        return apply_all(root, self.transformations)
+
+    def __len__(self) -> int:
+        return len(self.transformations)
+
+
+@dataclass
+class SearchSpace:
+    """Derives children of a configuration (paper §III, §IV-B)."""
+
+    root: LoopNest
+    tile_sizes: tuple[int, ...] = DEFAULT_TILE_SIZES
+    enable_tile: bool = True
+    enable_interchange: bool = True
+    enable_parallelize: bool = True
+    enable_unroll: bool = False          # beyond-paper
+    enable_vectorize: bool = False       # beyond-paper
+    unroll_factors: tuple[int, ...] = DEFAULT_UNROLL_FACTORS
+    max_transformations: int | None = None   # budget cap (space is infinite)
+    dedup: bool = False                  # beyond-paper DAG merging (§VIII)
+    # Tractability bounds (paper §III: "Transformations that have parameters
+    # contribute significantly to the number of children").  A fully tiled
+    # 6-loop band would otherwise derive 24 405 tilings and 12!−1 interchanges.
+    # Both bounds are inactive at the paper's 3-loop roots, keeping the §V
+    # child counts exact (190/5/3).
+    max_tile_depth: int = 3              # dims tiled by one Tile step
+    max_perm_band: int = 6               # full n!−1 permutations up to this width
+    _derive_cache: dict = field(default_factory=dict, repr=False)
+
+    def structure(self, config: Configuration) -> LoopNest:
+        return config.apply(self.root)
+
+    # -- child derivation ----------------------------------------------------
+
+    def children(self, config: Configuration) -> list[Configuration]:
+        if (
+            self.max_transformations is not None
+            and len(config) >= self.max_transformations
+        ):
+            return []
+        try:
+            nest = self.structure(config)
+        except TransformError:
+            return []
+        # Derived transformations depend only on the resulting structure; many
+        # configurations share one (the DAG property, §III) — cache by key.
+        key = (nest.structure_key(), tuple(l.name for l in nest.loops))
+        ts = self._derive_cache.get(key)
+        if ts is None:
+            ts = tuple(self._derive(nest))
+            self._derive_cache[key] = ts
+        out = [config.child(t) for t in ts]
+        if self.dedup:
+            out = self._dedup(out)
+        return out
+
+    def _derive(self, nest: LoopNest) -> Iterator[Transformation]:
+        bands = nest.bands()
+        if self.enable_tile:
+            for band in bands:
+                names = [l.name for l in band]
+                n = len(names)
+                for depth in range(1, min(n, self.max_tile_depth) + 1):
+                    for start in range(0, n - depth + 1):
+                        sub = tuple(names[start : start + depth])
+                        for sizes in itertools.product(
+                            self.tile_sizes, repeat=depth
+                        ):
+                            yield Tile(loops=sub, sizes=sizes)
+        if self.enable_interchange:
+            for band in bands:
+                names = tuple(l.name for l in band)
+                n = len(names)
+                if n < 2:
+                    continue
+                if n <= self.max_perm_band:
+                    for perm in itertools.permutations(names):
+                        if perm != names:
+                            yield Interchange(loops=names, permutation=perm)
+                else:
+                    # wide band: adjacent transpositions + rotations (O(n))
+                    seen_perm: set[tuple[str, ...]] = set()
+                    for k in range(n - 1):
+                        p = list(names)
+                        p[k], p[k + 1] = p[k + 1], p[k]
+                        seen_perm.add(tuple(p))
+                    for k in range(1, n):
+                        seen_perm.add(names[k:] + names[:k])
+                    for perm in sorted(seen_perm):
+                        if perm != names:
+                            yield Interchange(loops=names, permutation=perm)
+        if self.enable_parallelize:
+            for l in nest.loops:
+                if not l.parallel:
+                    yield Parallelize(loop=l.name)
+        if self.enable_unroll:
+            for l in nest.loops:
+                if not l.parallel and l.unroll == 1:
+                    for f in self.unroll_factors:
+                        yield Unroll(loop=l.name, factor=f)
+        if self.enable_vectorize:
+            last = nest.loops[-1]
+            if not last.parallel and not last.vectorize:
+                yield Vectorize(loop=last.name)
+
+    # -- DAG dedup (beyond-paper) ---------------------------------------------
+
+    def _dedup(self, configs: list[Configuration]) -> list[Configuration]:
+        seen: set[tuple] = set()
+        out = []
+        for c in configs:
+            try:
+                key = self.canonical_key(c)
+            except TransformError:
+                out.append(c)   # structurally broken; keep for red-node marking
+                continue
+            if key not in seen:
+                seen.add(key)
+                out.append(c)
+        return out
+
+    def canonical_key(self, config: Configuration) -> tuple:
+        """Identity of the *resulting* schedule, independent of derivation path.
+
+        Two configurations are equivalent iff they produce the same loop
+        structure (origins, trip counts, point/parallel/unroll/vector flags, in
+        order) — e.g. ``parallelize(i); tile(j,k)`` ≡ ``tile(j,k); parallelize(i)``.
+        """
+        return self.structure(config).structure_key()
+
+    # -- counting (used by paper-validation tests) -----------------------------
+
+    def count_children_by_kind(self, config: Configuration) -> dict[str, int]:
+        nest = self.structure(config)
+        counts = {"tile": 0, "interchange": 0, "parallelize": 0, "unroll": 0, "vectorize": 0}
+        for t in self._derive(nest):
+            counts[type(t).__name__.lower()] += 1
+        return counts

@@ -1,0 +1,237 @@
+"""Search-space exploration strategies beyond the paper's greedy driver.
+
+The paper's §VIII motivates Monte Carlo tree search ("the origin of the name
+mctree") and cites ProTuner's MCTS results.  We implement:
+
+* :func:`run_greedy`   — the paper's exploitation-only priority queue (delegates
+  to :class:`repro.core.autotuner.Autotuner`);
+* :func:`run_mcts`     — UCT: selection by upper confidence bound over mean
+  reward, lazy expansion, evaluation-as-rollout, reward backpropagation.  This
+  escapes the "parallelize the outermost loop first" local minimum because a
+  tile-first subtree keeps receiving visits from the exploration term;
+* :func:`run_beam`     — beam search over tree levels (HalideTuner successor);
+* :func:`run_random`   — uniform random walks (baseline for the comparison).
+
+All strategies emit the same :class:`TuningLog` so the benchmark harness plots
+them together.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+import time
+from dataclasses import dataclass, field
+
+from .autotuner import Autotuner, Experiment, TuningLog
+from .measure import Backend
+from .searchspace import Configuration, SearchSpace
+from .workloads import Workload
+
+
+def run_greedy(
+    workload: Workload, space: SearchSpace, backend: Backend, budget: int = 400
+) -> TuningLog:
+    return Autotuner(workload, space, backend, max_experiments=budget).run()
+
+
+# ---------------------------------------------------------------------------
+# MCTS (UCT)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Node:
+    config: Configuration
+    parent: "_Node | None" = None
+    children: list["_Node"] = field(default_factory=list)
+    untried: list[Configuration] | None = None
+    visits: int = 0
+    value: float = 0.0          # sum of rewards
+    time_s: float | None = None
+    dead: bool = False          # invalid config (red node)
+    number: int = -1            # experiment number
+
+    def ucb(self, c: float) -> float:
+        if self.visits == 0:
+            return float("inf")
+        mean = self.value / self.visits
+        return mean + c * math.sqrt(math.log(self.parent.visits + 1) / self.visits)
+
+
+def run_mcts(
+    workload: Workload,
+    space: SearchSpace,
+    backend: Backend,
+    budget: int = 400,
+    c_explore: float = 0.7,
+    pw_c: float = 4.0,
+    pw_alpha: float = 0.6,
+    seed: int = 0,
+) -> TuningLog:
+    """UCT with progressive widening.
+
+    The branching factor at each node is in the hundreds (190 tilings alone for
+    a 3-loop band — paper §V), so naive UCT exhausts its budget broadening the
+    root.  Progressive widening caps the children considered at a node to
+    ``pw_c · visits^pw_alpha``, forcing depth — this is what lets the search
+    reach tile→parallelize compositions the greedy driver never sees.
+    """
+    rng = random.Random(seed)
+    log = TuningLog(workload=workload.name, backend=backend.name)
+    seen: set[tuple] = set()
+
+    def evaluate(config: Configuration, parent_num: int | None) -> Experiment:
+        res = backend.evaluate(workload, config)
+        exp = Experiment(number=len(log.experiments), config=config, result=res,
+                         parent=parent_num)
+        log.experiments.append(exp)
+        return exp
+
+    base = evaluate(Configuration(), None)
+    if not base.result.ok:
+        return log
+    t0 = base.result.time_s
+    root = _Node(config=Configuration(), time_s=t0, visits=1, value=1.0, number=0)
+
+    def reward(time_s: float | None) -> float:
+        if time_s is None:
+            return 0.0
+        return min(4.0, t0 / time_s)        # speedup vs baseline, capped
+
+    def ensure_untried(node: _Node) -> None:
+        if node.untried is None:
+            kids = space.children(node.config)
+            if space.dedup:
+                fresh = []
+                for k in kids:
+                    try:
+                        key = space.canonical_key(k)
+                    except Exception:  # noqa: BLE001
+                        key = ("path",) + tuple(t.key() for t in k.transformations)
+                    if key not in seen:
+                        seen.add(key)
+                        fresh.append(k)
+                kids = fresh
+            rng.shuffle(kids)
+            node.untried = kids
+
+    def may_widen(node: _Node) -> bool:
+        ensure_untried(node)
+        if not node.untried:
+            return False
+        limit = pw_c * (node.visits ** pw_alpha)
+        return len(node.children) < limit
+
+    while len(log.experiments) < budget:
+        # 1. selection: descend while widening is not indicated
+        node = root
+        while not node.dead:
+            if may_widen(node):
+                break
+            live = [ch for ch in node.children if not ch.dead]
+            if not live:
+                node.dead = True
+                break
+            node = max(live, key=lambda ch: ch.ucb(c_explore))
+        if root.dead:
+            break
+        if node.dead:
+            continue
+        # 2. expansion: evaluate one untried child (evaluation = rollout)
+        config = node.untried.pop()
+        exp = evaluate(config, node.number)
+        child = _Node(config=config, parent=node,
+                      time_s=exp.result.time_s if exp.result.ok else None,
+                      dead=not exp.result.ok, number=exp.number)
+        node.children.append(child)
+        # 3. backpropagation
+        r = reward(child.time_s)
+        n: _Node | None = child
+        while n is not None:
+            n.visits += 1
+            n.value += r
+            n = n.parent
+    return log
+
+
+# ---------------------------------------------------------------------------
+# Beam search
+# ---------------------------------------------------------------------------
+
+
+def run_beam(
+    workload: Workload,
+    space: SearchSpace,
+    backend: Backend,
+    budget: int = 400,
+    width: int = 4,
+) -> TuningLog:
+    log = TuningLog(workload=workload.name, backend=backend.name)
+
+    def evaluate(config: Configuration, parent_num: int | None) -> Experiment:
+        res = backend.evaluate(workload, config)
+        exp = Experiment(number=len(log.experiments), config=config, result=res,
+                         parent=parent_num)
+        log.experiments.append(exp)
+        return exp
+
+    base = evaluate(Configuration(), None)
+    frontier = [base] if base.result.ok else []
+    while frontier and len(log.experiments) < budget:
+        nxt: list[Experiment] = []
+        for parent in frontier:
+            for child in space.children(parent.config):
+                if len(log.experiments) >= budget:
+                    break
+                exp = evaluate(child, parent.number)
+                if exp.result.ok:
+                    nxt.append(exp)
+        nxt.sort(key=lambda e: e.result.time_s)
+        frontier = nxt[:width]
+    return log
+
+
+# ---------------------------------------------------------------------------
+# Random walks
+# ---------------------------------------------------------------------------
+
+
+def run_random(
+    workload: Workload,
+    space: SearchSpace,
+    backend: Backend,
+    budget: int = 400,
+    max_depth: int = 4,
+    seed: int = 0,
+) -> TuningLog:
+    rng = random.Random(seed)
+    log = TuningLog(workload=workload.name, backend=backend.name)
+
+    def evaluate(config: Configuration, parent_num: int | None) -> Experiment:
+        res = backend.evaluate(workload, config)
+        exp = Experiment(number=len(log.experiments), config=config, result=res,
+                         parent=parent_num)
+        log.experiments.append(exp)
+        return exp
+
+    evaluate(Configuration(), None)
+    while len(log.experiments) < budget:
+        config = Configuration()
+        parent_num = 0
+        depth = rng.randint(1, max_depth)
+        for _ in range(depth):
+            kids = space.children(config)
+            if not kids:
+                break
+            config = rng.choice(kids)
+        evaluate(config, parent_num)
+    return log
+
+
+STRATEGIES = {
+    "greedy": run_greedy,
+    "mcts": run_mcts,
+    "beam": run_beam,
+    "random": run_random,
+}

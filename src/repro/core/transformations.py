@@ -1,0 +1,207 @@
+"""Composable loop transformations (paper §III/§IV-B) and their pragma rendering.
+
+Each transformation knows how to (a) render itself in the paper's
+``#pragma clang loop`` syntax for logs/EXPERIMENTS.md, and (b) rewrite a
+:class:`LoopNest` into the post-transformation structure.  Structural
+applicability (what children a node has) lives here; *semantic* legality
+(dependence analysis) lives in :mod:`repro.core.legality` and is checked at
+"compile" time, mirroring the paper's reliance on Polly ("We did not implement
+any additional search pruning; instead we rely on Polly to reject any malformed
+transformation sequence").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, replace
+from typing import Sequence
+
+from .loopnest import Loop, LoopNest
+
+
+class TransformError(Exception):
+    """Structural failure applying a transformation (→ red node)."""
+
+
+@dataclass(frozen=True)
+class Transformation:
+    def pragma(self) -> str:
+        raise NotImplementedError
+
+    def apply(self, nest: LoopNest) -> LoopNest:
+        raise NotImplementedError
+
+    def key(self) -> tuple:
+        """Order-insensitive identity component for DAG dedup."""
+        return (type(self).__name__,) + dataclasses.astuple(self)
+
+
+@dataclass(frozen=True)
+class Tile(Transformation):
+    """``#pragma clang loop(i,j) tile sizes(64,128)``.
+
+    Tiling n loops of a perfect band replaces them with 2n loops: the floor
+    loops (grid) followed by the point loops (intra-tile), inserted in place of
+    the original contiguous sub-band.  On TPU the point band is the Pallas
+    ``BlockSpec`` block shape (the VMEM tile) and the floor loops join the grid.
+    """
+
+    loops: tuple[str, ...]
+    sizes: tuple[int, ...]
+
+    def pragma(self) -> str:
+        return (
+            f"#pragma clang loop({','.join(self.loops)}) "
+            f"tile sizes({','.join(map(str, self.sizes))})"
+        )
+
+    def apply(self, nest: LoopNest) -> LoopNest:
+        if len(self.loops) != len(self.sizes):
+            raise TransformError("tile: |loops| != |sizes|")
+        idx = [nest.index_of(n) for n in self.loops]
+        if idx != list(range(idx[0], idx[0] + len(idx))):
+            raise TransformError("tile: loops must form a contiguous sub-band")
+        band = [nest.loops[k] for k in idx]
+        if any(l.parallel for l in band):
+            raise TransformError("tile: cannot tile a parallelized loop")
+        floors: list[Loop] = []
+        points: list[Loop] = []
+        cur = nest
+        for l, sz in zip(band, self.sizes):
+            if sz >= l.trips:
+                # Polly would emit a pass-failed warning → -Werror → red node.
+                raise TransformError(
+                    f"tile: size {sz} >= trip count {l.trips} of loop {l.name}"
+                )
+            fname, cur = cur.fresh_name(l.name + "1")
+            pname, cur = cur.fresh_name(l.name + "2")
+            # ceil-div floor trips: the compiler adds remainder handling
+            # transparently (paper §III).  Spans track the element stride so
+            # stacked (multi-level) tilings lower exactly.
+            floors.append(
+                Loop(name=fname, origin=l.origin, trips=-(-l.trips // sz),
+                     span=l.span * sz)
+            )
+            points.append(
+                Loop(name=pname, origin=l.origin, trips=sz, is_point=True,
+                     span=l.span)
+            )
+        new = (
+            list(nest.loops[: idx[0]])
+            + floors
+            + points
+            + list(nest.loops[idx[-1] + 1 :])
+        )
+        return cur.with_loops(new)
+
+
+@dataclass(frozen=True)
+class Interchange(Transformation):
+    """``#pragma clang loop(i,j,k) interchange permutation(j,k,i)``."""
+
+    loops: tuple[str, ...]
+    permutation: tuple[str, ...]
+
+    def pragma(self) -> str:
+        return (
+            f"#pragma clang loop({','.join(self.loops)}) "
+            f"interchange permutation({','.join(self.permutation)})"
+        )
+
+    def apply(self, nest: LoopNest) -> LoopNest:
+        if sorted(self.loops) != sorted(self.permutation):
+            raise TransformError("interchange: permutation is not a permutation")
+        idx = [nest.index_of(n) for n in self.loops]
+        if idx != list(range(idx[0], idx[0] + len(idx))):
+            raise TransformError("interchange: loops must be contiguous")
+        if any(nest.loops[k].parallel for k in idx):
+            raise TransformError("interchange: loop already parallelized")
+        by_name = {nest.loops[k].name: nest.loops[k] for k in idx}
+        new = list(nest.loops)
+        for off, nm in enumerate(self.permutation):
+            new[idx[0] + off] = by_name[nm]
+        return nest.with_loops(new)
+
+
+@dataclass(frozen=True)
+class Parallelize(Transformation):
+    """``#pragma clang loop(i) parallelize_thread``.
+
+    CPU: OpenMP ``parallel for schedule(static)``.  TPU adaptation: the loop is
+    assigned to a mesh axis (shard_map) or a ``parallel`` grid dimension — see
+    DESIGN.md §2.  A parallelized loop is not further transformable (paper
+    §IV-B), which is what traps the greedy search in the local minimum (§VI-A).
+    """
+
+    loop: str
+
+    def pragma(self) -> str:
+        return f"#pragma clang loop({self.loop}) parallelize_thread"
+
+    def apply(self, nest: LoopNest) -> LoopNest:
+        k = nest.index_of(self.loop)
+        l = nest.loops[k]
+        if l.parallel:
+            raise TransformError("parallelize: already parallel")
+        new = list(nest.loops)
+        new[k] = replace(l, parallel=True)
+        return nest.with_loops(new)
+
+
+@dataclass(frozen=True)
+class Unroll(Transformation):
+    """``#pragma clang loop(i) unroll factor(4)`` — beyond-paper (§VIII lists it
+    as future work).  Equivalent to tiling by the factor + full unroll of the
+    point loop (§III notes this shortcut explicitly)."""
+
+    loop: str
+    factor: int
+
+    def pragma(self) -> str:
+        return f"#pragma clang loop({self.loop}) unroll factor({self.factor})"
+
+    def apply(self, nest: LoopNest) -> LoopNest:
+        k = nest.index_of(self.loop)
+        l = nest.loops[k]
+        if l.parallel:
+            raise TransformError("unroll: loop is parallelized")
+        if l.unroll > 1:
+            raise TransformError("unroll: already unrolled")
+        if self.factor >= l.trips:
+            raise TransformError("unroll: factor >= trip count")
+        new = list(nest.loops)
+        new[k] = replace(l, unroll=self.factor)
+        return nest.with_loops(new)
+
+
+@dataclass(frozen=True)
+class Vectorize(Transformation):
+    """``#pragma clang loop(i) vectorize`` — beyond-paper.  TPU: bind the loop
+    to the VPU lane dimension (8×128); CPU: SIMD."""
+
+    loop: str
+
+    def pragma(self) -> str:
+        return f"#pragma clang loop({self.loop}) vectorize"
+
+    def apply(self, nest: LoopNest) -> LoopNest:
+        k = nest.index_of(self.loop)
+        l = nest.loops[k]
+        if l.parallel or l.vectorize:
+            raise TransformError("vectorize: loop parallelized or already vectorized")
+        if k != len(nest.loops) - 1:
+            raise TransformError("vectorize: only the innermost loop")
+        new = list(nest.loops)
+        new[k] = replace(l, vectorize=True)
+        return nest.with_loops(new)
+
+
+def apply_all(nest: LoopNest, transformations: Sequence[Transformation]) -> LoopNest:
+    for t in transformations:
+        nest = t.apply(nest)
+    return nest
+
+
+def render_pragmas(transformations: Sequence[Transformation]) -> str:
+    return "\n".join(t.pragma() for t in transformations)

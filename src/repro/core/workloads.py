@@ -1,0 +1,183 @@
+"""Workload definitions — the paper's PolyBench kernels (§V) plus a generic
+einsum-contraction builder used to plug framework hot-spots (attention score
+GEMMs, MoE expert GEMMs, SSD chunk GEMMs) into the same search space.
+
+A workload is an einsum-like statement over a perfect loop nest:
+
+    out[out_vars]  (+)=  Σ_terms  Π_j  term_array_j[access_vars_j]
+
+which covers gemm (C[i,j] += A[i,k]·B[k,j]), syr2k (two product terms,
+triangular), covariance (data·dataᵀ, triangular) and the GEMM-shaped cores of
+the assigned architectures.  PolyBench EXTRALARGE sizes are used for the
+paper-fidelity cost-model experiments; reduced sizes for real wall-clock runs
+on this container.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .loopnest import Access, LoopNest, make_nest
+
+
+@dataclass(frozen=True)
+class Term:
+    """One product term: indices into the read-access list."""
+
+    accesses: tuple[tuple[str, tuple[str, ...]], ...]   # (array, vars) pairs
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    loop_order: tuple[str, ...]
+    extents: dict[str, int]
+    out_array: str
+    out_vars: tuple[str, ...]
+    terms: tuple[Term, ...]
+    triangular: tuple[tuple[str, str], ...] = ()
+    elem_bytes: int = 8                     # PolyBench uses double
+    flops_per_point: int = 2
+    tri_mode: str = ""                      # "lower" | "upper" | ""
+
+    # -- loop-nest IR ----------------------------------------------------------
+
+    def nest(self) -> LoopNest:
+        accesses = [
+            Access(self.out_array, self.out_vars, kind="reduce", elem_bytes=self.elem_bytes)
+        ]
+        seen = {(self.out_array, self.out_vars)}
+        for t in self.terms:
+            for arr, vs in t.accesses:
+                if (arr, vs) not in seen:
+                    seen.add((arr, vs))
+                    accesses.append(Access(arr, vs, kind="read", elem_bytes=self.elem_bytes))
+        return make_nest(
+            self.name,
+            self.loop_order,
+            self.extents,
+            accesses,
+            triangular=self.triangular,
+            flops_per_point=self.flops_per_point,
+        )
+
+    # -- concrete arrays -------------------------------------------------------
+
+    def input_arrays(self) -> dict[str, tuple[str, ...]]:
+        out: dict[str, tuple[str, ...]] = {}
+        for t in self.terms:
+            for arr, vs in t.accesses:
+                out.setdefault(arr, vs)
+        return out
+
+    def make_args(self, scale: float = 1.0, seed: int = 0) -> dict[str, np.ndarray]:
+        """Instantiate input arrays; ``scale`` shrinks every extent (wallclock
+        runs use scale<1 so an experiment takes ~0.1 s on this container)."""
+        rng = np.random.default_rng(seed)
+        ext = self.scaled_extents(scale)
+        args: dict[str, np.ndarray] = {}
+        for arr, vs in self.input_arrays().items():
+            shape = tuple(ext[v] for v in vs)
+            args[arr] = rng.standard_normal(shape, dtype=np.float64).astype(np.float32)
+        return args
+
+    def scaled_extents(self, scale: float) -> dict[str, int]:
+        return {v: max(8, int(e * scale)) for v, e in self.extents.items()}
+
+    def scaled(self, scale: float) -> "Workload":
+        from dataclasses import replace
+
+        return replace(self, extents=self.scaled_extents(scale))
+
+    # -- reference (pure jnp oracle) -------------------------------------------
+
+    def reference(self, args: dict) -> "np.ndarray":
+        import jax.numpy as jnp
+
+        ext = {v: None for v in self.loop_order}
+        letters = {v: chr(ord("a") + i) for i, v in enumerate(self.loop_order)}
+        out_sub = "".join(letters[v] for v in self.out_vars)
+        acc = None
+        for t in self.terms:
+            subs = ",".join("".join(letters[v] for v in vs) for _, vs in t.accesses)
+            ops = [args[arr] for arr, _ in t.accesses]
+            r = jnp.einsum(f"{subs}->{out_sub}", *ops)
+            acc = r if acc is None else acc + r
+        if self.tri_mode == "lower":
+            acc = jnp.tril(acc)
+        elif self.tri_mode == "upper":
+            acc = jnp.triu(acc)
+        return acc
+
+
+# ---------------------------------------------------------------------------
+# The paper's kernels, PolyBench 4.2.1 EXTRALARGE_DATASET (§V).
+# ---------------------------------------------------------------------------
+
+# gemm: C[i][j] += A[i][k] * B[k][j];  2000×2300, K=2600 (paper: "matrices of
+# sizes 2000x2600 and 2600x2300").
+GEMM = Workload(
+    name="gemm",
+    loop_order=("i", "j", "k"),
+    extents={"i": 2000, "j": 2300, "k": 2600},
+    out_array="C",
+    out_vars=("i", "j"),
+    terms=(Term(accesses=(("A", ("i", "k")), ("B", ("k", "j")))),),
+    flops_per_point=2,
+)
+
+# syr2k: C[i][j] += A[j][k]*B[i][k] + B[j][k]*A[i][k],  j <= i (lower
+# triangular), N=2600, M=3000 ("input matrices of size 2600x3000").
+SYR2K = Workload(
+    name="syr2k",
+    loop_order=("i", "j", "k"),
+    extents={"i": 2600, "j": 2600, "k": 3000},
+    out_array="C",
+    out_vars=("i", "j"),
+    terms=(
+        Term(accesses=(("A", ("j", "k")), ("B", ("i", "k")))),
+        Term(accesses=(("B", ("j", "k")), ("A", ("i", "k")))),
+    ),
+    triangular=(("i", "j"),),       # for j <= i
+    tri_mode="lower",
+    flops_per_point=4,
+)
+
+# covariance (deepest nest): cov[i][j] += data[k][i] * data[k][j],  j >= i
+# (upper triangular), data is 3000×2600.
+COVARIANCE = Workload(
+    name="covariance",
+    loop_order=("i", "j", "k"),
+    extents={"i": 2600, "j": 2600, "k": 3000},
+    out_array="cov",
+    out_vars=("i", "j"),
+    terms=(Term(accesses=(("data", ("k", "i")), ("data", ("k", "j")))),),
+    triangular=(("i", "j"),),       # for j >= i: i provides j's lower bound
+    tri_mode="upper",
+    flops_per_point=2,
+)
+
+PAPER_WORKLOADS: dict[str, Workload] = {
+    "gemm": GEMM,
+    "syr2k": SYR2K,
+    "covariance": COVARIANCE,
+}
+
+
+def matmul_workload(name: str, m: int, n: int, k: int, elem_bytes: int = 2) -> Workload:
+    """GEMM-shaped hot-spot of a framework layer (attention logits, FFN, MoE
+    expert GEMM, SSD chunk GEMM) as a tunable workload — this is how the
+    paper's technique plugs into the assigned architectures."""
+    return Workload(
+        name=name,
+        loop_order=("i", "j", "k"),
+        extents={"i": m, "j": n, "k": k},
+        out_array="O",
+        out_vars=("i", "j"),
+        terms=(Term(accesses=(("A", ("i", "k")), ("B", ("k", "j")))),),
+        elem_bytes=elem_bytes,
+        flops_per_point=2,
+    )

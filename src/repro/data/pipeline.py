@@ -1,0 +1,97 @@
+"""Deterministic synthetic data pipeline.
+
+Production posture without a corpus: every host derives its shard of each
+global batch purely from (seed, step, host) via counter-based hashing, so
+
+* any host can be restarted and regenerate exactly its shard (fault tolerance),
+* the global batch is identical regardless of host count (elastic re-sharding),
+* a background prefetch thread keeps the accelerator fed.
+
+The token stream is Zipf-distributed with injected n-gram structure so the
+model has something learnable (losses visibly fall during the e2e example).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+def _philox(seed: int, step: int, row: int) -> np.random.Generator:
+    # counter-based: independent stream per (seed, step, row)
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, step, row]))
+
+
+def global_batch_rows(cfg: DataConfig, step: int, rows: range) -> np.ndarray:
+    """Rows [rows) of the global batch at `step`: (len(rows), seq_len+1)."""
+    out = np.empty((len(rows), cfg.seq_len + 1), np.int32)
+    for i, r in enumerate(rows):
+        rng = _philox(cfg.seed, step, r)
+        # Zipf body clipped to vocab
+        toks = rng.zipf(cfg.zipf_a, cfg.seq_len + 1).astype(np.int64)
+        toks = (toks - 1) % cfg.vocab_size
+        # inject learnable bigram structure: even positions repeat a motif
+        motif = rng.integers(0, cfg.vocab_size, 8)
+        idx = np.arange(cfg.seq_len + 1)
+        mask = (idx % 7) < 3
+        toks[mask] = motif[idx[mask] % 8]
+        out[i] = toks.astype(np.int32)
+    return out
+
+
+def host_batch(cfg: DataConfig, step: int) -> np.ndarray:
+    """This host's contiguous shard of the global batch."""
+    per = cfg.global_batch // cfg.n_hosts
+    start = cfg.host_id * per
+    return global_batch_rows(cfg, step, range(start, start + per))
+
+
+class Prefetcher:
+    """Background thread producing host batches a few steps ahead."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0, depth: int = 4):
+        self.cfg = cfg
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = host_batch(self.cfg, step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def next(self) -> tuple[int, np.ndarray]:
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

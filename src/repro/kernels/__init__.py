@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel has explicit ``BlockSpec`` VMEM tiling whose block sizes are the
+paper's tile-size parameters (tuned by ``repro.core``), a jit'd wrapper in
+:mod:`repro.kernels.ops`, and a pure-jnp oracle in :mod:`repro.kernels.ref`.
+All kernels are validated in interpret mode on CPU; on a TPU backend the same
+calls lower to Mosaic.
+"""
+
+from .ops import covariance, flash_attention, matmul, ssd_scan, syr2k
+
+__all__ = ["covariance", "flash_attention", "matmul", "ssd_scan", "syr2k"]

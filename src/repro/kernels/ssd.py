@@ -1,0 +1,90 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+The SSD algorithm (Dao & Gu, arXiv:2405.21060) is itself a *tiling* of a linear
+recurrence: the chunk length is a tile size trading intra-chunk matmul work
+(MXU-friendly, quadratic in chunk) against inter-chunk sequential state passing
+— i.e. the paper's search space applies to the chunk length directly, which is
+why mamba2 is one of the §Perf hillclimb candidates.
+
+Kernel layout: grid = (batch·head, n_chunks) with the chunk dim sequential
+("arbitrary" semantics — it carries the (P, N) state in VMEM scratch).  Each
+step does three MXU contractions (CBᵀ scores, score·x, state update) on
+(chunk × N/P) tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref,
+                *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (chunk, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (chunk, 1)
+    a = a_ref[0, 0]                         # scalar decay rate (negative)
+    b = b_ref[0].astype(jnp.float32)        # (chunk, N)
+    c = c_ref[0].astype(jnp.float32)        # (chunk, N)
+
+    la = dt[:, 0] * a                       # (chunk,) log-decay
+    cum = jnp.cumsum(la)                    # inclusive
+    # intra-chunk lower-triangular decay kernel (masked before exp — the
+    # upper entries have positive exponents that overflow)
+    seg = cum[:, None] - cum[None, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    decay = jnp.exp(jnp.where(tri, seg, -1e30))
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32) * decay
+    y = jnp.dot(scores * dt[:, 0][None, :], x,
+                preferred_element_type=jnp.float32)            # (chunk, P)
+    # inter-chunk: incoming state contribution
+    h = h_ref[...]                                             # (N, P)
+    y += jnp.exp(cum)[:, None] * jnp.dot(c, h,
+                                         preferred_element_type=jnp.float32)
+    # state update: h' = exp(total)·h + Σ_s exp(total-cum_s)·dt_s·b_s⊗x_s
+    total = cum[-1]
+    w = jnp.exp(total - cum) * dt[:, 0]                        # (chunk,)
+    h_ref[...] = jnp.exp(total) * h + jnp.dot(
+        (b * w[:, None]).T, x, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(
+    x: jnp.ndarray,          # (BH, L, P)   batch·heads flattened
+    dt: jnp.ndarray,         # (BH, L, 1)
+    a: jnp.ndarray,          # (BH, 1, 1)   per-head decay rate
+    b: jnp.ndarray,          # (BH, L, N)   already head-grouped
+    c: jnp.ndarray,          # (BH, L, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, L, P = x.shape
+    N = b.shape[-1]
+    ch = min(chunk, L)
+    assert L % ch == 0
+    kern = functools.partial(_ssd_kernel, chunk=ch)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, L // ch),
+        in_specs=[
+            pl.BlockSpec((1, ch, P), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, ch, 1), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, 1, 1), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, ch, N), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, ch, N), lambda h, i: (h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ch, P), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)

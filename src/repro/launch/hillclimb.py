@@ -1,0 +1,102 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing: the paper's tree search applied to the distributed
+configuration of the three chosen cells (DESIGN.md §2, core/distconfig.py).
+
+Measurement = AOT dry-run roofline terms; objective = max(compute, memory,
+collective); legality = per-device HBM fit.  The experiment log (every
+hypothesis, confirmed or refuted) lands in benchmarks/results/hillclimb/.
+
+Usage:
+  python -m repro.launch.hillclimb --cell qwen110b_train --budget 12
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+from repro.core.distconfig import DistAutotuner, DistConfig
+from repro.launch.dryrun import lower_cell
+
+CELLS = {
+    "qwen110b_train": dict(arch="qwen1_5_110b", shape="train_4k",
+                           mesh="single", kind="train", moe=False),
+    "kimi_decode": dict(arch="kimi_k2_1t_a32b", shape="decode_32k",
+                        mesh="single", kind="decode", moe=True),
+    "deepseek_prefill": dict(arch="deepseek_v3_671b", shape="prefill_32k",
+                             mesh="single", kind="prefill", moe=True),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS), required=True)
+    ap.add_argument("--budget", type=int, default=12)
+    ap.add_argument("--out", type=str, default="benchmarks/results/hillclimb")
+    args = ap.parse_args(argv)
+    spec = CELLS[args.cell]
+
+    def measure(dist: DistConfig) -> dict:
+        t0 = time.time()
+        rec = lower_cell(spec["arch"], spec["shape"], spec["mesh"],
+                         verbose=False, dist=dist)
+        rec["eval_s"] = time.time() - t0
+        print(f"  eval [{dist.describe()}]: "
+              f"c={rec['compute_s']*1e3:.0f}ms m={rec['memory_s']*1e3:.0f}ms "
+              f"w={rec['collective_s']*1e3:.0f}ms ({rec['eval_s']:.0f}s)",
+              flush=True)
+        return rec
+
+    from repro.configs.base import get_config, shape_cells
+    from repro.launch.dryrun import cell_rules
+    from repro.launch.mesh import make_production_mesh
+    cfg0 = get_config(spec["arch"])
+    cell0 = shape_cells(cfg0)[spec["shape"]]
+    mesh0 = make_production_mesh(multi_pod=(spec["mesh"] == "multi"))
+    tuner = DistAutotuner(measure, kind=spec["kind"], moe=spec["moe"],
+                          multi_pod=(spec["mesh"] == "multi"),
+                          budget=args.budget,
+                          base_rules=cell_rules(cfg0, cell0, mesh0))
+    log = tuner.run(DistConfig())
+    best = tuner.best()
+    base = log[0]
+    payload = {
+        "cell": args.cell,
+        "spec": spec,
+        "experiments": [
+            {"number": e.number, "parent": e.parent, "change": e.change,
+             "config": e.config.describe(), "status": e.status,
+             "objective_s": (e.objective if e.status == "ok" else None),
+             "terms": ({k: e.terms[k] for k in
+                        ("compute_s", "memory_s", "collective_s",
+                         "roofline_fraction", "temp_bytes", "argument_bytes")}
+                       if e.terms else None),
+             "note": e.note}
+            for e in log],
+        "baseline_objective_s": base.objective,
+        "best_objective_s": best.objective,
+        "best_change_path": _path(log, best),
+        "improvement": base.objective / best.objective,
+    }
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / f"{args.cell}.json").write_text(json.dumps(payload, indent=1))
+    print(f"\n[{args.cell}] baseline={base.objective*1e3:.0f}ms "
+          f"best={best.objective*1e3:.0f}ms "
+          f"({payload['improvement']:.2f}x) via {payload['best_change_path']}")
+
+
+def _path(log, exp):
+    path = []
+    cur = exp
+    while cur is not None and cur.parent is not None:
+        path.append(cur.change)
+        cur = log[cur.parent]
+    return list(reversed(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Logical-axis sharding rules (MaxText-style), tunable by the distributed
+configuration search (repro.core.distconfig).
+
+Model code annotates activations with *logical* axes; the active rule table
+maps them to mesh axes.  The table is part of the distributed configuration
+the tree autotuner searches over — remapping a logical axis is the TPU-level
+analogue of the paper's ``parallelize_thread`` pragma (DESIGN.md §2).
+
+Rules are process-global and installed by the launcher (or a test fixture);
+when no rules are installed every ``constrain`` is a no-op, which is what CPU
+smoke tests want.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (str), tuple of mesh axes, or None (replicated)
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": "model",       # sequence-sharded KV cache (decode)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "qk": None,
+    "ff": "model",
+    "moe_ff": None,
+    "experts": "model",      # expert-parallel axis (all_to_all dispatch)
+    "fsdp": ("pod", "data"), # ZeRO-3: weight dim sharded over the data axes,
+                             # gathered transiently per layer (else the 100B+
+                             # configs cannot hold params+grads+opt in HBM)
+    "vocab": "model",
+    "layers": None,
+    "ssm_heads": "model",
+    "lru": "model",
+    "conv": None,
+}
+
+_STATE: dict[str, object] = {"mesh": None, "rules": None}
+
+
+def install(mesh: Mesh | None, rules: dict[str, object] | None = None) -> None:
+    _STATE["mesh"] = mesh
+    if mesh is None:
+        _STATE["rules"] = None
+        return
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    # drop mesh axes the mesh doesn't have (single-pod mesh has no "pod")
+    axes = set(mesh.axis_names)
+
+    def _filter(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in axes else None
+        vv = tuple(a for a in v if a in axes)
+        return vv if vv else None
+
+    _STATE["rules"] = {k: _filter(v) for k, v in rules.items()}
+
+
+def active() -> bool:
+    return _STATE["rules"] is not None
+
+
+def mesh() -> Mesh | None:
+    return _STATE["mesh"]
+
+
+def rules() -> dict[str, object] | None:
+    return _STATE["rules"]
+
+
+@contextlib.contextmanager
+def scope(mesh: Mesh | None, rules: dict[str, object] | None = None):
+    prev = dict(_STATE)
+    install(mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def spec(*logical: str | None) -> P:
+    """PartitionSpec for a rank-len(logical) tensor."""
+    r = _STATE["rules"] or {}
+    parts = []
+    used: set[str] = set()
+
+    def _dedup(v):
+        # a mesh axis may appear only once in a PartitionSpec
+        if v is None:
+            return None
+        if isinstance(v, str):
+            if v in used:
+                return None
+            used.add(v)
+            return v
+        vv = tuple(a for a in v if a not in used)
+        used.update(vv)
+        return vv if vv else None
+
+    for name in logical:
+        parts.append(_dedup(r.get(name)) if name else None)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint against the installed rules (no-op without)."""
+    if not active():
+        return x
+    m = _STATE["mesh"]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(m, spec(*logical)))
+
+
+def axis_size(logical: str) -> int:
+    """Mesh extent a logical axis is sharded over (1 when replicated)."""
+    if not active():
+        return 1
+    r = _STATE["rules"] or {}
+    v = r.get(logical)
+    if v is None:
+        return 1
+    m = _STATE["mesh"]
+    if isinstance(v, str):
+        return m.shape.get(v, 1)
+    n = 1
+    for a in v:
+        n *= m.shape.get(a, 1)
+    return n
+
+
+def named_sharding(*logical: str | None) -> NamedSharding | None:
+    if not active():
+        return None
+    return NamedSharding(_STATE["mesh"], spec(*logical))
+
+
+def named_sharding_for(shape: tuple[int, ...], *logical: str | None):
+    """Like :func:`named_sharding` but drops any axis whose mesh extent does
+    not divide the corresponding dim — explicit pjit argument shardings
+    require exact divisibility (constraints inside the graph tolerate padding,
+    arguments do not)."""
+    if not active():
+        return None
+    m = _STATE["mesh"]
+    base = spec(*logical)
+    parts = []
+    for dim, entry in zip(shape, tuple(base) + (None,) * (len(shape) - len(base))):
+        if entry is None:
+            parts.append(None)
+            continue
+        axes_ = (entry,) if isinstance(entry, str) else tuple(entry)
+        n = 1
+        for a in axes_:
+            n *= m.shape.get(a, 1)
+        parts.append(entry if (n and dim % n == 0) else None)
+    return NamedSharding(m, P(*parts))
+
+
+def tree_shardings(axes_tree):
+    """Map a pytree of logical-axes tuples to NamedShardings (or None)."""
+    if not active():
+        return None
+    return jax.tree.map(
+        lambda axes: named_sharding(*axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )

@@ -1,0 +1,4 @@
+from .adamw import OptimizerConfig, OptState, apply_updates, init_opt_state, lr_schedule
+
+__all__ = ["OptimizerConfig", "OptState", "apply_updates", "init_opt_state",
+           "lr_schedule"]

@@ -1,0 +1,136 @@
+"""Optimizers in pure JAX: AdamW (default) and Adafactor (factored second
+moment) for giant expert/embedding matrices.
+
+A per-leaf policy keeps trillion-parameter MoE states in budget: 3-D expert
+stacks (E, d_in, d_out) can be switched to Adafactor (no first moment, rank-1
+second moment), which is what makes kimi-k2 (1T params) fit 512 × 16 GB HBM —
+see DESIGN.md §6.  State dtype is configurable (bf16 moments for the MoE
+giants, f32 elsewhere).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moments_dtype: str = "float32"
+    factored_experts: bool = False   # Adafactor for (E, din, dout) leaves
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    import math
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(math.pi * prog))
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+def _is_factored(path, leaf) -> bool:
+    return leaf.ndim == 3 and any(
+        getattr(k, "key", None) == "experts" for k in path)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Pytree            # first moment (None-leaves where factored)
+    v: Pytree            # second moment (or (row, col) tuples where factored)
+
+
+def init_opt_state(cfg: OptimizerConfig, params: Pytree) -> OptState:
+    mdt = jnp.dtype(cfg.moments_dtype)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+
+    ms, vs = [], []
+    for path, leaf in flat:
+        if cfg.factored_experts and _is_factored(path, leaf):
+            ms.append(jnp.zeros((), mdt))            # placeholder (no m)
+            vs.append((jnp.zeros(leaf.shape[:-1], mdt),      # row stats
+                       jnp.zeros(leaf.shape[:-2] + leaf.shape[-1:], mdt)))
+        else:
+            ms.append(jnp.zeros(leaf.shape, mdt))
+            vs.append(jnp.zeros(leaf.shape, mdt))
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree_util.tree_unflatten(treedef, ms),
+                    v=jax.tree_util.tree_unflatten(treedef, vs))
+
+
+def _global_norm(grads: Pytree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(g.astype(jnp.float32) ** 2)
+        for g in jax.tree_util.tree_leaves(grads)))
+
+
+def apply_updates(cfg: OptimizerConfig, params: Pytree, grads: Pytree,
+                  state: OptState) -> tuple[Pytree, OptState, dict]:
+    """One optimizer step.  Returns (params, state, metrics)."""
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    b1, b2 = cfg.betas
+    corr1 = 1 - b1 ** step.astype(jnp.float32)
+    corr2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    pflat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    gleaves = jax.tree_util.tree_leaves(grads)
+    mleaves = jax.tree_util.tree_leaves(
+        state.m, is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    # v may contain tuples → flatten against params structure
+    vflat = jax.tree_util.tree_flatten(
+        state.v, is_leaf=lambda x: isinstance(x, (tuple, jnp.ndarray)))[0]
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(pflat, gleaves, mleaves, vflat):
+        gf = (g.astype(jnp.float32) * scale)
+        if cfg.factored_experts and _is_factored(path, p):
+            vr, vc = v
+            g2 = gf * gf + 1e-30
+            nvr = b2 * vr.astype(jnp.float32) + (1 - b2) * g2.mean(axis=-1)
+            nvc = b2 * vc.astype(jnp.float32) + (1 - b2) * g2.mean(axis=-2)
+            # rank-1 reconstruction of v̂
+            denom = nvr[..., :, None] * nvc[..., None, :] / jnp.maximum(
+                nvr.mean(axis=-1)[..., None, None], 1e-30)
+            upd = gf / (jnp.sqrt(denom / corr2) + cfg.eps)
+            new_m.append(m)          # unused placeholder
+            new_v.append((nvr.astype(mdt), nvc.astype(mdt)))
+        else:
+            nm = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            nv = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            upd = (nm / corr1) / (jnp.sqrt(nv / corr2) + cfg.eps)
+            new_m.append(nm.astype(mdt))
+            new_v.append(nv.astype(mdt))
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd + decay * pf)
+        new_p.append(pf.astype(p.dtype))
+
+    params = jax.tree_util.tree_unflatten(treedef, new_p)
+    m_tree = jax.tree_util.tree_unflatten(treedef, new_m)
+    v_tree = jax.tree_util.tree_unflatten(treedef, new_v)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return params, OptState(step=step, m=m_tree, v=v_tree), metrics

@@ -1,0 +1,256 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Per (arch × shape × mesh) the dry-run produces:
+
+  compute term    = HLO_FLOPs / (chips × 197 TFLOP/s)
+  memory term     = HLO_bytes / (chips × 819 GB/s)
+  collective term = wire_bytes / (chips × 50 GB/s ICI)
+
+Caveats handled here (verified empirically in this repo):
+
+* ``compiled.cost_analysis()`` reports **per-device** numbers and counts a
+  ``while`` (scan) body **once**, so totals are stitched from two lowerings:
+  the full step (memory analysis + non-layer cost) and a single layer with the
+  same shardings (per-layer cost), giving ``total = full + (L-1)·layer``.
+  Alternatively :func:`hlo_collectives` multiplies ops inside while-body
+  computations by the trip count.
+* collective bytes are not in cost_analysis: we parse the optimized HLO text,
+  sum operand sizes of every collective op, convert to wire bytes with the
+  standard algorithm factors (ring all-gather/reduce-scatter: (g−1)/g, ring
+  all-reduce: 2(g−1)/g, all-to-all: (g−1)/g², permute: 1), with the replica
+  group size g parsed per-op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e hardware constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s per link (conservative: 1 link per hop)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    operand_bytes: float
+    group_size: int
+    computation: str
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        if self.kind == "all-gather":
+            return self.operand_bytes * (g - 1)          # operand is the shard
+        if self.kind == "reduce-scatter":
+            return self.operand_bytes * (g - 1) / g
+        if self.kind == "all-reduce":
+            return 2 * self.operand_bytes * (g - 1) / g
+        if self.kind == "all-to-all":
+            return self.operand_bytes * (g - 1) / g
+        return self.operand_bytes                        # collective-permute
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """'bf16[8,128,1024]{...}' → bytes.  Tuples handled by caller."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0.0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return float(n * nbytes)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    # iota format: replica_groups=[32,16]<=[512] → group size = second dim
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    # explicit: replica_groups={{0,1,2,...},{...}}
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\{\}", line)
+    if m:
+        return total_devices
+    return total_devices
+
+
+def _parse_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name → its op lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*{\s*$",
+                     line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip().startswith("}"):
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _while_bodies(hlo: str) -> set[str]:
+    return set(re.findall(r"body=%?([\w\.\-]+)", hlo))
+
+
+def hlo_collectives(hlo: str, total_devices: int,
+                    while_trips: int = 1) -> tuple[float, list[CollectiveOp]]:
+    """Total per-device wire bytes of all collectives in the HLO text.
+
+    Ops inside while-loop bodies (and computations they call, approximated by
+    fusion inlining in optimized HLO) are multiplied by ``while_trips``.
+    """
+    comps = _parse_computations(hlo)
+    bodies = _while_bodies(hlo)
+    ops: list[CollectiveOp] = []
+    total = 0.0
+    for cname, lines in comps.items():
+        mult = while_trips if cname in bodies else 1
+        for line in lines:
+            ls = line.strip()
+            m = re.match(r"%?[\w\.\-]+ = (\([^=]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*) "
+                         r"([a-z\-]+)", ls)
+            if not m:
+                continue
+            shape_str, opname = m.groups()
+            kind = next((c for c in _COLLECTIVES if opname.startswith(c)), None)
+            if kind is None or opname.startswith("all-reduce-scatter"):
+                continue
+            # operand sizes: prefer result size for uniformity; for all-gather
+            # use the per-shard operand (= result / g)
+            if shape_str.startswith("("):
+                sizes = [_shape_bytes(s.strip())
+                         for s in shape_str[1:-1].split(",") if "[" in s]
+                # tuple shapes list dtype[dims] fragments — rough rejoin
+                sizes = [_shape_bytes(s) for s in re.findall(
+                    r"[a-z0-9]+\[[0-9,]*\]", shape_str)]
+                res_bytes = sum(sizes)
+            else:
+                res_bytes = _shape_bytes(shape_str)
+            g = _group_size(ls, total_devices)
+            if kind == "all-gather":
+                operand = res_bytes / max(g, 1)
+            else:
+                operand = res_bytes
+            op = CollectiveOp(kind=kind, operand_bytes=operand, group_size=g,
+                              computation=cname)
+            ops.append(op)
+            total += op.wire_bytes * mult
+    return total, ops
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device totals (stitched)
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    # memory analysis of the full step
+    argument_bytes: int
+    temp_bytes: int
+    output_bytes: int
+    model_flops_total: float        # 6·N·D (train) or 2·N·D (serve), global
+    notes: str = ""
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/dispatch waste."""
+        hlo_total = self.flops * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the step at peak: what MFU would be if
+        the step ran exactly at the max roofline term."""
+        ideal = self.model_flops_total / (self.chips * PEAK_FLOPS)
+        return ideal / self.step_time_s if self.step_time_s else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 step_time_s=self.step_time_s,
+                 useful_flops_fraction=self.useful_flops_fraction,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def stitch(full: dict, layer: dict | None, n_layers: int) -> dict:
+    """total = full + (L−1)·layer for per-device flops/bytes/wire_bytes.
+
+    ``full`` counted the scanned layer once; adding (L−1) more layer costs
+    yields the true per-step totals."""
+    if layer is None:
+        return dict(full)
+    out = dict(full)
+    for k in ("flops", "hbm_bytes", "wire_bytes"):
+        out[k] = full.get(k, 0.0) + (n_layers - 1) * layer.get(k, 0.0)
+    return out
+
+
+def cost_summary(compiled, total_devices: int, while_trips: int = 1) -> dict:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    wire, _ = hlo_collectives(hlo, total_devices, while_trips=while_trips)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "hbm_bytes": float(ca.get("bytes accessed", 0.0)),
+        "wire_bytes": wire,
+        "argument_bytes": ma.argument_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+    }

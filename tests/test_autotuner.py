@@ -1,0 +1,91 @@
+"""Autotuner driver + strategies: paper §IV-C behaviour."""
+
+import pytest
+
+from repro.core import (GEMM, SYR2K, Autotuner, Configuration,
+                        CostModelBackend, Parallelize, SearchSpace)
+from repro.core.strategies import run_beam, run_greedy, run_mcts, run_random
+
+
+@pytest.fixture(scope="module")
+def greedy_log():
+    space = SearchSpace(root=GEMM.nest())
+    return run_greedy(GEMM, space, CostModelBackend(), budget=250)
+
+
+class TestGreedy:
+    def test_experiment_zero_is_baseline(self, greedy_log):
+        assert greedy_log.baseline.number == 0
+        assert len(greedy_log.baseline.config) == 0
+        assert greedy_log.baseline.result.ok
+
+    def test_new_best_trace_monotone(self, greedy_log):
+        trace = greedy_log.new_best_trace()
+        times = [t for _, t in trace]
+        assert times == sorted(times, reverse=True)
+        assert trace[0][0] == 0
+
+    def test_red_nodes_recorded_not_pruned(self, greedy_log):
+        counts = greedy_log.counts()
+        assert counts.get("illegal", 0) >= 1          # parallelize(k)
+        assert counts.get("compile_error", 0) >= 1    # tile size ≥ extent
+
+    def test_greedy_stuck_in_parallelize_local_minimum(self, greedy_log):
+        """§VI-A: the best configuration's first transformation is
+        parallelize(outermost) — greedy can never reach tile→parallelize."""
+        best = greedy_log.best()
+        first = best.config.transformations[0]
+        assert isinstance(first, Parallelize)
+
+    def test_parents_recorded(self, greedy_log):
+        for e in greedy_log.experiments[1:]:
+            assert e.parent is not None
+            assert e.parent < e.number
+
+
+class TestStrategies:
+    def test_mcts_beats_or_matches_greedy(self):
+        space = SearchSpace(root=GEMM.nest())
+        be = CostModelBackend()
+        g = run_greedy(GEMM, space, be, budget=300).best().result.time_s
+        best_m = min(
+            run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be, budget=300,
+                     seed=s).best().result.time_s
+            for s in (0, 1))
+        assert best_m <= g * 1.05
+
+    def test_beam_and_random_run(self):
+        space = SearchSpace(root=GEMM.nest())
+        be = CostModelBackend()
+        b = run_beam(GEMM, space, be, budget=120, width=3)
+        r = run_random(GEMM, space, be, budget=120, seed=0)
+        assert b.best().result.ok and r.best().result.ok
+
+    def test_budget_respected(self):
+        space = SearchSpace(root=GEMM.nest())
+        log = run_greedy(GEMM, space, CostModelBackend(), budget=50)
+        assert len(log.experiments) <= 50
+
+
+class TestSyr2k:
+    def test_high_red_fraction(self):
+        """§VI-B: 'large number of unsuccessful configurations' for the
+        non-rectangular kernels — much higher than for rectangular gemm."""
+        def red_frac(w):
+            space = SearchSpace(root=w.nest())
+            log = run_greedy(w, space, CostModelBackend(), budget=250)
+            c = log.counts()
+            return (c.get("illegal", 0) + c.get("compile_error", 0)) / len(
+                log.experiments)
+        fr_syr2k = red_frac(SYR2K)
+        fr_gemm = red_frac(GEMM)
+        assert fr_syr2k > 0.15
+        assert fr_syr2k > 3 * fr_gemm
+
+
+def test_log_json_roundtrip(greedy_log):
+    import json
+    d = json.loads(greedy_log.to_json())
+    assert d["workload"] == "gemm"
+    assert len(d["experiments"]) == len(greedy_log.experiments)
+    assert d["experiments"][0]["number"] == 0

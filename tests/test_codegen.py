@@ -1,0 +1,119 @@
+"""Codegen correctness: XLA-tiled and Pallas backends vs the jnp oracle,
+swept over hypothesis-sampled schedules (the per-kernel allclose gate)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (COVARIANCE, GEMM, SYR2K, Configuration, Interchange,
+                        Tile, TransformError, is_legal)
+from repro.core import codegen
+
+WORKLOADS = {"gemm": GEMM, "syr2k": SYR2K, "covariance": COVARIANCE}
+
+
+def _check(w, cfg, backend):
+    ws = w.scaled(0.04)
+    nest = cfg.apply(ws.nest())
+    if not is_legal(nest):
+        pytest.skip("illegal schedule (red node)")
+    args = ws.make_args()
+    want = np.asarray(ws.reference(args))
+    if backend == "xla":
+        fn = codegen.build_xla(ws, nest)
+    else:
+        fn = codegen.build_pallas(ws, nest, interpret=True)
+    got = np.asarray(fn(args))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("wname", list(WORKLOADS))
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_baseline(wname, backend):
+    _check(WORKLOADS[wname], Configuration(), backend)
+
+
+@pytest.mark.parametrize("wname", list(WORKLOADS))
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_full_tile_plus_interchange(wname, backend):
+    cfg = (Configuration()
+           .child(Tile(loops=("i", "j", "k"), sizes=(32, 64, 16)))
+           .child(Interchange(loops=("i1", "j1", "k1"),
+                              permutation=("k1", "i1", "j1"))))
+    _check(WORKLOADS[wname], cfg, backend)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_partial_tile(backend):
+    cfg = Configuration().child(Tile(loops=("j", "k"), sizes=(64, 32)))
+    _check(GEMM, cfg, backend)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    wname=st.sampled_from(list(WORKLOADS)),
+    sizes=st.tuples(*[st.sampled_from([8, 16, 32, 64])] * 3),
+    perm=st.permutations(["i1", "j1", "k1"]),
+)
+def test_property_sweep_xla(wname, sizes, perm):
+    cfg = (Configuration()
+           .child(Tile(loops=("i", "j", "k"), sizes=sizes))
+           .child(Interchange(loops=("i1", "j1", "k1"),
+                              permutation=tuple(perm))))
+    _check(WORKLOADS[wname], cfg, "xla")
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    sizes=st.tuples(*[st.sampled_from([16, 32, 64])] * 3),
+    perm=st.permutations(["i1", "j1", "k1"]),
+)
+def test_property_sweep_pallas(sizes, perm):
+    cfg = (Configuration()
+           .child(Tile(loops=("i", "j", "k"), sizes=sizes))
+           .child(Interchange(loops=("i1", "j1", "k1"),
+                              permutation=tuple(perm))))
+    _check(GEMM, cfg, "pallas")
+
+
+def test_multilevel_tiling_exact_in_both_backends():
+    """Stacked tiling (the paper's missed multilevel goal) lowers exactly."""
+    cfg = (Configuration()
+           .child(Tile(loops=("i", "j", "k"), sizes=(64, 64, 64)))
+           .child(Tile(loops=("i2", "j2", "k2"), sizes=(16, 16, 16))))
+    ws = GEMM.scaled(0.04)
+    nest = cfg.apply(ws.nest())
+    args = ws.make_args()
+    want = np.asarray(ws.reference(args))
+    for build in (codegen.build_xla,
+                  lambda w, n: codegen.build_pallas(w, n, interpret=True)):
+        got = np.asarray(build(ws, nest)(args))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_tiling_a_floor_loop_is_red_node():
+    """Tiling a floor loop would need strided block windows → CodegenError."""
+    cfg = (Configuration()
+           .child(Tile(loops=("i", "j", "k"), sizes=(64, 64, 64)))
+           .child(Tile(loops=("i1",), sizes=(4,))))
+    ws = GEMM          # full extents: i1 has 32 trips, tiling it is structural
+    nest = cfg.apply(ws.nest())
+    with pytest.raises(codegen.CodegenError):
+        codegen.build_xla(ws, nest)
+    with pytest.raises(codegen.CodegenError):
+        codegen.build_pallas(ws, nest, interpret=True)
+
+
+def test_wallclock_grid_budget_guard():
+    cfg = Configuration().child(Tile(loops=("i", "j", "k"), sizes=(4, 4, 4)))
+    w = GEMM  # full extents: grid 500·575·650 ≫ budget
+    with pytest.raises(codegen.CodegenError):
+        codegen.build_xla(w, cfg.apply(w.nest()))
+
+
+def test_vmem_accounting():
+    cfg = Configuration().child(Tile(loops=("i", "j", "k"), sizes=(32, 32, 32)))
+    nest = cfg.apply(GEMM.nest())
+    b = codegen.vmem_bytes(GEMM, nest)
+    # A tile + B tile + out block + f32 accumulator = 4 × 32×32×4
+    assert b == 4 * 32 * 32 * 4

@@ -1,0 +1,86 @@
+"""Distributed-config search space (the paper's tree applied to §Perf)."""
+
+import pytest
+
+from repro.core.distconfig import (DistAutotuner, DistConfig, derive_children)
+
+
+BASE_RULES = {"seq": None, "ff": "model", "heads": "model",
+              "fsdp": ("pod", "data"), "batch": ("pod", "data"),
+              "kv_seq": "model", "kv_heads": None}
+
+
+def test_children_kind_awareness():
+    c = DistConfig()
+    train = dict(derive_children(c, kind="train", moe=False, multi_pod=True,
+                                 base_rules=BASE_RULES))
+    decode = dict(derive_children(c, kind="decode", moe=True, multi_pod=True,
+                                  base_rules=BASE_RULES))
+    prefill = dict(derive_children(c, kind="prefill", moe=True,
+                                   multi_pod=True, base_rules=BASE_RULES))
+    assert any(k.startswith("remat") for k in train)
+    assert any(k.startswith("microbatch") for k in train)
+    assert not any(k.startswith("remat") for k in decode)
+    assert not any(k.startswith("attn_chunk") for k in decode)
+    assert any(k.startswith("attn_chunk") for k in prefill)
+    assert not any(k.startswith("microbatch") for k in prefill)
+    assert any(k == "expert_fp8" for k in decode)
+    assert not any(k == "expert_fp8" for k in train)   # train keeps full dtype
+
+
+def test_identity_mutations_skipped():
+    c = DistConfig()
+    kids = dict(derive_children(c, kind="train", moe=False, multi_pod=True,
+                                base_rules=BASE_RULES))
+    # ff is already "model" in base rules → only the flip to None is derived
+    assert "map(ff→model)" not in kids
+    assert "map(ff→None)" in kids
+    assert "map(seq→model)" in kids
+    assert "map(seq→None)" not in kids
+
+
+def test_rules_override_and_key():
+    c = DistConfig(rule_overrides=(("seq", "model"),), remat="dots")
+    rules = c.rules({"seq": None, "ff": "model"})
+    assert rules["seq"] == "model" and rules["ff"] == "model"
+    assert c.key() != DistConfig().key()
+    assert "seq→model" in c.describe()
+
+
+def test_autotuner_greedy_over_synthetic_objective():
+    """Synthetic measurement: seq→model halves the collective term, attn
+    chunking halves memory; the tuner must find the composite."""
+    def measure(cfg):
+        rules = cfg.rules(BASE_RULES)
+        w = 10.0 * (0.5 if rules.get("seq") == "model" else 1.0)
+        m = 8.0 * (0.5 if any(f.startswith("attn_chunk") for f in cfg.flags)
+                   else 1.0)
+        return {"compute_s": 2.0, "memory_s": m, "collective_s": w,
+                "argument_bytes": 0, "temp_bytes": 0,
+                "roofline_fraction": 0.0}
+
+    tuner = DistAutotuner(measure, kind="train", moe=False, multi_pod=True,
+                          budget=40, base_rules=BASE_RULES)
+    tuner.run(DistConfig())
+    best = tuner.best()
+    assert best.objective == pytest.approx(5.0)    # max(2, 4, 5)
+    rules = best.config.rules(BASE_RULES)
+    assert rules["seq"] == "model"
+
+
+def test_oom_penalty_keeps_baseline_expandable():
+    calls = []
+
+    def measure(cfg):
+        calls.append(cfg)
+        fits = cfg.microbatches > 1
+        return {"compute_s": 1.0, "memory_s": 1.0, "collective_s": 1.0,
+                "argument_bytes": 0,
+                "temp_bytes": 0 if fits else 32e9,
+                "roofline_fraction": 0.0}
+
+    tuner = DistAutotuner(measure, kind="train", moe=False, multi_pod=True,
+                          budget=12, base_rules=BASE_RULES)
+    tuner.run(DistConfig())
+    best = tuner.best()
+    assert best.status == "ok" and best.config.microbatches > 1

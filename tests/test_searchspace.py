@@ -1,0 +1,166 @@
+"""Paper-validation tests for the search space (DESIGN.md C1–C3, C7–C9)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    COVARIANCE, GEMM, SYR2K, Configuration, Interchange, Parallelize,
+    SearchSpace, Tile, TransformError, is_legal,
+)
+
+
+def space(w=GEMM, **kw):
+    return SearchSpace(root=w.nest(), **kw)
+
+
+class TestPaperCounts:
+    def test_c1_tiling_count_3loops_5sizes(self):
+        """Paper §V: 5³ + 2·5² + 3·5 = 190 tiling configurations."""
+        c = space().count_children_by_kind(Configuration())
+        assert c["tile"] == 190
+
+    def test_c2_interchange_and_parallelize_counts(self):
+        """Paper §V: 3!−1 = 5 permutations, 3 parallelizations."""
+        c = space().count_children_by_kind(Configuration())
+        assert c["interchange"] == 5
+        assert c["parallelize"] == 3
+
+    def test_total_children_root(self):
+        assert len(space().children(Configuration())) == 198
+
+    def test_counts_scale_with_tile_set(self):
+        """2 sizes, 3 loops → 2³ + 2·2² + 3·2 = 22 tilings (paper §IV-B lists
+        the 6 two-loop cases for sizes {2,4} explicitly)."""
+        s = space(tile_sizes=(64, 256))
+        assert s.count_children_by_kind(Configuration())["tile"] == 22
+
+    def test_c3_tiling_doubles_loops(self):
+        """Tiling n loops replaces them with 2n loops (paper §III)."""
+        s = space()
+        cfg = Configuration().child(
+            Tile(loops=("i", "j", "k"), sizes=(448, 1024, 256)))
+        nest = s.structure(cfg)
+        assert len(nest.loops) == 6
+        assert [l.is_point for l in nest.loops] == [False] * 3 + [True] * 3
+        # further transformations apply to the 6-loop nest
+        c = s.count_children_by_kind(cfg)
+        assert c["interchange"] == 6 * 5 * 4 * 3 * 2 * 1 - 1   # 6!-1 = 719
+        assert c["parallelize"] == 6
+
+    def test_c8_parallelized_loop_not_transformable(self):
+        s = space()
+        cfg = Configuration().child(Parallelize(loop="i"))
+        c = s.count_children_by_kind(cfg)
+        # bands exclude the parallel loop: (j,k) band → 2 sizes... with 5
+        # sizes: tilings = 5² + 2·5 = 35; interchange 2!−1 = 1; parallelize 2
+        assert c["tile"] == 35
+        assert c["interchange"] == 1
+        assert c["parallelize"] == 2
+        with pytest.raises(TransformError):
+            Tile(loops=("i",), sizes=(4,)).apply(s.structure(cfg))
+
+
+class TestLegality:
+    def test_c7_reduction_loop_not_parallelizable(self):
+        nest = Configuration().child(Parallelize(loop="k")).apply(GEMM.nest())
+        assert not is_legal(nest)
+
+    def test_output_loops_parallelizable(self):
+        for loop in ("i", "j"):
+            nest = Configuration().child(Parallelize(loop=loop)).apply(GEMM.nest())
+            assert is_legal(nest)
+
+    def test_interchange_of_reduction_nest_legal(self):
+        cfg = Configuration().child(
+            Interchange(loops=("i", "j", "k"), permutation=("k", "j", "i")))
+        assert is_legal(cfg.apply(GEMM.nest()))
+
+    def test_triangular_interchange_rejected(self):
+        """syr2k: placing j (bound depends on i) outside i needs skewing the
+        pragma set cannot express → red node (paper §VI-B red fraction)."""
+        cfg = Configuration().child(
+            Interchange(loops=("i", "j", "k"), permutation=("j", "i", "k")))
+        assert not is_legal(cfg.apply(SYR2K.nest()))
+        assert not is_legal(cfg.apply(COVARIANCE.nest()))
+        assert is_legal(cfg.apply(GEMM.nest()))     # rectangular: fine
+
+    def test_tile_too_large_is_compile_error(self):
+        with pytest.raises(TransformError):
+            Tile(loops=("i",), sizes=(4096,)).apply(GEMM.nest())
+
+
+class TestDedup:
+    def test_c9_same_config_via_multiple_paths(self):
+        """parallelize(i);tile(j,k) ≡ tile(j,k);parallelize(i) (paper §III:
+        the space is actually a DAG)."""
+        s = space(dedup=True)
+        a = (Configuration().child(Parallelize(loop="i"))
+             .child(Tile(loops=("j", "k"), sizes=(64, 64))))
+        b = (Configuration().child(Tile(loops=("j", "k"), sizes=(64, 64)))
+             .child(Parallelize(loop="i")))
+        assert s.canonical_key(a) == s.canonical_key(b)
+
+    def test_different_sizes_not_merged(self):
+        s = space(dedup=True)
+        a = Configuration().child(Tile(loops=("i",), sizes=(64,)))
+        b = Configuration().child(Tile(loops=("i",), sizes=(256,)))
+        assert s.canonical_key(a) != s.canonical_key(b)
+
+
+@st.composite
+def _random_config(draw, max_depth=3):
+    """Random walk over *applicable* configurations.  (Children are derived
+    without pruning, so some are red nodes — those stay un-walked here; their
+    handling is covered by the legality/red-node tests.)"""
+    s = space()
+    cfg = Configuration()
+    depth = draw(st.integers(0, max_depth))
+    for _ in range(depth):
+        kids = s.children(cfg)
+        if not kids:
+            break
+        child = kids[draw(st.integers(0, len(kids) - 1))]
+        try:
+            s.structure(child)
+        except TransformError:
+            continue          # red node: structurally inapplicable
+        cfg = child
+    return s, cfg
+
+
+class TestProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(_random_config())
+    def test_loop_count_invariant(self, sc):
+        """#loops = 3 + Σ tiled-dims over applied Tile transformations."""
+        s, cfg = sc
+        nest = s.structure(cfg)
+        tiled = sum(len(t.loops) for t in cfg.transformations
+                    if isinstance(t, Tile))
+        assert len(nest.loops) == 3 + tiled
+
+    @settings(max_examples=25, deadline=None)
+    @given(_random_config())
+    def test_trip_product_covers_extents(self, sc):
+        """Π trips of a var's loops ≥ its extent (ceil-div remainders)."""
+        s, cfg = sc
+        nest = s.structure(cfg)
+        prod = {}
+        for l in nest.loops:
+            prod[l.origin] = prod.get(l.origin, 1) * l.trips
+        for v, e in nest.extents.items():
+            assert prod.get(v, e) >= e
+
+    @settings(max_examples=15, deadline=None)
+    @given(_random_config())
+    def test_children_are_extensions(self, sc):
+        s, cfg = sc
+        for child in s.children(cfg)[:50]:
+            assert child.transformations[:-1] == cfg.transformations
+
+    @settings(max_examples=15, deadline=None)
+    @given(_random_config())
+    def test_pragma_rendering_roundtrips_names(self, sc):
+        s, cfg = sc
+        text = cfg.pragmas()
+        assert text.count("#pragma clang loop") == len(cfg)

@@ -1,0 +1,126 @@
+"""Data pipeline, optimizer, fault-tolerance unit tests."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import DataConfig, Prefetcher, global_batch_rows, host_batch
+from repro.optim import OptimizerConfig, apply_updates, init_opt_state, lr_schedule
+from repro.train.fault_tolerance import StragglerWatchdog
+
+
+class TestData:
+    def test_deterministic(self):
+        cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=8)
+        a = host_batch(cfg, 3)
+        b = host_batch(cfg, 3)
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a, host_batch(cfg, 4))
+
+    def test_host_sharding_partitions_global_batch(self):
+        """Union of all host shards == the single-host global batch, for any
+        host count (elastic resharding invariant)."""
+        base = DataConfig(vocab_size=500, seq_len=16, global_batch=8)
+        whole = host_batch(base, 11)
+        for n_hosts in (2, 4, 8):
+            parts = [
+                host_batch(DataConfig(vocab_size=500, seq_len=16,
+                                      global_batch=8, n_hosts=n_hosts,
+                                      host_id=h), 11)
+                for h in range(n_hosts)]
+            np.testing.assert_array_equal(np.concatenate(parts), whole)
+
+    def test_tokens_in_vocab(self):
+        cfg = DataConfig(vocab_size=321, seq_len=40, global_batch=4)
+        b = host_batch(cfg, 0)
+        assert b.min() >= 0 and b.max() < 321
+
+    def test_prefetcher_order(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2)
+        pf = Prefetcher(cfg, start_step=5, depth=2)
+        try:
+            for want in (5, 6, 7):
+                step, batch = pf.next()
+                assert step == want
+                np.testing.assert_array_equal(batch, host_batch(cfg, want))
+        finally:
+            pf.close()
+
+
+class TestOptimizer:
+    def test_adamw_decreases_quadratic(self):
+        cfg = OptimizerConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                              total_steps=100, grad_clip=0.0)
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        state = init_opt_state(cfg, params)
+
+        def loss(p):
+            return jnp.sum(p["w"] ** 2)
+
+        for _ in range(150):
+            g = jax.grad(loss)(params)
+            params, state, _ = apply_updates(cfg, params, g, state)
+        assert float(loss(params)) < 1e-2
+
+    def test_grad_clip(self):
+        cfg = OptimizerConfig(lr=1e-3, grad_clip=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros(4)}
+        state = init_opt_state(cfg, params)
+        g = {"w": jnp.full((4,), 100.0)}
+        _, _, metrics = apply_updates(cfg, params, g, state)
+        assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              min_lr_ratio=0.1)
+        assert float(lr_schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+        assert float(lr_schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+        end = float(lr_schedule(cfg, jnp.asarray(100)))
+        assert end == pytest.approx(0.1, rel=1e-2)
+
+    def test_factored_experts_state_small(self):
+        cfg = OptimizerConfig(factored_experts=True)
+        params = {"experts": {"gate": jnp.zeros((8, 32, 16))},
+                  "dense": jnp.zeros((32, 16))}
+        st_ = init_opt_state(cfg, params)
+        vr, vc = st_.v["experts"]["gate"]
+        assert vr.shape == (8, 32) and vc.shape == (8, 16)
+        assert st_.v["dense"].shape == (32, 16)
+
+    def test_factored_update_decreases_loss(self):
+        cfg = OptimizerConfig(lr=0.05, factored_experts=True,
+                              weight_decay=0.0, warmup_steps=0, grad_clip=0.0)
+        params = {"experts": {"gate": jnp.ones((2, 8, 4))}}
+        state = init_opt_state(cfg, params)
+
+        def loss(p):
+            return jnp.sum(p["experts"]["gate"] ** 2)
+
+        l0 = float(loss(params))
+        for _ in range(20):
+            g = jax.grad(loss)(params)
+            params, state, _ = apply_updates(cfg, params, g, state)
+        assert float(loss(params)) < l0
+
+
+class TestWatchdog:
+    def test_flags_outlier(self):
+        wd = StragglerWatchdog(k_std=3.0, min_steps=4, abs_floor_s=0.01)
+        flagged = []
+        for step in range(20):
+            dt = 0.10 + 0.001 * (step % 3)
+            if step == 15:
+                dt = 1.0
+            if wd.observe(step, dt):
+                flagged.append(step)
+        assert flagged == [15]
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.floats(0.09, 0.11), min_size=10, max_size=30))
+    def test_no_false_positives_on_stable_steps(self, times):
+        wd = StragglerWatchdog(k_std=6.0, min_steps=8, abs_floor_s=0.05)
+        assert not any(wd.observe(i, dt) for i, dt in enumerate(times))
