@@ -3,16 +3,20 @@
   bench_pragma_stacking   paper Fig. 1 (pragma stacking on gemm)
   bench_autotune          paper Figs. 6–11 (greedy traces ± parallelize)
   bench_mcts_vs_greedy    paper §VIII / ProTuner (beyond-paper strategies)
+  bench_eval_cache        evaluation-engine experiments/sec vs pre-PR path
   bench_kernels           Pallas kernel micro-benchmarks
   bench_roofline          §Roofline table from the 80-cell dry-run records
 
 Prints a final ``name,us_per_call,derived`` CSV.  Run with
-``PYTHONPATH=src python -m benchmarks.run`` (add ``--only <name>`` to subset).
+``PYTHONPATH=src python -m benchmarks.run`` (add ``--only <name>`` to subset,
+``--json BENCH_eval.json`` to additionally write the rows as machine-readable
+JSON — the perf trajectory consumed by later PRs).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -20,39 +24,76 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument(
+        "--json", type=str, default=None, metavar="BENCH_eval.json",
+        help="write results as JSON: {suites: {name: {seconds, failed}}, "
+             "rows: [{name, us_per_call, derived}]}")
     args = ap.parse_args(argv)
 
-    from . import (bench_autotune, bench_beyond_transforms, bench_kernels,
-                   bench_mcts_vs_greedy, bench_pragma_stacking,
+    if args.json:
+        import os
+        d = os.path.dirname(args.json) or "."
+        if not os.path.isdir(d):
+            ap.error(f"--json: directory {d!r} does not exist")
+
+    from . import (bench_autotune, bench_beyond_transforms, bench_eval_cache,
+                   bench_kernels, bench_mcts_vs_greedy, bench_pragma_stacking,
                    bench_roofline)
 
     suites = {
         "pragma_stacking": bench_pragma_stacking.main,
         "autotune": bench_autotune.main,
         "mcts_vs_greedy": bench_mcts_vs_greedy.main,
+        "eval_cache": bench_eval_cache.main,
         "beyond_transforms": bench_beyond_transforms.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
     }
     if args.only:
+        if args.only not in suites:
+            ap.error(f"--only: unknown suite {args.only!r} "
+                     f"(choose from {', '.join(suites)})")
         suites = {args.only: suites[args.only]}
 
     all_rows: list[str] = []
+    suite_meta: dict[str, dict] = {}
     for name, fn in suites.items():
         t0 = time.time()
         try:
             rows = fn()
             all_rows.extend(rows or [])
+            suite_meta[name] = {"seconds": round(time.time() - t0, 2),
+                                "failed": False}
             print(f"\n[{name}] done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:          # noqa: BLE001
             print(f"\n[{name}] FAILED: {type(e).__name__}: {e}",
                   file=sys.stderr, flush=True)
             all_rows.append(f"{name},,FAILED:{type(e).__name__}")
+            suite_meta[name] = {"seconds": round(time.time() - t0, 2),
+                                "failed": True,
+                                "error": f"{type(e).__name__}: {e}"}
 
     print("\n" + "=" * 60)
     print("name,us_per_call,derived")
     for r in all_rows:
         print(r)
+
+    if args.json:
+        structured = []
+        for r in all_rows:
+            parts = r.split(",", 2)
+            name = parts[0]
+            us = parts[1] if len(parts) > 1 else ""
+            derived = parts[2] if len(parts) > 2 else ""
+            structured.append({
+                "name": name,
+                "us_per_call": float(us) if us else None,
+                "derived": derived,
+            })
+        payload = {"suites": suite_meta, "rows": structured}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"\nwrote {args.json} ({len(structured)} rows)")
 
 
 if __name__ == "__main__":

@@ -28,12 +28,14 @@ def main():
     be = WallclockBackend(scale=0.12, reps=2)
     print("tuning gemm tiles on real XLA:CPU wallclock "
           f"(scale=0.12 → extents ≈ {GEMM.scaled(0.12).extents}) ...")
-    log = run_greedy(GEMM, space, be, budget=60)
+    # surrogate_order: under a tight wallclock budget, spend the compile+run
+    # experiments on the cost model's top-ranked children first
+    log = run_greedy(GEMM, space, be, budget=60, surrogate_order=True)
     best = log.best()
     print(f"\nbaseline (XLA default einsum): "
           f"{log.baseline.result.time_s*1e3:.1f} ms")
     print(f"best: {best.result.time_s*1e3:.1f} ms at experiment #{best.number}")
-    print(best.pragmas() or "(baseline wins — XLA's einsum is well tiled "
+    print(best.pragmas or "(baseline wins — XLA's einsum is well tiled "
           "already; the pragmas matter on the TPU path)")
 
     # correctness gate: the same schedule as a Pallas kernel vs the oracle

@@ -13,7 +13,14 @@ Public API::
 """
 
 from .autotuner import Autotuner, Experiment, TuningLog
-from .costmodel import TPU_V5E, XEON_8180M, Machine, estimate_time
+from .costmodel import (
+    TPU_V5E,
+    XEON_8180M,
+    Machine,
+    estimate_time,
+    estimate_time_uncached,
+)
+from .evaluation import EvalStats, EvaluationEngine
 from .legality import IllegalTransform, check_legal, is_legal
 from .loopnest import Access, Loop, LoopNest, make_nest
 from .measure import (
@@ -38,12 +45,12 @@ from .workloads import COVARIANCE, GEMM, PAPER_WORKLOADS, SYR2K, Workload, matmu
 
 __all__ = [
     "Access", "Autotuner", "Backend", "COVARIANCE", "Configuration",
-    "CostModelBackend", "DEFAULT_TILE_SIZES", "Experiment", "GEMM",
-    "IllegalTransform", "Interchange", "Loop", "LoopNest", "Machine",
-    "PAPER_WORKLOADS", "PallasBackend", "Parallelize", "Result", "SYR2K",
-    "SearchSpace", "STRATEGIES", "TPU_V5E", "Tile", "TransformError",
-    "Transformation", "TuningLog", "Unroll", "Vectorize", "WallclockBackend",
-    "Workload", "XEON_8180M", "check_legal", "estimate_time", "is_legal",
-    "make_nest", "matmul_workload", "run_beam", "run_greedy", "run_mcts",
-    "run_random",
+    "CostModelBackend", "DEFAULT_TILE_SIZES", "EvalStats", "EvaluationEngine",
+    "Experiment", "GEMM", "IllegalTransform", "Interchange", "Loop",
+    "LoopNest", "Machine", "PAPER_WORKLOADS", "PallasBackend", "Parallelize",
+    "Result", "SYR2K", "SearchSpace", "STRATEGIES", "TPU_V5E", "Tile",
+    "TransformError", "Transformation", "TuningLog", "Unroll", "Vectorize",
+    "WallclockBackend", "Workload", "XEON_8180M", "check_legal",
+    "estimate_time", "estimate_time_uncached", "is_legal", "make_nest",
+    "matmul_workload", "run_beam", "run_greedy", "run_mcts", "run_random",
 ]

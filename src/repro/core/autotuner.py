@@ -11,6 +11,14 @@ evaluated (compile + legality + measure), failures are recorded as red nodes,
 successes enter the priority queue.  The space is conceptually infinite, so the
 run is bounded by an experiment/time budget instead of queue exhaustion.
 
+All measurement goes through the shared :class:`~repro.core.evaluation.
+EvaluationEngine`: child sweeps are dispatched as one batch per expanded
+parent (thread-pooled for compile+measure backends), structurally duplicate
+schedules are replayed from the structural result cache, and the engine's
+``seen`` set — seeded with the baseline's canonical key so experiment 0's
+structure can never be re-evaluated as a child — implements the DAG dedup of
+paper §VIII.  The engine's hit/miss counters land in ``TuningLog.cache``.
+
 Exploration strategies beyond the paper's greedy one live in
 :mod:`repro.core.strategies` and reuse this experiment log format.
 """
@@ -23,6 +31,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable
 
+from .evaluation import EvaluationEngine
 from .measure import Backend, Result
 from .searchspace import Configuration, SearchSpace
 from .workloads import Workload
@@ -55,6 +64,7 @@ class TuningLog:
     workload: str
     backend: str
     experiments: list[Experiment] = field(default_factory=list)
+    cache: dict | None = None       # evaluation-engine hit/miss counters
 
     @property
     def baseline(self) -> Experiment:
@@ -81,18 +91,23 @@ class TuningLog:
         return c
 
     def to_json(self) -> str:
-        return json.dumps(
-            {
-                "workload": self.workload,
-                "backend": self.backend,
-                "experiments": [e.to_dict() for e in self.experiments],
-            },
-            indent=1,
-        )
+        payload = {
+            "workload": self.workload,
+            "backend": self.backend,
+            "experiments": [e.to_dict() for e in self.experiments],
+        }
+        if self.cache is not None:
+            payload["cache"] = self.cache
+        return json.dumps(payload, indent=1)
 
 
 class Autotuner:
-    """Paper-faithful greedy driver (exploitation-only priority queue)."""
+    """Paper-faithful greedy driver (exploitation-only priority queue).
+
+    ``cache``/``surrogate_order`` configure the shared evaluation engine; an
+    externally constructed ``engine`` may be injected instead (it carries the
+    run's dedup state, so share one only across runs that should share it).
+    """
 
     def __init__(
         self,
@@ -102,6 +117,9 @@ class Autotuner:
         max_experiments: int = 400,
         max_seconds: float | None = None,
         on_experiment: Callable[[Experiment], None] | None = None,
+        cache: bool = True,
+        surrogate_order: bool = False,
+        engine: EvaluationEngine | None = None,
     ):
         self.workload = workload
         self.space = space
@@ -109,28 +127,35 @@ class Autotuner:
         self.max_experiments = max_experiments
         self.max_seconds = max_seconds
         self.on_experiment = on_experiment
+        self.engine = engine or EvaluationEngine(
+            workload, space, backend,
+            cache=cache, surrogate_order=surrogate_order,
+        )
 
     def run(self) -> TuningLog:
+        engine = self.engine
         log = TuningLog(workload=self.workload.name, backend=self.backend.name)
         t_start = time.perf_counter()
 
-        def record(config: Configuration, parent: int | None) -> Experiment:
-            res = self.backend.evaluate(self.workload, config)
+        def record(config: Configuration, result: Result,
+                   parent: int | None) -> Experiment:
             exp = Experiment(number=len(log.experiments), config=config,
-                             result=res, parent=parent)
+                             result=result, parent=parent)
             log.experiments.append(exp)
             if self.on_experiment:
                 self.on_experiment(exp)
             return exp
 
         # Experiment 0: the baseline configuration — executed too, "since it
-        # might be the fastest configuration" (§IV-C).
-        base = record(Configuration(), None)
+        # might be the fastest configuration" (§IV-C) — and marked seen so its
+        # structure cannot be re-derived as a child.
+        baseline = Configuration()
+        base = record(baseline, engine.evaluate(baseline), None)
+        engine.seed_seen(baseline)
         heap: list[tuple[float, int]] = []
         if base.result.ok:
             heapq.heappush(heap, (base.result.time_s, base.number))
 
-        seen: set[tuple] = set()
         while heap:
             if len(log.experiments) >= self.max_experiments:
                 break
@@ -141,18 +166,14 @@ class Autotuner:
                 break
             _, num = heapq.heappop(heap)
             parent = log.experiments[num]
-            for child in self.space.children(parent.config):
-                if len(log.experiments) >= self.max_experiments:
-                    break
-                if self.space.dedup:
-                    try:
-                        key = self.space.canonical_key(child)
-                    except Exception:   # noqa: BLE001 — broken structure
-                        key = ("path",) + tuple(t.key() for t in child.transformations)
-                    if key in seen:
-                        continue
-                    seen.add(key)
-                exp = record(child, parent.number)
+            # fused dedup + surrogate ordering + batched evaluation
+            swept = engine.sweep(
+                self.space.children(parent.config, dedup=False),
+                room=self.max_experiments - len(log.experiments),
+            )
+            for child, res in swept:
+                exp = record(child, res, parent.number)
                 if exp.result.ok:
                     heapq.heappush(heap, (exp.result.time_s, exp.number))
+        log.cache = engine.stats_dict()
         return log

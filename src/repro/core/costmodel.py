@@ -33,12 +33,23 @@ Components
   parallel region — parallelizing an inner loop enters the region once per
   outer iteration product, reproducing "worst configurations with
   parallelization are three times slower" (§VI-A).
+
+Performance (the evaluation-engine hot path)
+--------------------------------------------
+The per-loop traffic walk is batched over numpy suffix cumulative products and
+memoized *per nest instance* (:func:`_nest_profile`), so the per-cache-level
+:func:`_traffic` calls share one working-set computation.  :func:`estimate_time`
+is additionally memoized per *structure* (``_ESTIMATE_CACHE``): surrogate
+scoring and dedup-heavy searches re-score the same structure reached through
+many derivation paths for the price of one dict lookup.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+
+import numpy as np
 
 from .loopnest import Loop, LoopNest
 
@@ -99,91 +110,167 @@ TPU_V5E = Machine(
 )
 
 
-def _var_extent_in_suffix(
-    loops: tuple[Loop, ...], start: int, var: str, full_extent: int
-) -> int:
-    e = 1
-    for l in loops[start:]:
-        if l.origin == var:
-            e *= l.trips
-    return min(e, full_extent) if full_extent > 0 else e
+@dataclass(frozen=True)
+class _AccessProfile:
+    """Capacity-independent per-access precomputation for the traffic walk.
+
+    Stored as plain Python tuples: the per-level scans below touch a handful
+    of scalars per loop, where numpy element indexing would cost more than it
+    vectorizes."""
+
+    elem: int
+    slides: tuple[bool, ...]    # loop indexes the array (slice slides)
+    is_lastv: tuple[bool, ...]  # loop's origin is the contiguous dim
+    last_pos: int               # innermost last-var loop index, -1 if none
+    run_cap: float              # full extent of the contiguous dim
 
 
-def _footprint(
-    nest: LoopNest, start: int, array_vars: tuple[str, ...], elem: int, line: int
-) -> float:
-    """Cache occupancy (bytes) of the slice touched by loops[start:] — last dim
-    is contiguous; partial coverage occupies whole lines."""
+@dataclass(frozen=True)
+class _NestProfile:
+    """Capacity-independent precomputation shared by every cache level.
+
+    ``ws[i]`` is the working set (bytes) of ``loops[i:]`` — the per-loop
+    suffix-product walk batched over one 2-D numpy cumulative product instead
+    of the former O(levels · accesses · dims · loops) Python recomputation
+    per cache level.
+    """
+
+    ws: np.ndarray              # (n+1,) working-set bytes by suffix start
+    ws_inner: tuple[float, ...]   # ws[1:] as scalars for the per-level scan
+    trips: tuple[float, ...]    # per-loop trip counts
+    accesses: tuple[_AccessProfile, ...]
+    tri_scale: float
+
+
+def _nest_profile(nest: LoopNest, line: int) -> _NestProfile:
+    """Build (and memoize on the frozen nest instance) the traffic profile."""
+    profiles = nest.__dict__.get("_traffic_profiles")
+    if profiles is None:
+        profiles = {}
+        object.__setattr__(nest, "_traffic_profiles", profiles)
+    prof = profiles.get(line)
+    if prof is not None:
+        return prof
+
     loops = nest.loops
-    total = 1.0
-    for d, v in enumerate(array_vars):
-        ext = _var_extent_in_suffix(loops, start, v, nest.extents.get(v, 0))
-        if d == len(array_vars) - 1:
-            total *= max(ext * elem, min(line, nest.extents.get(v, 1) * elem))
-        else:
-            total *= ext
-    return total
+    n = len(loops)
+    trips_arr = np.array([l.trips for l in loops], dtype=np.float64)
+    origins = [l.origin for l in loops]
+
+    uniq: list = []
+    seen: set[tuple] = set()
+    for a in nest.accesses:
+        sig = (a.array, a.vars)
+        if sig not in seen:
+            seen.add(sig)
+            uniq.append(a)
+
+    # suffix extent per source var, one batched cumprod: sfx[v][i] = Π trips
+    # of v-origin loops[i:], capped at the full extent (ceil-div floor loops
+    # overshoot).
+    var_list: list[str] = []
+    for a in uniq:
+        for v in a.vars:
+            if v not in var_list:
+                var_list.append(v)
+    nvars = len(var_list)
+    mask = np.array([[o == v for o in origins] for v in var_list], dtype=bool)
+    per_loop = np.where(mask, trips_arr[None, :], 1.0) if n else np.ones((nvars, 0))
+    sfx = np.ones((nvars, n + 1))
+    if n:
+        sfx[:, :n] = np.cumprod(per_loop[:, ::-1], axis=1)[:, ::-1]
+    caps = np.array([float(nest.extents.get(v, 0)) for v in var_list])
+    capped = caps > 0
+    if capped.any():
+        sfx[capped] = np.minimum(sfx[capped], caps[capped, None])
+    row = {v: i for i, v in enumerate(var_list)}
+
+    ws = np.zeros(n + 1)
+    access_profiles: list[_AccessProfile] = []
+    for a in uniq:
+        fp = np.ones(n + 1)
+        for d, v in enumerate(a.vars):
+            ext = sfx[row[v]]
+            if d == len(a.vars) - 1:
+                # last dim is contiguous; partial coverage occupies whole lines
+                fp = fp * np.maximum(
+                    ext * a.elem_bytes,
+                    min(line, nest.extents.get(v, 1) * a.elem_bytes),
+                )
+            else:
+                fp = fp * ext
+        ws += fp
+
+        lastv = a.vars[-1] if a.vars else None
+        is_lastv = tuple(o == lastv for o in origins)
+        last_pos = -1
+        for i in range(n - 1, -1, -1):
+            if is_lastv[i]:
+                last_pos = i
+                break
+        run_cap = float(nest.extents.get(lastv, float("inf"))) if lastv else 1.0
+        access_profiles.append(
+            _AccessProfile(elem=a.elem_bytes,
+                           slides=tuple(o in a.vars for o in origins),
+                           is_lastv=is_lastv,
+                           last_pos=last_pos, run_cap=run_cap)
+        )
+
+    prof = _NestProfile(ws=ws, ws_inner=tuple(ws[1:].tolist()),
+                        trips=tuple(trips_arr.tolist()),
+                        accesses=tuple(access_profiles),
+                        tri_scale=0.5 ** len(nest.triangular))
+    profiles[line] = prof
+    return prof
 
 
 def _working_set(nest: LoopNest, start: int, line: int) -> float:
-    seen: set[tuple] = set()
-    ws = 0.0
-    for a in nest.accesses:
-        sig = (a.array, a.vars)
-        if sig in seen:
-            continue
-        seen.add(sig)
-        ws += _footprint(nest, start, a.vars, a.elem_bytes, line)
-    return ws
+    return float(_nest_profile(nest, line).ws[start])
 
 
 def _traffic(nest: LoopNest, capacity: int, line: int) -> tuple[float, float]:
-    """(sequential_bytes, strided_bytes) crossing a boundary of ``capacity``."""
-    loops = nest.loops
-    n = len(loops)
-    ws = [_working_set(nest, i, line) for i in range(n + 1)]
-    tri_scale = 0.5 ** len(nest.triangular)
+    """(sequential_bytes, strided_bytes) crossing a boundary of ``capacity``.
+
+    Pure scalar arithmetic over the memoized profile: a handful of operations
+    per loop per access, shared across the per-level calls of
+    :func:`estimate_time_uncached`."""
+    prof = _nest_profile(nest, line)
+    trips = prof.trips
+    n = len(trips)
+    overflow = [w > capacity for w in prof.ws_inner]
     seq = 0.0
     strided = 0.0
-    seen: set[tuple] = set()
-    for a in nest.accesses:
-        sig = (a.array, a.vars)
-        if sig in seen:
-            continue
-        seen.add(sig)
-        elem = a.elem_bytes
-        mult = [False] * n
+    for a in prof.accesses:
+        # a loop multiplies traffic iff the slice slides under it or the inner
+        # working set overflows the level (eviction between its iterations)
+        slides = a.slides
         elems = 1.0
-        for i in range(n - 1, -1, -1):
-            if loops[i].origin in a.vars or ws[i + 1] > capacity:
+        mult = [False] * n
+        for i in range(n):
+            if slides[i] or overflow[i]:
                 mult[i] = True
-                elems *= loops[i].trips
+                elems *= trips[i]
         # contiguous run along the last dim: trips of last-var loops scanning
         # inner→outer until interrupted by a sliding loop of another var
-        lastv = a.vars[-1] if a.vars else None
-        run = 1
+        run = 1.0
+        is_lastv = a.is_lastv
         for i in range(n - 1, -1, -1):
-            if loops[i].origin == lastv:
-                run *= loops[i].trips
+            if is_lastv[i]:
+                run *= trips[i]
             elif mult[i]:
                 break
-        run = min(run, nest.extents.get(lastv, run) if lastv else run)
-        bytes_seq = elems * elem
-        if elem * run >= line:
+        run = min(run, a.run_cap)
+        bytes_seq = elems * a.elem
+        if a.elem * run >= line:
             seq += bytes_seq
             continue
         # strided: do neighbouring iterations of the innermost last-var loop
         # share lines at this level? (column working set survives → amortized)
-        p = None
-        for i in range(n - 1, -1, -1):
-            if loops[i].origin == lastv:
-                p = i
-                break
-        if p is not None and ws[p + 1] <= capacity:
+        if a.last_pos >= 0 and prof.ws_inner[a.last_pos] <= capacity:
             seq += bytes_seq      # lines shared across neighbouring columns
         else:
             strided += elems * line   # one line per element touched
-    return seq * tri_scale, strided * tri_scale
+    return seq * prof.tri_scale, strided * prof.tri_scale
 
 
 def _compute_efficiency(nest: LoopNest, m: Machine) -> float:
@@ -224,8 +311,45 @@ def _parallel_shape(nest: LoopNest) -> tuple[int, float]:
     return par_trips, entries
 
 
+# Per-structure memo: estimate_time is a pure function of the nest's
+# structural identity (loops + accesses + extents + triangular + flops) and
+# the machine, and dedup-heavy searches re-score the same structure reached
+# via many derivation paths.  Bounded: cleared wholesale when it outgrows
+# _ESTIMATE_CACHE_MAX (no eviction bookkeeping on the hot path).
+_ESTIMATE_CACHE: dict[tuple, float] = {}
+_ESTIMATE_CACHE_MAX = 1 << 17
+
+
+def _estimate_key(nest: LoopNest, machine: Machine) -> tuple:
+    return (
+        machine,
+        nest.structure_key(),
+        nest.accesses,
+        tuple(sorted(nest.extents.items())),
+        nest.triangular,
+        nest.flops_per_point,
+    )
+
+
 def estimate_time(nest: LoopNest, machine: Machine) -> float:
-    """Predicted wall-clock seconds of one execution of the scheduled nest."""
+    """Predicted wall-clock seconds of one execution of the scheduled nest.
+
+    Memoized per structure (see ``_ESTIMATE_CACHE``); use
+    :func:`estimate_time_uncached` to force a fresh walk.
+    """
+    key = _estimate_key(nest, machine)
+    t = _ESTIMATE_CACHE.get(key)
+    if t is None:
+        if len(_ESTIMATE_CACHE) >= _ESTIMATE_CACHE_MAX:
+            _ESTIMATE_CACHE.clear()
+        t = estimate_time_uncached(nest, machine)
+        _ESTIMATE_CACHE[key] = t
+    return t
+
+
+def estimate_time_uncached(nest: LoopNest, machine: Machine) -> float:
+    """The un-memoized model walk (still shares the per-nest traffic profile
+    across cache levels)."""
     m = machine
     flops = nest.total_flops()
     eff = _compute_efficiency(nest, m)

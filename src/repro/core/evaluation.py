@@ -1,0 +1,332 @@
+"""Shared evaluation engine for every search strategy and backend.
+
+The paper's search space is a tree whose nodes form a DAG by structure
+("different transformation sequences can lead to the same result", §III).  The
+seed code re-derived and re-measured structurally identical schedules from
+scratch: ``Backend.evaluate`` replayed the full transformation sequence per
+child, and ``canonical_key`` replayed it *again* for dedup.  This module makes
+each evaluation — and each skipped duplicate — cheap enough that search
+quality is gated by the search policy, not by evaluation overhead
+(evaluations-per-budget, cf. arXiv:2105.04555, arXiv:2010.08040).
+
+Architecture
+------------
+:class:`EvaluationEngine` owns the full (workload, space, backend) evaluation
+path used by ``run_greedy`` / ``run_mcts`` / ``run_beam`` / ``run_random``:
+
+1. **Incremental schedule application** — delegated to
+   :meth:`SearchSpace.structure`, whose prefix-keyed nest cache applies one
+   transformation to the parent's cached nest instead of replaying ``d+1``
+   steps from the root.
+2. **Structural result cache** — results are keyed by
+   ``LoopNest.structure_key()``, so a schedule reachable via multiple paths
+   (``parallelize(i); tile(j,k)`` ≡ ``tile(j,k); parallelize(i)``) is measured
+   once and replayed on every later hit.  In dedup'd strategies (the
+   default) duplicates are dropped by the ``seen`` set *before* measurement
+   (counted as ``deduped`` — hits there are legitimately 0); the replay path
+   serves random walks, ``dedup=False`` spaces, and engines shared across
+   runs.  All counters are surfaced via :meth:`stats_dict` and recorded in
+   ``TuningLog.cache``.
+3. **Batched dispatch** — :meth:`evaluate_many` partitions a batch into cache
+   hits, intra-batch duplicates, and genuine misses, and hands the misses to
+   ``Backend.evaluate_many`` (thread-pooled for compile+measure backends).
+4. **Surrogate-ordered expansion** — :meth:`order_children` ranks candidate
+   children by the memoized analytic cost model so wallclock-budgeted searches
+   evaluate the model's top-ranked children first.
+5. **Dedup bookkeeping** — the global ``seen`` set over canonical structure
+   keys lives here, shared by the drivers instead of re-implemented per
+   strategy: :meth:`sweep` filters eagerly (greedy), :meth:`claim` lazily
+   (MCTS expansion), :meth:`seed_seen` marks the baseline.
+
+Cache invariants
+----------------
+* A structure key identifies the *measured* semantics completely for a fixed
+  (workload, backend): legality and the measured/predicted time are pure
+  functions of the post-transformation structure.  Noisy backends are
+  therefore *measured once per structure* (cache replay returns the first
+  sample, not a fresh draw).
+* Configurations whose derivation raises :class:`TransformError` have no
+  structure; their ``compile_error`` results are cached under the derivation
+  *path* key instead and never reach the backend.
+* Caches only grow — a key, once computed, never changes — so no invalidation
+  exists anywhere in the engine.
+* With ``cache=False`` every configuration is handed to the backend afresh;
+  experiment ordering is unchanged, so deterministic backends produce
+  byte-identical logs modulo the hit/miss counters (tested).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from .costmodel import XEON_8180M, Machine, estimate_time
+from .legality import IllegalTransform, check_legal
+from .loopnest import LoopNest
+from .measure import Backend, Result
+from .searchspace import Configuration, SearchSpace
+from .transformations import TransformError
+from .workloads import Workload
+
+
+@dataclass
+class EvalStats:
+    """Evaluation counters (surfaced in ``TuningLog.cache``).
+
+    ``deduped`` counts structurally duplicate children dropped by the
+    ``seen`` set *before* measurement — in dedup'd strategies (the default)
+    this is where the DAG savings land, and why ``hits`` can legitimately be
+    0 there: a duplicate never reaches the result cache because it is never
+    evaluated at all.  ``hits`` counts result-cache replays, which fire for
+    random walks, ``dedup=False`` spaces, and engines shared across runs.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    deduped: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.total if self.total else 0.0
+
+
+class EvaluationEngine:
+    """One engine instance per tuning run (it carries the run's dedup state).
+
+    Parameters
+    ----------
+    cache:
+        Enable the structural result cache.  Off, every configuration is
+        evaluated by the backend afresh (identical experiment ordering —
+        used by the determinism tests and for noisy-backend re-measurement).
+    surrogate_order:
+        Make :meth:`order_children` sort candidates by the memoized analytic
+        cost model (cheapest-predicted first) instead of preserving derivation
+        order.  Off by default so cost-model-backed runs stay byte-compatible
+        with the seed driver; turn on for wallclock/Pallas runs under a time
+        budget.
+    surrogate_machine:
+        Machine model for surrogate scoring; defaults to the backend's
+        ``machine`` when it has one, else the paper's Xeon 8180M.
+    """
+
+    def __init__(
+        self,
+        workload: Workload,
+        space: SearchSpace,
+        backend: Backend,
+        cache: bool = True,
+        surrogate_order: bool = False,
+        surrogate_machine: Machine | None = None,
+    ):
+        self.workload = workload
+        self.space = space
+        self.backend = backend
+        self.cache = cache
+        self.surrogate_order = surrogate_order
+        self.surrogate_machine = surrogate_machine or getattr(
+            backend, "machine", XEON_8180M
+        )
+        self.stats = EvalStats()
+        self._results: dict[tuple, Result] = {}
+        self._seen: set[tuple] = set()
+
+    # -- keys ----------------------------------------------------------------
+
+    def _canonical_key(self, config: Configuration) -> tuple:
+        """Structure key when derivable, else a path-key fallback (broken
+        structures are still unique red nodes, mirroring the seed drivers)."""
+        return self._prep(config)[1]
+
+    # -- dedup bookkeeping (DAG merging, paper §VIII) --------------------------
+
+    def seed_seen(self, config: Configuration) -> None:
+        """Mark ``config``'s structure as already explored — called with the
+        baseline so experiment 0's structure cannot be re-evaluated as a
+        child."""
+        if self.space.dedup:
+            self._seen.add(self._canonical_key(config))
+
+    def claim(self, config: Configuration) -> bool:
+        """Lazy single-config dedup: True iff the structure is unseen (and now
+        claimed by the caller).
+
+        MCTS uses this at expansion time instead of eagerly keying *every*
+        derived child of a node — deep nodes derive thousands of children,
+        most of which progressive widening never expands.
+        """
+        if not self.space.dedup:
+            return True
+        key = self._canonical_key(config)
+        if key in self._seen:
+            self.stats.deduped += 1
+            return False
+        self._seen.add(key)
+        return True
+
+    # -- surrogate ordering ----------------------------------------------------
+
+    def _surrogate_score(self, nest: "LoopNest | TransformError") -> float:
+        """Predicted time of a derived nest; ``inf`` for red candidates (no
+        structure / illegal) so they sort last and a truncated budget is
+        spent on children that can actually win.  Single source of truth for
+        both :meth:`sweep` (greedy) and :meth:`order_children` (beam)."""
+        if isinstance(nest, TransformError):
+            return float("inf")
+        try:
+            check_legal(nest)
+        except IllegalTransform:
+            return float("inf")
+        return estimate_time(nest, self.surrogate_machine)
+
+    def order_children(
+        self, configs: Sequence[Configuration]
+    ) -> list[Configuration]:
+        """Rank candidates cheapest-predicted-first by the analytic model.
+        The sort is stable, so equal scores keep derivation order
+        (determinism)."""
+        if not self.surrogate_order:
+            return list(configs)
+        return sorted(
+            configs, key=lambda c: self._surrogate_score(self.space.try_structure(c))
+        )
+
+    # -- evaluation ------------------------------------------------------------
+
+    def evaluate(self, config: Configuration) -> Result:
+        return self.evaluate_many([config])[0]
+
+    def _prep(
+        self, config: Configuration
+    ) -> tuple["LoopNest | TransformError", tuple]:
+        """Derive the nest and the canonical/result-cache key in one step —
+        for derivable structures the two keys are the same tuple."""
+        nest = self.space.try_structure(config)
+        if isinstance(nest, TransformError):
+            return nest, ("path",) + self.space.path_key(config)
+        return nest, nest.structure_key()
+
+    def _evaluate_prepped(
+        self,
+        items: Sequence[tuple[Configuration, "LoopNest | TransformError", tuple]],
+    ) -> list[Result]:
+        """Evaluate (config, nest-or-error, key) triples, order-preserving.
+
+        Cache hits (including duplicates *within* the batch) are replayed
+        without touching the backend; the remaining unique misses go to
+        ``Backend.evaluate_many`` together with their pre-derived nests.
+        """
+        results: list[Result | None] = [None] * len(items)
+        pending: list[tuple[int, Configuration, LoopNest]] = []
+        pending_key_of: dict[tuple, int] = {}
+        aliases: list[tuple[int, tuple]] = []
+        cache = self._results if self.cache else None
+        for i, (config, nest, key) in enumerate(items):
+            if isinstance(nest, TransformError):
+                # No structure → compile_error red node, cached by path.
+                if cache is not None:
+                    hit = cache.get(key)
+                    if hit is not None:
+                        self.stats.hits += 1
+                        results[i] = hit
+                        continue
+                self.stats.misses += 1
+                res = Result("compile_error", note=str(nest))
+                if cache is not None:
+                    cache[key] = res
+                results[i] = res
+                continue
+            if cache is not None:
+                hit = cache.get(key)
+                if hit is not None:
+                    self.stats.hits += 1
+                    results[i] = hit
+                    continue
+                if key in pending_key_of:
+                    self.stats.hits += 1
+                    aliases.append((i, key))
+                    continue
+                pending_key_of[key] = i
+            self.stats.misses += 1
+            pending.append((i, config, nest))
+
+        if pending:
+            backend_results = self.backend.evaluate_many(
+                self.workload,
+                [c for _, c, _ in pending],
+                nests=[n for _, _, n in pending],
+            )
+            for (i, _, nest), res in zip(pending, backend_results):
+                results[i] = res
+                if cache is not None:
+                    cache[nest.structure_key()] = res
+        if cache is not None:
+            for i, key in aliases:
+                results[i] = cache[key]
+        return results  # type: ignore[return-value]
+
+    def evaluate_many(self, configs: Sequence[Configuration]) -> list[Result]:
+        """Evaluate a batch, order-preserving (no dedup, no reordering)."""
+        return self._evaluate_prepped(
+            [(c, *self._prep(c)) for c in configs]
+        )
+
+    def sweep(
+        self,
+        configs: Sequence[Configuration],
+        room: int | None = None,
+    ) -> list[tuple[Configuration, Result]]:
+        """Fused child sweep: dedup + (optional) surrogate ordering +
+        batched evaluation in one pass — the greedy driver's hot loop.
+
+        Each configuration's nest is derived once and its canonical key
+        doubles as the result-cache key.  ``room`` truncates *after*
+        dedup/ordering, so a budget cap is spent on unseen (and, with
+        surrogate ordering, most promising) children only.
+        """
+        picked: list[tuple[Configuration, "LoopNest | TransformError", tuple]] = []
+        dedup = self.space.dedup
+        seen = self._seen
+        batch_seen: set[tuple] = set()
+        for c in configs:
+            nest, key = self._prep(c)
+            if dedup:
+                if key in seen or key in batch_seen:
+                    self.stats.deduped += 1
+                    continue
+                batch_seen.add(key)
+            picked.append((c, nest, key))
+
+        if self.surrogate_order:
+            picked.sort(key=lambda item: self._surrogate_score(item[1]))
+
+        if room is not None:
+            picked = picked[:room]
+        if dedup:
+            # only children that are actually evaluated become globally seen:
+            # a budget-truncated child must stay claimable by a later sweep
+            # (e.g. a shared engine injected across runs)
+            seen.update(key for _, _, key in picked)
+        return [
+            (c, r)
+            for (c, _, _), r in zip(picked, self._evaluate_prepped(picked))
+        ]
+
+    # -- reporting -------------------------------------------------------------
+
+    def stats_dict(self) -> dict[str, float]:
+        # _results also holds ("path", ...)-keyed red compile_error entries;
+        # count only genuinely measured structures
+        return {
+            "hits": self.stats.hits,
+            "misses": self.stats.misses,
+            "deduped": self.stats.deduped,
+            "hit_rate": round(self.stats.hit_rate, 4),
+            "unique_structures": sum(
+                1 for k in self._results if not (k and k[0] == "path")
+            ),
+        }

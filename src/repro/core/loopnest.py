@@ -50,6 +50,19 @@ class Loop:
     unroll: int = 1                 # unroll factor (beyond-paper transformation)
     vectorize: bool = False         # map to VPU lanes (beyond-paper)
 
+    def skey(self) -> tuple:
+        """This loop's component of ``LoopNest.structure_key()`` (name-free).
+
+        Memoized per (frozen) instance: derived nests share the Loop objects
+        of the loops a transformation did not touch, so a child nest's
+        structure key reuses the parent's per-loop tuples."""
+        k = self.__dict__.get("_skey")
+        if k is None:
+            k = (self.origin, self.trips, self.parallel, self.is_point,
+                 self.span, self.unroll, self.vectorize)
+            object.__setattr__(self, "_skey", k)
+        return k
+
     def pretty(self) -> str:
         tags = []
         if self.parallel:
@@ -99,17 +112,28 @@ class LoopNest:
 
     # -- structure queries ---------------------------------------------------
 
+    def _name_index(self) -> dict[str, int]:
+        """name → position map, memoized per (frozen) instance: parent nests
+        are shared by the incremental derivation cache, so every child
+        transformation applied to the same parent reuses one map instead of
+        scanning the loop tuple per name."""
+        m = self.__dict__.get("_name_idx")
+        if m is None:
+            m = {l.name: k for k, l in enumerate(self.loops)}
+            object.__setattr__(self, "_name_idx", m)
+        return m
+
     def loop(self, name: str) -> Loop:
-        for l in self.loops:
-            if l.name == name:
-                return l
-        raise KeyError(f"no loop named {name!r} in nest {self.name}")
+        k = self._name_index().get(name)
+        if k is None:
+            raise KeyError(f"no loop named {name!r} in nest {self.name}")
+        return self.loops[k]
 
     def index_of(self, name: str) -> int:
-        for k, l in enumerate(self.loops):
-            if l.name == name:
-                return k
-        raise KeyError(name)
+        k = self._name_index().get(name)
+        if k is None:
+            raise KeyError(name)
+        return k
 
     def bands(self) -> list[tuple[Loop, ...]]:
         """Maximal runs of transformable (non-parallelized) loops.
@@ -175,12 +199,16 @@ class LoopNest:
     def structure_key(self) -> tuple:
         """Canonical key of the *resulting* structure — used for DAG dedup
         (paper §VIII future work: merge equal configurations reached through
-        different paths)."""
-        return tuple(
-            (l.origin, l.trips, l.parallel, l.is_point, l.span, l.unroll,
-             l.vectorize)
-            for l in self.loops
-        )
+        different paths) and as the evaluation engine's result-cache key.
+
+        Memoized on the instance: the nest is frozen, so the key can never go
+        stale, and dedup-heavy drivers query it many times per node.
+        """
+        key = self.__dict__.get("_structure_key")
+        if key is None:
+            key = tuple(l.skey() for l in self.loops)
+            object.__setattr__(self, "_structure_key", key)
+        return key
 
     def pretty(self) -> str:
         return f"{self.name}: " + " / ".join(l.pretty() for l in self.loops)

@@ -25,8 +25,9 @@ Backends:
 from __future__ import annotations
 
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Sequence
 
 import numpy as np
 
@@ -51,21 +52,86 @@ class Result:
 
 
 class Backend:
+    """Maps (workload, configuration) → :class:`Result`.
+
+    ``evaluate`` accepts an optional pre-derived ``nest`` so callers that
+    already hold the post-transformation structure (the evaluation engine's
+    incremental prefix cache) skip the replay-from-root; legality is always
+    re-checked against the nest actually measured.  ``evaluate_many`` is the
+    batched entry point — sequential here, thread-pooled in the backends where
+    compile+measure dominates (see :class:`_ThreadedEvalMixin`).
+    """
+
     name = "abstract"
 
-    def evaluate(self, workload: Workload, config: Configuration) -> Result:
-        try:
-            nest = config.apply(workload.nest())
-        except TransformError as e:
-            return Result("compile_error", note=str(e))
+    def evaluate(
+        self,
+        workload: Workload,
+        config: Configuration,
+        nest: LoopNest | None = None,
+    ) -> Result:
+        if nest is None:
+            try:
+                nest = config.apply(workload.nest())
+            except TransformError as e:
+                return Result("compile_error", note=str(e))
         try:
             check_legal(nest)
         except IllegalTransform as e:
             return Result("illegal", note=str(e))
         return self._measure(workload, nest)
 
+    def evaluate_many(
+        self,
+        workload: Workload,
+        configs: Sequence[Configuration],
+        nests: Sequence[LoopNest | None] | None = None,
+    ) -> list[Result]:
+        """Evaluate a batch of configurations, preserving order."""
+        if nests is None:
+            nests = [None] * len(configs)
+        return [self.evaluate(workload, c, nest=n) for c, n in zip(configs, nests)]
+
     def _measure(self, workload: Workload, nest: LoopNest) -> Result:
         raise NotImplementedError
+
+
+class _ThreadedEvalMixin:
+    """Thread-pooled ``evaluate_many`` for backends whose per-experiment cost
+    is dominated by compile+measure (XLA tracing/compilation, Pallas interpret
+    verification) rather than Python work.
+
+    ``max_workers`` gates the pool: ``<= 1`` keeps the sequential path.  Note
+    for wall-clock timing backends: concurrent timed runs contend for cores
+    and skew measurements, so :class:`WallclockBackend` defaults to
+    ``max_workers=1`` (opt in explicitly when compile time dominates run
+    time); :class:`PallasBackend` scores with the deterministic TPU cost model
+    and only *verifies* concurrently, so its pool is on by default.
+    """
+
+    max_workers: int = 1
+
+    def evaluate_many(
+        self,
+        workload: Workload,
+        configs: Sequence[Configuration],
+        nests: Sequence[LoopNest | None] | None = None,
+    ) -> list[Result]:
+        if nests is None:
+            nests = [None] * len(configs)
+        if len(configs) <= 1 or self.max_workers <= 1:
+            return [
+                self.evaluate(workload, c, nest=n)
+                for c, n in zip(configs, nests)
+            ]
+        with ThreadPoolExecutor(
+            max_workers=min(self.max_workers, len(configs))
+        ) as pool:
+            futs = [
+                pool.submit(self.evaluate, workload, c, nest=n)
+                for c, n in zip(configs, nests)
+            ]
+            return [f.result() for f in futs]
 
 
 @dataclass
@@ -87,15 +153,26 @@ class CostModelBackend(Backend):
 
 
 @dataclass
-class WallclockBackend(Backend):
-    """Real XLA:CPU execution at ``scale`` of the PolyBench extents."""
+class WallclockBackend(_ThreadedEvalMixin, Backend):
+    """Real XLA:CPU execution at ``scale`` of the PolyBench extents.
+
+    ``nest`` hints from the engine are ignored: the measured nest must be
+    re-derived against the *scaled* extents, so each unique structure pays one
+    full replay here (amortized by the engine's structural result cache).
+    """
 
     scale: float = 0.25
     reps: int = 3
     timeout_s: float = 20.0
     name: str = "wallclock"
+    max_workers: int = 1        # concurrent timing skews wall-clock results
 
-    def evaluate(self, workload: Workload, config: Configuration) -> Result:
+    def evaluate(
+        self,
+        workload: Workload,
+        config: Configuration,
+        nest: LoopNest | None = None,
+    ) -> Result:
         w = workload.scaled(self.scale)
         try:
             nest = config.apply(w.nest())
@@ -131,16 +208,18 @@ class WallclockBackend(Backend):
 
 
 @dataclass
-class PallasBackend(Backend):
+class PallasBackend(_ThreadedEvalMixin, Backend):
     """Builds the Pallas kernel (interpret mode), checks correctness against
     the jnp oracle at a reduced scale, rejects VMEM-overflowing tiles, and
-    scores with the TPU cost model."""
+    scores with the TPU cost model.  The reported time is deterministic (cost
+    model), so batched verification can run on a thread pool safely."""
 
     machine: Machine = TPU_V5E
     scale: float = 0.05
     vmem_limit: int = 128 * 1024 * 1024
     verify: bool = True
     name: str = "pallas"
+    max_workers: int = 4
 
     def _measure(self, workload: Workload, nest: LoopNest) -> Result:
         try:

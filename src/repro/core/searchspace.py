@@ -17,7 +17,19 @@ structure after the parent's transformations:
 The space is conceptually infinite (stacked tilings model multi-level caches);
 deduplication of configurations reachable via multiple paths (the DAG property,
 §III) is implemented via canonical structure keys — the paper lists this as
-future work, we enable it behind ``dedup=True``.
+future work; it is on by default (``dedup=True``) now that
+:meth:`SearchSpace.structure` derives nests incrementally.
+
+Cache invariants (shared with :mod:`repro.core.evaluation`):
+
+* ``_nest_cache`` maps a configuration's *path key* — the tuple of
+  ``Transformation.key()`` of its sequence — to the derived :class:`LoopNest`
+  (or the :class:`TransformError` it raises).  Deriving a depth-``d`` child
+  applies **one** transformation to the parent's cached nest instead of
+  replaying ``d+1`` from the root, which makes :meth:`canonical_key` (and the
+  drivers' dedup sets built on it) near-free.
+* Entries are immutable: a path key always derives the same structure, so the
+  cache is never invalidated, only grown.
 """
 
 from __future__ import annotations
@@ -57,6 +69,15 @@ class Configuration:
     def apply(self, root: LoopNest) -> LoopNest:
         return apply_all(root, self.transformations)
 
+    def path_key(self) -> tuple:
+        """Identity of the derivation *path* (memoized; cf. the structural
+        ``canonical_key`` which identifies the resulting schedule)."""
+        k = self.__dict__.get("_path_key")
+        if k is None:
+            k = tuple(t.key() for t in self.transformations)
+            object.__setattr__(self, "_path_key", k)
+        return k
+
     def __len__(self) -> int:
         return len(self.transformations)
 
@@ -74,7 +95,9 @@ class SearchSpace:
     enable_vectorize: bool = False       # beyond-paper
     unroll_factors: tuple[int, ...] = DEFAULT_UNROLL_FACTORS
     max_transformations: int | None = None   # budget cap (space is infinite)
-    dedup: bool = False                  # beyond-paper DAG merging (§VIII)
+    dedup: bool = True                   # beyond-paper DAG merging (§VIII);
+                                         # near-free with the incremental
+                                         # structure cache, hence the default
     # Tractability bounds (paper §III: "Transformations that have parameters
     # contribute significantly to the number of children").  A fully tiled
     # 6-loop band would otherwise derive 24 405 tilings and 12!−1 interchanges.
@@ -83,13 +106,63 @@ class SearchSpace:
     max_tile_depth: int = 3              # dims tiled by one Tile step
     max_perm_band: int = 6               # full n!−1 permutations up to this width
     _derive_cache: dict = field(default_factory=dict, repr=False)
+    _nest_cache: dict = field(default_factory=dict, repr=False)
+
+    @staticmethod
+    def path_key(config: Configuration) -> tuple:
+        """Identity of the *derivation path* (not the resulting structure)."""
+        return config.path_key()
+
+    def try_structure(self, config: Configuration) -> "LoopNest | TransformError":
+        """Derive the post-transformation nest incrementally, without raising.
+
+        The nest of every prefix of ``config`` is cached by path key, so a
+        depth-``d`` child costs one ``Transformation.apply`` on the parent's
+        cached nest instead of a ``d+1``-step replay from the root.  A prefix
+        that fails structurally caches its :class:`TransformError`; returning
+        (rather than raising) the cached error keeps red paths — the majority
+        of deep children — free of Python exception overhead on re-query.
+        """
+        key = self.path_key(config)
+        cache = self._nest_cache
+        hit = cache.get(key)
+        if hit is None:
+            if not config.transformations:
+                hit = self.root
+            else:
+                # fast path: the parent's nest is keyed by the path prefix —
+                # drivers always derive children of an already-derived parent
+                parent = cache.get(key[:-1])
+                if parent is None:
+                    parent = self.try_structure(
+                        Configuration(config.transformations[:-1])
+                    )
+                if isinstance(parent, TransformError):
+                    hit = parent        # a broken prefix breaks the config
+                else:
+                    hit = config.transformations[-1].try_apply(parent)
+            cache[key] = hit
+        return hit
 
     def structure(self, config: Configuration) -> LoopNest:
-        return config.apply(self.root)
+        """Raising wrapper of :meth:`try_structure` (the public API)."""
+        hit = self.try_structure(config)
+        if isinstance(hit, TransformError):
+            raise hit
+        return hit
 
     # -- child derivation ----------------------------------------------------
 
-    def children(self, config: Configuration) -> list[Configuration]:
+    def children(
+        self, config: Configuration, dedup: bool | None = None
+    ) -> list[Configuration]:
+        """Derive the children of ``config``.
+
+        ``dedup`` overrides the space default for this call: the evaluation
+        engine's drivers pass ``dedup=False`` because their run-global
+        ``seen`` set subsumes the per-call structural dedup (one canonical-key
+        pass instead of two — the dedup output order is identical either way).
+        """
         if (
             self.max_transformations is not None
             and len(config) >= self.max_transformations
@@ -107,7 +180,7 @@ class SearchSpace:
             ts = tuple(self._derive(nest))
             self._derive_cache[key] = ts
         out = [config.child(t) for t in ts]
-        if self.dedup:
+        if self.dedup if dedup is None else dedup:
             out = self._dedup(out)
         return out
 

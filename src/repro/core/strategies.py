@@ -9,30 +9,46 @@ mctree") and cites ProTuner's MCTS results.  We implement:
   reward, lazy expansion, evaluation-as-rollout, reward backpropagation.  This
   escapes the "parallelize the outermost loop first" local minimum because a
   tile-first subtree keeps receiving visits from the exploration term;
-* :func:`run_beam`     — beam search over tree levels (HalideTuner successor);
-* :func:`run_random`   — uniform random walks (baseline for the comparison).
+* :func:`run_beam`     — beam search over tree levels (HalideTuner successor),
+  dispatching each level as one batched evaluation;
+* :func:`run_random`   — uniform random walks (baseline for the comparison),
+  recording every step of a walk so the experiment tree has true parent edges.
 
-All strategies emit the same :class:`TuningLog` so the benchmark harness plots
-them together.
+Every strategy routes measurement through one
+:class:`~repro.core.evaluation.EvaluationEngine` per run: incremental
+schedule derivation, the structural result cache (a schedule reached through
+two different transformation orders is measured once), and batched backend
+dispatch all live there — no strategy owns an inline ``evaluate()`` closure
+anymore.  Greedy, MCTS and beam also share the engine's structural dedup
+``seen`` set (eager ``sweep``, lazy ``claim``); random walks instead dedup by
+derivation path so repeat visits reuse logged experiments.  All strategies
+emit the same :class:`TuningLog` (with engine cache counters) so the
+benchmark harness plots them together.
 """
 
 from __future__ import annotations
 
 import math
 import random
-import time
 from dataclasses import dataclass, field
 
 from .autotuner import Autotuner, Experiment, TuningLog
+from .evaluation import EvaluationEngine
 from .measure import Backend
 from .searchspace import Configuration, SearchSpace
 from .workloads import Workload
 
 
 def run_greedy(
-    workload: Workload, space: SearchSpace, backend: Backend, budget: int = 400
+    workload: Workload,
+    space: SearchSpace,
+    backend: Backend,
+    budget: int = 400,
+    cache: bool = True,
+    surrogate_order: bool = False,
 ) -> TuningLog:
-    return Autotuner(workload, space, backend, max_experiments=budget).run()
+    return Autotuner(workload, space, backend, max_experiments=budget,
+                     cache=cache, surrogate_order=surrogate_order).run()
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +84,7 @@ def run_mcts(
     pw_c: float = 4.0,
     pw_alpha: float = 0.6,
     seed: int = 0,
+    cache: bool = True,
 ) -> TuningLog:
     """UCT with progressive widening.
 
@@ -76,23 +93,30 @@ def run_mcts(
     root.  Progressive widening caps the children considered at a node to
     ``pw_c · visits^pw_alpha``, forcing depth — this is what lets the search
     reach tile→parallelize compositions the greedy driver never sees.
+
+    Transposition handling rides on the engine: nodes that re-derive an
+    already-measured structure are cache hits (measured once, replayed), and
+    the engine's ``seen`` set prunes structurally duplicate siblings at
+    expansion time.
     """
     rng = random.Random(seed)
+    engine = EvaluationEngine(workload, space, backend, cache=cache)
     log = TuningLog(workload=workload.name, backend=backend.name)
-    seen: set[tuple] = set()
 
-    def evaluate(config: Configuration, parent_num: int | None) -> Experiment:
-        res = backend.evaluate(workload, config)
-        exp = Experiment(number=len(log.experiments), config=config, result=res,
-                         parent=parent_num)
+    def record(config: Configuration, parent_num: int | None) -> Experiment:
+        exp = Experiment(number=len(log.experiments), config=config,
+                         result=engine.evaluate(config), parent=parent_num)
         log.experiments.append(exp)
         return exp
 
-    base = evaluate(Configuration(), None)
+    baseline = Configuration()
+    base = record(baseline, None)
+    engine.seed_seen(baseline)
     if not base.result.ok:
+        log.cache = engine.stats_dict()
         return log
     t0 = base.result.time_s
-    root = _Node(config=Configuration(), time_s=t0, visits=1, value=1.0, number=0)
+    root = _Node(config=baseline, time_s=t0, visits=1, value=1.0, number=0)
 
     def reward(time_s: float | None) -> float:
         if time_s is None:
@@ -101,18 +125,10 @@ def run_mcts(
 
     def ensure_untried(node: _Node) -> None:
         if node.untried is None:
-            kids = space.children(node.config)
-            if space.dedup:
-                fresh = []
-                for k in kids:
-                    try:
-                        key = space.canonical_key(k)
-                    except Exception:  # noqa: BLE001
-                        key = ("path",) + tuple(t.key() for t in k.transformations)
-                    if key not in seen:
-                        seen.add(key)
-                        fresh.append(k)
-                kids = fresh
+            # dedup happens lazily via engine.claim() at expansion time —
+            # deep nodes derive thousands of children, and progressive
+            # widening expands only a handful of them.
+            kids = space.children(node.config, dedup=False)
             rng.shuffle(kids)
             node.untried = kids
 
@@ -138,9 +154,12 @@ def run_mcts(
             break
         if node.dead:
             continue
-        # 2. expansion: evaluate one untried child (evaluation = rollout)
+        # 2. expansion: evaluate one untried child (evaluation = rollout);
+        # structurally duplicate siblings are skipped without spending budget
         config = node.untried.pop()
-        exp = evaluate(config, node.number)
+        if not engine.claim(config):
+            continue
+        exp = record(config, node.number)
         child = _Node(config=config, parent=node,
                       time_s=exp.result.time_s if exp.result.ok else None,
                       dead=not exp.result.ok, number=exp.number)
@@ -152,6 +171,7 @@ def run_mcts(
             n.visits += 1
             n.value += r
             n = n.parent
+    log.cache = engine.stats_dict()
     return log
 
 
@@ -166,29 +186,54 @@ def run_beam(
     backend: Backend,
     budget: int = 400,
     width: int = 4,
+    cache: bool = True,
+    surrogate_order: bool = False,
 ) -> TuningLog:
+    """Beam search over tree levels.
+
+    Each level's surviving frontier expands all its children, which are
+    dispatched as **one** ``evaluate_many`` batch (thread-pooled on
+    compile+measure backends).  Children proposed by several beam parents
+    are structurally duplicate: the engine's ``claim`` drops them (first
+    parent wins) so they consume no budget.
+    """
+    engine = EvaluationEngine(workload, space, backend, cache=cache,
+                              surrogate_order=surrogate_order)
     log = TuningLog(workload=workload.name, backend=backend.name)
 
-    def evaluate(config: Configuration, parent_num: int | None) -> Experiment:
-        res = backend.evaluate(workload, config)
-        exp = Experiment(number=len(log.experiments), config=config, result=res,
-                         parent=parent_num)
+    def record(config: Configuration, result, parent_num: int | None) -> Experiment:
+        exp = Experiment(number=len(log.experiments), config=config,
+                         result=result, parent=parent_num)
         log.experiments.append(exp)
         return exp
 
-    base = evaluate(Configuration(), None)
+    baseline = Configuration()
+    base = record(baseline, engine.evaluate(baseline), None)
+    engine.seed_seen(baseline)
     frontier = [base] if base.result.ok else []
     while frontier and len(log.experiments) < budget:
-        nxt: list[Experiment] = []
+        batch: list[Configuration] = []
+        parents: list[int] = []
         for parent in frontier:
-            for child in space.children(parent.config):
-                if len(log.experiments) >= budget:
-                    break
-                exp = evaluate(child, parent.number)
-                if exp.result.ok:
-                    nxt.append(exp)
+            kids = engine.order_children(
+                space.children(parent.config, dedup=False)
+            )
+            for k in kids:
+                if engine.claim(k):
+                    batch.append(k)
+                    parents.append(parent.number)
+        room = budget - len(log.experiments)
+        batch, parents = batch[:room], parents[:room]
+        nxt: list[Experiment] = []
+        for config, parent_num, res in zip(
+            batch, parents, engine.evaluate_many(batch)
+        ):
+            exp = record(config, res, parent_num)
+            if exp.result.ok:
+                nxt.append(exp)
         nxt.sort(key=lambda e: e.result.time_s)
         frontier = nxt[:width]
+    log.cache = engine.stats_dict()
     return log
 
 
@@ -204,28 +249,55 @@ def run_random(
     budget: int = 400,
     max_depth: int = 4,
     seed: int = 0,
+    cache: bool = True,
 ) -> TuningLog:
+    """Uniform random walks from the root.
+
+    Every *step* of a walk is recorded as an experiment whose parent is the
+    previous step, so the experiment tree carries the true parent chain (the
+    seed code attributed every walk endpoint to the baseline, which made the
+    tree plots wrong).  A walk re-entering an already-logged derivation path
+    reuses that experiment as the parent instead of re-logging it, and the
+    engine's structural cache makes the shared prefixes free to re-measure.
+    """
     rng = random.Random(seed)
+    engine = EvaluationEngine(workload, space, backend, cache=cache)
     log = TuningLog(workload=workload.name, backend=backend.name)
 
-    def evaluate(config: Configuration, parent_num: int | None) -> Experiment:
-        res = backend.evaluate(workload, config)
-        exp = Experiment(number=len(log.experiments), config=config, result=res,
-                         parent=parent_num)
+    def record(config: Configuration, parent_num: int | None) -> Experiment:
+        exp = Experiment(number=len(log.experiments), config=config,
+                         result=engine.evaluate(config), parent=parent_num)
         log.experiments.append(exp)
         return exp
 
-    evaluate(Configuration(), None)
-    while len(log.experiments) < budget:
+    base = record(Configuration(), None)
+    # derivation path → experiment number (walks share logged prefixes)
+    logged: dict[tuple, int] = {space.path_key(Configuration()): base.number}
+    stalls = 0
+    while len(log.experiments) < budget and stalls < 1000:
+        before = len(log.experiments)
         config = Configuration()
-        parent_num = 0
+        parent_num = base.number
         depth = rng.randint(1, max_depth)
         for _ in range(depth):
             kids = space.children(config)
             if not kids:
                 break
             config = rng.choice(kids)
-        evaluate(config, parent_num)
+            key = space.path_key(config)
+            known = logged.get(key)
+            if known is None:
+                exp = record(config, parent_num)
+                logged[key] = exp.number
+                parent_num = exp.number
+                if len(log.experiments) >= budget:
+                    break
+            else:
+                parent_num = known
+        # a walk that only revisited logged paths adds nothing; bail out when
+        # the (practically infinite) space is locally exhausted
+        stalls = stalls + 1 if len(log.experiments) == before else 0
+    log.cache = engine.stats_dict()
     return log
 
 

@@ -29,12 +29,35 @@ class Transformation:
     def pragma(self) -> str:
         raise NotImplementedError
 
-    def apply(self, nest: LoopNest) -> LoopNest:
+    def try_apply(self, nest: LoopNest) -> "LoopNest | TransformError":
+        """Structural application without Python exceptions: returns the
+        rewritten nest, or the :class:`TransformError` describing why the
+        transformation is inapplicable.  The evaluation engine derives every
+        child of every expanded node through this path, and most deep
+        children are red — a raise/catch pair per child is measurable."""
         raise NotImplementedError
 
+    def apply(self, nest: LoopNest) -> LoopNest:
+        r = self.try_apply(nest)
+        if isinstance(r, TransformError):
+            raise r
+        return r
+
     def key(self) -> tuple:
-        """Order-insensitive identity component for DAG dedup."""
-        return (type(self).__name__,) + dataclasses.astuple(self)
+        """Order-insensitive identity component for DAG dedup.
+
+        Memoized per (frozen) instance and built from the fields directly:
+        ``dataclasses.astuple`` deep-copies recursively, and this is the
+        single hottest call of the dedup path (every path key of every
+        configuration is a tuple of these).
+        """
+        k = self.__dict__.get("_key")
+        if k is None:
+            k = (type(self).__name__,) + tuple(
+                getattr(self, f.name) for f in dataclasses.fields(self)
+            )
+            object.__setattr__(self, "_key", k)
+        return k
 
 
 @dataclass(frozen=True)
@@ -56,26 +79,39 @@ class Tile(Transformation):
             f"tile sizes({','.join(map(str, self.sizes))})"
         )
 
-    def apply(self, nest: LoopNest) -> LoopNest:
+    def try_apply(self, nest: LoopNest) -> "LoopNest | TransformError":
         if len(self.loops) != len(self.sizes):
-            raise TransformError("tile: |loops| != |sizes|")
+            return TransformError("tile: |loops| != |sizes|")
         idx = [nest.index_of(n) for n in self.loops]
         if idx != list(range(idx[0], idx[0] + len(idx))):
-            raise TransformError("tile: loops must form a contiguous sub-band")
+            return TransformError("tile: loops must form a contiguous sub-band")
         band = [nest.loops[k] for k in idx]
         if any(l.parallel for l in band):
-            raise TransformError("tile: cannot tile a parallelized loop")
+            return TransformError("tile: cannot tile a parallelized loop")
         floors: list[Loop] = []
         points: list[Loop] = []
-        cur = nest
+        # Batched fresh naming: semantically identical to calling
+        # nest.fresh_name per loop (the counter bumps on every draw, collision
+        # check is against the pre-tiling loop names), but with one LoopNest
+        # allocation at the end instead of two per tiled loop — Tile.apply is
+        # the hot allocation site of incremental child derivation.
+        taken = {l.name for l in nest.loops}
+        fresh = nest._fresh
+
+        def fresh_nm(base: str) -> str:
+            nonlocal fresh
+            nm = f"{base}_{fresh}" if base in taken else base
+            fresh += 1
+            return nm
+
         for l, sz in zip(band, self.sizes):
             if sz >= l.trips:
                 # Polly would emit a pass-failed warning → -Werror → red node.
-                raise TransformError(
+                return TransformError(
                     f"tile: size {sz} >= trip count {l.trips} of loop {l.name}"
                 )
-            fname, cur = cur.fresh_name(l.name + "1")
-            pname, cur = cur.fresh_name(l.name + "2")
+            fname = fresh_nm(l.name + "1")
+            pname = fresh_nm(l.name + "2")
             # ceil-div floor trips: the compiler adds remainder handling
             # transparently (paper §III).  Spans track the element stride so
             # stacked (multi-level) tilings lower exactly.
@@ -93,7 +129,7 @@ class Tile(Transformation):
             + points
             + list(nest.loops[idx[-1] + 1 :])
         )
-        return cur.with_loops(new)
+        return replace(nest, loops=tuple(new), _fresh=fresh)
 
 
 @dataclass(frozen=True)
@@ -109,14 +145,14 @@ class Interchange(Transformation):
             f"interchange permutation({','.join(self.permutation)})"
         )
 
-    def apply(self, nest: LoopNest) -> LoopNest:
+    def try_apply(self, nest: LoopNest) -> "LoopNest | TransformError":
         if sorted(self.loops) != sorted(self.permutation):
-            raise TransformError("interchange: permutation is not a permutation")
+            return TransformError("interchange: permutation is not a permutation")
         idx = [nest.index_of(n) for n in self.loops]
         if idx != list(range(idx[0], idx[0] + len(idx))):
-            raise TransformError("interchange: loops must be contiguous")
+            return TransformError("interchange: loops must be contiguous")
         if any(nest.loops[k].parallel for k in idx):
-            raise TransformError("interchange: loop already parallelized")
+            return TransformError("interchange: loop already parallelized")
         by_name = {nest.loops[k].name: nest.loops[k] for k in idx}
         new = list(nest.loops)
         for off, nm in enumerate(self.permutation):
@@ -139,11 +175,11 @@ class Parallelize(Transformation):
     def pragma(self) -> str:
         return f"#pragma clang loop({self.loop}) parallelize_thread"
 
-    def apply(self, nest: LoopNest) -> LoopNest:
+    def try_apply(self, nest: LoopNest) -> "LoopNest | TransformError":
         k = nest.index_of(self.loop)
         l = nest.loops[k]
         if l.parallel:
-            raise TransformError("parallelize: already parallel")
+            return TransformError("parallelize: already parallel")
         new = list(nest.loops)
         new[k] = replace(l, parallel=True)
         return nest.with_loops(new)
@@ -161,15 +197,15 @@ class Unroll(Transformation):
     def pragma(self) -> str:
         return f"#pragma clang loop({self.loop}) unroll factor({self.factor})"
 
-    def apply(self, nest: LoopNest) -> LoopNest:
+    def try_apply(self, nest: LoopNest) -> "LoopNest | TransformError":
         k = nest.index_of(self.loop)
         l = nest.loops[k]
         if l.parallel:
-            raise TransformError("unroll: loop is parallelized")
+            return TransformError("unroll: loop is parallelized")
         if l.unroll > 1:
-            raise TransformError("unroll: already unrolled")
+            return TransformError("unroll: already unrolled")
         if self.factor >= l.trips:
-            raise TransformError("unroll: factor >= trip count")
+            return TransformError("unroll: factor >= trip count")
         new = list(nest.loops)
         new[k] = replace(l, unroll=self.factor)
         return nest.with_loops(new)
@@ -185,13 +221,13 @@ class Vectorize(Transformation):
     def pragma(self) -> str:
         return f"#pragma clang loop({self.loop}) vectorize"
 
-    def apply(self, nest: LoopNest) -> LoopNest:
+    def try_apply(self, nest: LoopNest) -> "LoopNest | TransformError":
         k = nest.index_of(self.loop)
         l = nest.loops[k]
         if l.parallel or l.vectorize:
-            raise TransformError("vectorize: loop parallelized or already vectorized")
+            return TransformError("vectorize: loop parallelized or already vectorized")
         if k != len(nest.loops) - 1:
-            raise TransformError("vectorize: only the innermost loop")
+            return TransformError("vectorize: only the innermost loop")
         new = list(nest.loops)
         new[k] = replace(l, vectorize=True)
         return nest.with_loops(new)

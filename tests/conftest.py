@@ -1,0 +1,99 @@
+"""Shared test configuration: optional-dependency shim for ``hypothesis``.
+
+Several test modules use hypothesis property tests alongside plain pytest
+tests.  The container does not ship ``hypothesis``, and an unconditional
+``from hypothesis import given, ...`` at module scope used to abort collection
+of the *whole module* — including the non-property tests.
+
+This conftest installs a minimal stub into ``sys.modules`` when the real
+package is missing:
+
+* ``@given(...)`` replaces the test with a skip (reason: hypothesis missing),
+  erasing the original signature so pytest does not mistake strategy arguments
+  for fixtures;
+* ``@settings(...)`` is a no-op decorator;
+* ``strategies`` returns inert strategy placeholders for any constructor
+  (``sampled_from``, ``integers``, ``tuples``, ``permutations``, ...), and
+  ``@st.composite`` wraps the builder without executing its body.
+
+When hypothesis *is* installed, nothing here runs and the property tests
+execute normally.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    import pytest
+
+    class _Strategy:
+        """Inert placeholder for a hypothesis search strategy."""
+
+        def __repr__(self) -> str:  # pragma: no cover - cosmetic
+            return "<hypothesis strategy stub>"
+
+    def _strategy_factory(*_args, **_kwargs) -> _Strategy:
+        return _Strategy()
+
+    strategies = types.ModuleType("hypothesis.strategies")
+
+    def _composite(fn):
+        def build(*_args, **_kwargs) -> _Strategy:
+            return _Strategy()
+
+        build.__name__ = getattr(fn, "__name__", "composite_stub")
+        return build
+
+    strategies.composite = _composite
+    # PEP 562 module __getattr__: every other strategy constructor.
+    strategies.__getattr__ = lambda name: _strategy_factory  # type: ignore[assignment]
+
+    hyp = types.ModuleType("hypothesis")
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            # Deliberately *not* functools.wraps: the original signature's
+            # strategy parameters must not be visible to pytest's fixture
+            # resolution.
+            def _skipped(*args, **kwargs):
+                pytest.skip("hypothesis is not installed")
+
+            _skipped.__name__ = getattr(fn, "__name__", "hypothesis_test")
+            _skipped.__doc__ = getattr(fn, "__doc__", None)
+            return _skipped
+
+        return deco
+
+    def _settings(*args, **_kwargs):
+        if args and callable(args[0]) and not _kwargs:
+            return args[0]  # used as a bare decorator
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def _assume(_condition):  # pragma: no cover - stub for completeness
+        return True
+
+    def _example(*_args, **_kwargs):  # pragma: no cover - stub
+        def deco(fn):
+            return fn
+
+        return deco
+
+    hyp.given = _given
+    hyp.settings = _settings
+    hyp.assume = _assume
+    hyp.example = _example
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, filter_too_much=None, data_too_large=None
+    )
+    hyp.strategies = strategies
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,221 @@
+"""Evaluation-engine tests: structural caching, incremental derivation,
+batched dispatch, dedup seeding, parent attribution, and cache-on/off
+determinism."""
+
+import json
+
+import pytest
+
+from repro.core import (
+    GEMM,
+    Backend,
+    Configuration,
+    CostModelBackend,
+    EvaluationEngine,
+    Interchange,
+    Parallelize,
+    Result,
+    SearchSpace,
+    Tile,
+)
+from repro.core.measure import _ThreadedEvalMixin
+from repro.core.strategies import run_greedy, run_mcts, run_random
+
+
+def make_engine(**kw):
+    space = SearchSpace(root=GEMM.nest())
+    return EvaluationEngine(GEMM, space, CostModelBackend(), **kw)
+
+
+PAR_THEN_TILE = (Configuration()
+                 .child(Parallelize(loop="i"))
+                 .child(Tile(loops=("j", "k"), sizes=(64, 64))))
+TILE_THEN_PAR = (Configuration()
+                 .child(Tile(loops=("j", "k"), sizes=(64, 64)))
+                 .child(Parallelize(loop="i")))
+
+
+class TestStructuralCache:
+    def test_two_derivation_orders_hit_once(self):
+        """parallelize(i);tile(j,k) ≡ tile(j,k);parallelize(i): the second
+        derivation order must replay the first's measurement."""
+        eng = make_engine()
+        r1 = eng.evaluate(PAR_THEN_TILE)
+        assert eng.stats.misses == 1 and eng.stats.hits == 0
+        r2 = eng.evaluate(TILE_THEN_PAR)
+        assert eng.stats.misses == 1 and eng.stats.hits == 1
+        assert r1 == r2
+
+    def test_intra_batch_duplicates_measured_once(self):
+        class CountingBackend(CostModelBackend):
+            calls = 0
+
+            def _measure(self, workload, nest):
+                CountingBackend.calls += 1
+                return super()._measure(workload, nest)
+
+        CountingBackend.calls = 0
+        space = SearchSpace(root=GEMM.nest())
+        eng = EvaluationEngine(GEMM, space, CountingBackend())
+        results = eng.evaluate_many([PAR_THEN_TILE, TILE_THEN_PAR])
+        assert CountingBackend.calls == 1
+        assert results[0] == results[1]
+        assert eng.stats.hits == 1 and eng.stats.misses == 1
+
+    def test_compile_error_cached_by_path(self):
+        eng = make_engine()
+        broken = Configuration().child(Tile(loops=("i",), sizes=(4096,)))
+        r1 = eng.evaluate(broken)
+        r2 = eng.evaluate(broken)
+        assert r1.status == "compile_error" and r2.status == "compile_error"
+        assert eng.stats.hits == 1
+
+    def test_cache_off_always_measures(self):
+        eng = make_engine(cache=False)
+        eng.evaluate(PAR_THEN_TILE)
+        eng.evaluate(TILE_THEN_PAR)
+        assert eng.stats.hits == 0 and eng.stats.misses == 2
+
+
+class TestIncrementalDerivation:
+    def test_incremental_matches_from_root(self):
+        """SearchSpace.structure (prefix-cached, one apply per child) derives
+        the same structure_key as a full replay from the root."""
+        space = SearchSpace(root=GEMM.nest())
+        configs = [
+            Configuration(),
+            PAR_THEN_TILE,
+            TILE_THEN_PAR,
+            Configuration().child(Tile(loops=("i", "j", "k"), sizes=(64, 256, 64))),
+            (Configuration()
+             .child(Tile(loops=("i", "j", "k"), sizes=(256, 256, 256)))
+             .child(Interchange(loops=("i1", "j1", "k1"),
+                                permutation=("k1", "i1", "j1")))
+             .child(Parallelize(loop="k1"))),
+        ]
+        for cfg in configs:
+            inc = space.structure(cfg)
+            full = cfg.apply(GEMM.nest())
+            assert inc.structure_key() == full.structure_key()
+
+    def test_prefix_cache_reused(self):
+        space = SearchSpace(root=GEMM.nest())
+        deep = PAR_THEN_TILE.child(Parallelize(loop="j1"))
+        space.structure(deep)
+        # every prefix of the path is now cached
+        for d in range(len(deep.transformations) + 1):
+            key = space.path_key(Configuration(deep.transformations[:d]))
+            assert key in space._nest_cache
+
+    def test_failed_prefix_propagates(self):
+        from repro.core import TransformError
+        space = SearchSpace(root=GEMM.nest())
+        bad = (Configuration()
+               .child(Tile(loops=("i",), sizes=(4096,)))
+               .child(Parallelize(loop="j")))
+        with pytest.raises(TransformError):
+            space.structure(bad)
+        with pytest.raises(TransformError):   # cached error re-raised
+            space.structure(bad)
+
+
+class TestDeterminism:
+    @staticmethod
+    def _strip_cache(log) -> dict:
+        d = json.loads(log.to_json())
+        d.pop("cache", None)
+        return d
+
+    def test_greedy_cache_on_off_identical(self):
+        a = run_greedy(GEMM, SearchSpace(root=GEMM.nest()),
+                       CostModelBackend(), budget=150, cache=True)
+        b = run_greedy(GEMM, SearchSpace(root=GEMM.nest()),
+                       CostModelBackend(), budget=150, cache=False)
+        assert self._strip_cache(a) == self._strip_cache(b)
+        assert a.cache["hits"] + a.cache["misses"] >= len(a.experiments)
+
+    def test_mcts_cache_on_off_identical(self):
+        a = run_mcts(GEMM, SearchSpace(root=GEMM.nest()),
+                     CostModelBackend(), budget=150, seed=3, cache=True)
+        b = run_mcts(GEMM, SearchSpace(root=GEMM.nest()),
+                     CostModelBackend(), budget=150, seed=3, cache=False)
+        assert self._strip_cache(a) == self._strip_cache(b)
+
+
+class TestDedupSeeding:
+    def test_baseline_structure_never_reevaluated(self):
+        space = SearchSpace(root=GEMM.nest())
+        log = run_greedy(GEMM, space, CostModelBackend(), budget=200)
+        base_key = space.canonical_key(Configuration())
+        for e in log.experiments[1:]:
+            try:
+                key = space.canonical_key(e.config)
+            except Exception:  # noqa: BLE001 — red node, structurally broken
+                continue
+            assert key != base_key, f"experiment {e.number} re-derived baseline"
+
+
+class TestRandomParents:
+    def test_parent_chain_is_true_derivation(self):
+        """Satellite fix: run_random's parents must be the actual derivation
+        chain, not hard-coded experiment 0."""
+        log = run_random(GEMM, SearchSpace(root=GEMM.nest()),
+                         CostModelBackend(), budget=80, seed=1)
+        non_root_parents = 0
+        for e in log.experiments[1:]:
+            assert e.parent is not None and e.parent < e.number
+            parent = log.experiments[e.parent]
+            assert parent.config.transformations == e.config.transformations[:-1]
+            if e.parent != 0:
+                non_root_parents += 1
+        assert non_root_parents > 0      # depth-≥2 walks attribute correctly
+
+
+class TestBatchedBackend:
+    def test_default_evaluate_many_matches_sequential(self):
+        be = CostModelBackend()
+        configs = [Configuration(), PAR_THEN_TILE,
+                   Configuration().child(Parallelize(loop="k"))]   # illegal
+        batch = be.evaluate_many(GEMM, configs)
+        seq = [be.evaluate(GEMM, c) for c in configs]
+        assert batch == seq
+        assert batch[2].status == "illegal"
+
+    def test_thread_pool_preserves_order(self):
+        class SlowBackend(_ThreadedEvalMixin, Backend):
+            name = "slow"
+            max_workers = 4
+
+            def _measure(self, workload, nest):
+                import time
+                time.sleep(0.005 * (len(nest.loops) % 3))
+                return Result("ok", time_s=float(len(nest.loops)))
+
+        be = SlowBackend()
+        configs = [
+            Configuration(),
+            Configuration().child(Tile(loops=("i",), sizes=(64,))),
+            Configuration().child(Tile(loops=("i", "j"), sizes=(64, 64))),
+            Configuration().child(Parallelize(loop="i")),
+        ]
+        got = be.evaluate_many(GEMM, configs)
+        want = [be.evaluate(GEMM, c) for c in configs]
+        assert got == want
+
+
+class TestSurrogateOrder:
+    def test_orders_by_predicted_time(self):
+        eng = make_engine(surrogate_order=True)
+        space = eng.space
+        kids = space.children(Configuration())
+        ordered = eng.order_children(kids)
+        assert sorted(map(id, ordered)) == sorted(map(id, kids))
+        # evaluating in surrogate order yields non-decreasing predicted times
+        # for the legal prefix (CostModelBackend == the surrogate)
+        times = [r.time_s for r in eng.evaluate_many(ordered) if r.ok]
+        assert times == sorted(times)
+
+    def test_off_by_default_preserves_order(self):
+        eng = make_engine()
+        kids = eng.space.children(Configuration())
+        assert eng.order_children(kids) == kids
