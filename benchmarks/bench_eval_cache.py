@@ -332,19 +332,23 @@ def main(emit=print):
          f"(budget {BUDGET}, mcts {MCTS_BUDGET}, best of {REPS}) ===")
     for w in (GEMM, COVARIANCE):
         # fresh spaces per run so nest caches do not leak across measurements;
-        # one untimed warmup per path first
+        # one untimed warmup per path first.  store=False keeps the engine
+        # cold even under ``benchmarks/run.py --store`` / CC_RESULT_STORE:
+        # this gate measures the in-process engine against the legacy path,
+        # and a persistent warm start would inflate it dishonestly.
         _legacy_greedy(w, _LegacySearchSpace(root=w.nest()),
                        _LegacyCostModelBackend(), WARMUP)
         run_greedy(w, SearchSpace(root=w.nest()), CostModelBackend(),
-                   budget=WARMUP)
+                   budget=WARMUP, store=False)
         legacy_log, legacy_dt = _timed(lambda: _legacy_greedy(
             w, _LegacySearchSpace(root=w.nest()), _LegacyCostModelBackend(),
             BUDGET))
         greedy_log, greedy_dt = _timed(lambda: run_greedy(
-            w, SearchSpace(root=w.nest()), CostModelBackend(), budget=BUDGET))
+            w, SearchSpace(root=w.nest()), CostModelBackend(), budget=BUDGET,
+            store=False))
         mcts_log, mcts_dt = _timed(lambda: run_mcts(
             w, SearchSpace(root=w.nest()), CostModelBackend(),
-            budget=MCTS_BUDGET, seed=0))
+            budget=MCTS_BUDGET, seed=0, store=False))
 
         legacy_eps = len(legacy_log.experiments) / legacy_dt
         greedy_eps = len(greedy_log.experiments) / greedy_dt

@@ -4,21 +4,66 @@
   bench_autotune          paper Figs. 6–11 (greedy traces ± parallelize)
   bench_mcts_vs_greedy    paper §VIII / ProTuner (beyond-paper strategies)
   bench_eval_cache        evaluation-engine experiments/sec vs pre-PR path
+  bench_warm_start        persistent-store warm starts + MCTS transposition DAG
   bench_kernels           Pallas kernel micro-benchmarks
   bench_roofline          §Roofline table from the 80-cell dry-run records
 
 Prints a final ``name,us_per_call,derived`` CSV.  Run with
-``PYTHONPATH=src python -m benchmarks.run`` (add ``--only <name>`` to subset,
-``--json BENCH_eval.json`` to additionally write the rows as machine-readable
-JSON — the perf trajectory consumed by later PRs).
+``PYTHONPATH=src python -m benchmarks.run``.  Flags:
+
+* ``--only <name>`` — run one suite.
+* ``--json BENCH_eval.json`` — write the rows as machine-readable JSON *and*
+  append a gate row to the cumulative ``results/BENCH_trajectory.json`` (the
+  perf trajectory consumed by later PRs — append, don't re-measure by hand).
+* ``--store PATH`` — set ``CC_RESULT_STORE`` for the run so every tuning
+  engine warm-starts from (and feeds) the persistent result store at PATH.
+* ``--quick`` — smoke mode: only the cheap cost-model gate suites
+  (``eval_cache`` + the cost-model half of ``warm_start``), and exit non-zero
+  if any acceptance gate regressed.  This is the CI regression check; it is
+  also runnable standalone: ``python -m benchmarks.run --quick --json out.json``.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+
+TRAJECTORY = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "results",
+    "BENCH_trajectory.json")
+
+
+def _load_trajectory() -> list:
+    try:
+        with open(TRAJECTORY) as f:
+            data = json.load(f)
+        return data if isinstance(data, list) else []
+    except (OSError, ValueError):
+        return []       # missing or corrupt → start a fresh trajectory
+
+
+def _collect_gates(ran: set[str]) -> dict:
+    """Acceptance gates written by gate-defining suites — only for suites
+    that ran *to completion* in this invocation (a stale on-disk gate from
+    an earlier run must not be re-recorded under this run's label, so
+    failed suites are excluded even though a gate file may exist)."""
+    results = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results")
+    gates: dict = {}
+    for name in ("eval_cache", "warm_start"):
+        if name not in ran:
+            continue
+        try:
+            with open(os.path.join(results, f"{name}.json")) as f:
+                acc = json.load(f).get("acceptance")
+            if acc is not None:
+                gates[name] = acc
+        except (OSError, ValueError):
+            pass
+    return gates
 
 
 def main(argv=None) -> None:
@@ -27,28 +72,43 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--json", type=str, default=None, metavar="BENCH_eval.json",
         help="write results as JSON: {suites: {name: {seconds, failed}}, "
-             "rows: [{name, us_per_call, derived}]}")
+             "rows: [{name, us_per_call, derived}]} and append the gate "
+             "summary to results/BENCH_trajectory.json")
+    ap.add_argument(
+        "--store", type=str, default=None, metavar="PATH",
+        help="persistent result store: sets CC_RESULT_STORE so all tuning "
+             "engines in this run start warm from PATH and append to it")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="cheap cost-model gate suites only; exit 1 on gate regression")
     args = ap.parse_args(argv)
 
     if args.json:
-        import os
         d = os.path.dirname(args.json) or "."
         if not os.path.isdir(d):
             ap.error(f"--json: directory {d!r} does not exist")
+    if args.store:
+        os.environ["CC_RESULT_STORE"] = args.store
 
     from . import (bench_autotune, bench_beyond_transforms, bench_eval_cache,
                    bench_kernels, bench_mcts_vs_greedy, bench_pragma_stacking,
-                   bench_roofline)
+                   bench_roofline, bench_warm_start)
 
     suites = {
         "pragma_stacking": bench_pragma_stacking.main,
         "autotune": bench_autotune.main,
         "mcts_vs_greedy": bench_mcts_vs_greedy.main,
         "eval_cache": bench_eval_cache.main,
+        "warm_start": bench_warm_start.main,
         "beyond_transforms": bench_beyond_transforms.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
     }
+    if args.quick:
+        suites = {
+            "eval_cache": bench_eval_cache.main,
+            "warm_start": lambda: bench_warm_start.main(quick=True),
+        }
     if args.only:
         if args.only not in suites:
             ap.error(f"--only: unknown suite {args.only!r} "
@@ -78,6 +138,9 @@ def main(argv=None) -> None:
     for r in all_rows:
         print(r)
 
+    gates = _collect_gates(
+        {n for n, m in suite_meta.items() if not m["failed"]})
+
     if args.json:
         structured = []
         for r in all_rows:
@@ -90,10 +153,39 @@ def main(argv=None) -> None:
                 "us_per_call": float(us) if us else None,
                 "derived": derived,
             })
-        payload = {"suites": suite_meta, "rows": structured}
+        payload = {"suites": suite_meta, "rows": structured, "gates": gates}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"\nwrote {args.json} ({len(structured)} rows)")
+
+        # cumulative perf trajectory: later PRs append their gate rows here
+        # instead of re-measuring earlier gates by hand
+        traj = _load_trajectory()
+        traj.append({
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "label": os.path.basename(args.json),
+            "quick": args.quick,
+            "suites": {n: m for n, m in suite_meta.items()},
+            "gates": gates,
+        })
+        os.makedirs(os.path.dirname(TRAJECTORY), exist_ok=True)
+        # atomic replace: a crash mid-write must not destroy the cumulative
+        # trajectory later PRs rely on
+        tmp = TRAJECTORY + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(traj, f, indent=1)
+        os.replace(tmp, TRAJECTORY)
+        print(f"appended gate row #{len(traj)} to {TRAJECTORY}")
+
+    failed_suites = [n for n, m in suite_meta.items() if m["failed"]]
+    failed_gates = [n for n, a in gates.items() if not a.get("pass")]
+    if failed_gates or failed_suites:
+        print(f"\nGATE CHECK: failed suites={failed_suites} "
+              f"failed gates={failed_gates}", file=sys.stderr, flush=True)
+        if args.quick:
+            sys.exit(1)
+    elif args.quick:
+        print("\nGATE CHECK: all gates pass")
 
 
 if __name__ == "__main__":

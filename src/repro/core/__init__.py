@@ -30,6 +30,7 @@ from .measure import (
     Result,
     WallclockBackend,
 )
+from .resultstore import ResultStore, host_fingerprint
 from .searchspace import DEFAULT_TILE_SIZES, Configuration, SearchSpace
 from .strategies import STRATEGIES, run_beam, run_greedy, run_mcts, run_random
 from .transformations import (
@@ -48,9 +49,10 @@ __all__ = [
     "CostModelBackend", "DEFAULT_TILE_SIZES", "EvalStats", "EvaluationEngine",
     "Experiment", "GEMM", "IllegalTransform", "Interchange", "Loop",
     "LoopNest", "Machine", "PAPER_WORKLOADS", "PallasBackend", "Parallelize",
-    "Result", "SYR2K", "SearchSpace", "STRATEGIES", "TPU_V5E", "Tile",
-    "TransformError", "Transformation", "TuningLog", "Unroll", "Vectorize",
-    "WallclockBackend", "Workload", "XEON_8180M", "check_legal",
-    "estimate_time", "estimate_time_uncached", "is_legal", "make_nest",
-    "matmul_workload", "run_beam", "run_greedy", "run_mcts", "run_random",
+    "Result", "ResultStore", "SYR2K", "SearchSpace", "STRATEGIES", "TPU_V5E",
+    "Tile", "TransformError", "Transformation", "TuningLog", "Unroll",
+    "Vectorize", "WallclockBackend", "Workload", "XEON_8180M", "check_legal",
+    "estimate_time", "estimate_time_uncached", "host_fingerprint", "is_legal",
+    "make_nest", "matmul_workload", "run_beam", "run_greedy", "run_mcts",
+    "run_random",
 ]

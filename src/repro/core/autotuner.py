@@ -104,9 +104,11 @@ class TuningLog:
 class Autotuner:
     """Paper-faithful greedy driver (exploitation-only priority queue).
 
-    ``cache``/``surrogate_order`` configure the shared evaluation engine; an
-    externally constructed ``engine`` may be injected instead (it carries the
-    run's dedup state, so share one only across runs that should share it).
+    ``cache``/``surrogate_order``/``store`` configure the shared evaluation
+    engine (``store`` attaches the persistent cross-run result cache — see
+    :class:`~repro.core.resultstore.ResultStore`); an externally constructed
+    ``engine`` may be injected instead (it carries the run's dedup state, so
+    share one only across runs that should share it).
     """
 
     def __init__(
@@ -120,6 +122,7 @@ class Autotuner:
         cache: bool = True,
         surrogate_order: bool = False,
         engine: EvaluationEngine | None = None,
+        store=None,
     ):
         self.workload = workload
         self.space = space
@@ -129,7 +132,7 @@ class Autotuner:
         self.on_experiment = on_experiment
         self.engine = engine or EvaluationEngine(
             workload, space, backend,
-            cache=cache, surrogate_order=surrogate_order,
+            cache=cache, surrogate_order=surrogate_order, store=store,
         )
 
     def run(self) -> TuningLog:

@@ -37,6 +37,16 @@ path used by ``run_greedy`` / ``run_mcts`` / ``run_beam`` / ``run_random``:
    keys lives here, shared by the drivers instead of re-implemented per
    strategy: :meth:`sweep` filters eagerly (greedy), :meth:`claim` lazily
    (MCTS expansion), :meth:`seed_seen` marks the baseline.
+6. **Persistent warm start** — with a :class:`~repro.core.resultstore.
+   ResultStore` attached (the ``store`` parameter, or the ``CC_RESULT_STORE``
+   environment variable), the structural result cache is preloaded from disk
+   at construction (``stats.preloaded``) and every backend-measured result is
+   appended back, so a re-tune of the same (workload, backend, machine)
+   replays every previously measured structure without touching the backend —
+   measure-once *across* runs, not just within one.  Engine-side
+   ``compile_error`` red nodes (no structure, path-keyed) are *not*
+   persisted: re-deriving them is near-free and keeps the log to genuinely
+   measured records.
 
 Cache invariants
 ----------------
@@ -57,6 +67,7 @@ Cache invariants
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -64,6 +75,7 @@ from .costmodel import XEON_8180M, Machine, estimate_time
 from .legality import IllegalTransform, check_legal
 from .loopnest import LoopNest
 from .measure import Backend, Result
+from .resultstore import ResultStore
 from .searchspace import Configuration, SearchSpace
 from .transformations import TransformError
 from .workloads import Workload
@@ -79,11 +91,15 @@ class EvalStats:
     0 there: a duplicate never reaches the result cache because it is never
     evaluated at all.  ``hits`` counts result-cache replays, which fire for
     random walks, ``dedup=False`` spaces, and engines shared across runs.
+    ``preloaded`` counts results replayed from the persistent store at
+    engine construction — a warm-started run serves those as ordinary
+    ``hits`` without ever reaching the backend.
     """
 
     hits: int = 0
     misses: int = 0
     deduped: int = 0
+    preloaded: int = 0
 
     @property
     def total(self) -> int:
@@ -112,6 +128,18 @@ class EvaluationEngine:
     surrogate_machine:
         Machine model for surrogate scoring; defaults to the backend's
         ``machine`` when it has one, else the paper's Xeon 8180M.
+    store:
+        Persistent result store for cross-run warm starts.  ``None`` (the
+        default) consults the ``CC_RESULT_STORE`` environment variable and
+        opens that path when set; ``False`` disables persistence outright
+        (benchmarks that must measure cold pass this); a path string or
+        :class:`~repro.core.resultstore.ResultStore` instance attaches that
+        store (path strings resolve through :meth:`ResultStore.shared`, so
+        every engine in a process shares one descriptor per path).  Requires
+        ``cache=True``: an explicit store with ``cache=False`` raises
+        ``ValueError`` (there is nothing to preload into, and the run would
+        silently persist nothing); the ``CC_RESULT_STORE`` ambient default
+        is simply ignored in cache-off mode.
     """
 
     def __init__(
@@ -122,6 +150,7 @@ class EvaluationEngine:
         cache: bool = True,
         surrogate_order: bool = False,
         surrogate_machine: Machine | None = None,
+        store: "ResultStore | str | os.PathLike | bool | None" = None,
     ):
         self.workload = workload
         self.space = space
@@ -134,12 +163,35 @@ class EvaluationEngine:
         self.stats = EvalStats()
         self._results: dict[tuple, Result] = {}
         self._seen: set[tuple] = set()
+        self.store: ResultStore | None = None
+        self._store_scope: tuple[str, str] | None = None
+        if not cache and isinstance(store, (str, os.PathLike, ResultStore)):
+            raise ValueError(
+                "EvaluationEngine: store requires cache=True — with the "
+                "cache off there is nothing to preload into, and the run "
+                "would silently persist nothing")
+        if cache and store is not False:
+            if store is None or store is True:
+                store = os.environ.get("CC_RESULT_STORE") or None
+            if isinstance(store, (str, os.PathLike)):
+                store = ResultStore.shared(store)
+            if store is not None:
+                self.store = store
+                self._store_scope = (
+                    workload.fingerprint(), backend.store_scope())
+                warm = store.load(*self._store_scope)
+                if warm:
+                    self._results.update(warm)
+                    self.stats.preloaded = len(warm)
 
     # -- keys ----------------------------------------------------------------
 
-    def _canonical_key(self, config: Configuration) -> tuple:
+    def canonical_key(self, config: Configuration) -> tuple:
         """Structure key when derivable, else a path-key fallback (broken
-        structures are still unique red nodes, mirroring the seed drivers)."""
+        structures are still unique red nodes, mirroring the seed drivers).
+        Delegates to :meth:`SearchSpace.try_canonical_key` — the one keying
+        rule shared by the result cache, the dedup set, the MCTS
+        transposition table, and the persistent store."""
         return self._prep(config)[1]
 
     # -- dedup bookkeeping (DAG merging, paper §VIII) --------------------------
@@ -149,7 +201,7 @@ class EvaluationEngine:
         baseline so experiment 0's structure cannot be re-evaluated as a
         child."""
         if self.space.dedup:
-            self._seen.add(self._canonical_key(config))
+            self._seen.add(self.canonical_key(config))
 
     def claim(self, config: Configuration) -> bool:
         """Lazy single-config dedup: True iff the structure is unseen (and now
@@ -161,12 +213,26 @@ class EvaluationEngine:
         """
         if not self.space.dedup:
             return True
-        key = self._canonical_key(config)
+        return self.claim_key(self.canonical_key(config))
+
+    def claim_key(self, key: tuple) -> bool:
+        """:meth:`claim` for a caller that already holds the canonical key
+        (the MCTS transposition path keys each candidate exactly once and
+        needs the key for its node table either way)."""
+        if not self.space.dedup:
+            return True
         if key in self._seen:
             self.stats.deduped += 1
             return False
         self._seen.add(key)
         return True
+
+    def peek(self, key: tuple) -> Result | None:
+        """Known result for a canonical key, or ``None`` — a pure lookup that
+        touches no counters and never evaluates.  Warm-started searches use
+        this to *order* their expansion by the accumulated measurement log
+        (known-good structures first) without spending budget."""
+        return self._results.get(key) if self.cache else None
 
     # -- surrogate ordering ----------------------------------------------------
 
@@ -205,10 +271,7 @@ class EvaluationEngine:
     ) -> tuple["LoopNest | TransformError", tuple]:
         """Derive the nest and the canonical/result-cache key in one step —
         for derivable structures the two keys are the same tuple."""
-        nest = self.space.try_structure(config)
-        if isinstance(nest, TransformError):
-            return nest, ("path",) + self.space.path_key(config)
-        return nest, nest.structure_key()
+        return self.space.try_canonical_key(config)
 
     def _evaluate_prepped(
         self,
@@ -264,6 +327,22 @@ class EvaluationEngine:
                 results[i] = res
                 if cache is not None:
                     cache[nest.structure_key()] = res
+            if self.store is not None:
+                # Persist the batch in one atomic append — a re-tune (or a
+                # concurrent run on another machine slot) starts warm from
+                # it.  ``exec_error`` results (timeouts, one-off runtime
+                # failures) are deliberately *not* persisted: the store is
+                # append-only and replays skip the backend, so a transient
+                # flake would red the structure forever; a re-tune should
+                # re-measure it instead.  ``ok``/``illegal``/``compile_error``
+                # are deterministic properties of the structure.
+                self.store.append_many(
+                    self._store_scope[0],
+                    self._store_scope[1],
+                    [(nest.structure_key(), res)
+                     for (_, _, nest), res in zip(pending, backend_results)
+                     if res.status != "exec_error"],
+                )
         if cache is not None:
             for i, key in aliases:
                 results[i] = cache[key]
@@ -325,6 +404,7 @@ class EvaluationEngine:
             "hits": self.stats.hits,
             "misses": self.stats.misses,
             "deduped": self.stats.deduped,
+            "preloaded": self.stats.preloaded,
             "hit_rate": round(self.stats.hit_rate, 4),
             "unique_structures": sum(
                 1 for k in self._results if not (k and k[0] == "path")

@@ -214,6 +214,43 @@ class LoopNest:
         return f"{self.name}: " + " / ".join(l.pretty() for l in self.loops)
 
 
+# ---------------------------------------------------------------------------
+# Stable key serialization — the persistent result store writes structure/path
+# keys to disk, so their encoding must be stable across processes and sessions
+# (unlike hash(), which is salted per process for strings).
+# ---------------------------------------------------------------------------
+
+
+def encode_key(key: tuple) -> str:
+    """Serialize a structure/path key (nested tuples of str/int/bool) to a
+    canonical JSON string.  ``decode_key(encode_key(k)) == k`` for every key
+    produced by :meth:`LoopNest.structure_key` and ``Configuration.path_key``.
+
+    Booleans survive the round trip because JSON distinguishes ``true`` from
+    ``1``; tuples are encoded as JSON arrays and restored by
+    :func:`decode_key`.
+    """
+    import json
+
+    return json.dumps(key, separators=(",", ":"), ensure_ascii=True)
+
+
+def tuplize(v):
+    """Parsed-JSON value → key form (arrays become tuples, recursively).
+    The single list→tuple recursion shared by :func:`decode_key` and the
+    result store's record reader."""
+    if isinstance(v, list):
+        return tuple(tuplize(x) for x in v)
+    return v
+
+
+def decode_key(s: str) -> tuple:
+    """Inverse of :func:`encode_key` (JSON arrays → tuples, recursively)."""
+    import json
+
+    return tuplize(json.loads(s))
+
+
 def make_nest(
     name: str,
     loop_order: Sequence[str],

@@ -20,12 +20,42 @@ Backends:
   it against the jnp oracle, and reports the TPU cost-model time; additionally
   enforces the VMEM capacity limit (tiles too large → compile_error, exactly
   what Mosaic would say on hardware).
+
+Batching model
+--------------
+``evaluate_many`` has three dispatch paths:
+
+* **sequential** — the default, and the only honest option for wall-clock
+  timing inside one process;
+* **thread pool** (:class:`_ThreadedEvalMixin`) — for backends whose reported
+  time is *deterministic* (Pallas scores with the TPU cost model and only
+  verifies concurrently).  :class:`WallclockBackend` **rejects**
+  ``max_workers > 1`` outright: concurrent timed runs in one process contend
+  for cores and skew every sample;
+* **process pool** (``WallclockBackend(process_workers=N)``) — each worker is
+  a separate process pinned to its own CPU core via ``os.sched_setaffinity``,
+  so timed runs proceed in parallel without sharing a core.  Workers rebuild
+  the backend from a small picklable spec (:meth:`WallclockBackend.worker_spec`);
+  workloads/configurations are plain frozen dataclasses and pickle as-is.
+  When pinning is impossible (no ``sched_setaffinity``, fewer than two
+  usable cores, pool startup failure) the call silently falls back to the
+  sequential path — results are identical, only slower.
+
+Persistence: every backend also exposes :meth:`Backend.store_scope`, the
+identity string under which its measurements are recorded in the on-disk
+:class:`~repro.core.resultstore.ResultStore` (deterministic model backends are
+host-independent; wallclock scopes embed the host fingerprint and scale).
 """
 
 from __future__ import annotations
 
+import multiprocessing
+import os
+import shutil
+import tempfile
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -95,6 +125,74 @@ class Backend:
     def _measure(self, workload: Workload, nest: LoopNest) -> Result:
         raise NotImplementedError
 
+    def store_scope(self) -> str:
+        """Identity under which this backend's results are persisted in the
+        :class:`~repro.core.resultstore.ResultStore`.
+
+        Must cover everything that affects the measured/predicted time.  The
+        generic fallback is conservative: backend name + host fingerprint.
+        Deterministic model backends override this to a host-independent
+        scope; wallclock backends embed the host and problem scale."""
+        from .resultstore import host_fingerprint
+
+        return f"{self.name}@{host_fingerprint()}"
+
+
+# ---------------------------------------------------------------------------
+# Process-parallel evaluation (wallclock): one worker process per CPU core.
+# ---------------------------------------------------------------------------
+
+
+def _usable_cores() -> list[int]:
+    """CPU cores this process may schedule on (affinity-aware)."""
+    try:
+        return sorted(os.sched_getaffinity(0))
+    except (AttributeError, OSError):
+        return list(range(os.cpu_count() or 1))
+
+
+# Per-worker-process backend, built once by the pool initializer.
+_WORKER_BACKEND = None
+
+
+def _wallclock_worker_init(
+    spec: dict, lockdir: str, cores: tuple[int, ...]
+) -> None:
+    """Pool initializer: claim a dedicated CPU core and build the backend.
+
+    Core claiming uses ``O_CREAT|O_EXCL`` lock files in a pool-private
+    directory — the only cross-process primitive that survives the ``spawn``
+    start method without inheriting handles.  Each worker pins itself to the
+    first unclaimed core, so no two timed runs ever share one.  If claiming
+    or pinning fails the worker still evaluates correctly, just unpinned.
+    """
+    global _WORKER_BACKEND
+    pinned = None
+    for c in cores:
+        try:
+            fd = os.open(
+                os.path.join(lockdir, f"cpu{c}.lock"),
+                os.O_CREAT | os.O_EXCL | os.O_WRONLY,
+            )
+            os.close(fd)
+            pinned = c
+            break
+        except FileExistsError:
+            continue
+        except OSError:
+            break
+    if pinned is not None:
+        try:
+            os.sched_setaffinity(0, {pinned})
+        except (AttributeError, OSError):
+            pass
+    _WORKER_BACKEND = WallclockBackend(**spec)
+
+
+def _process_evaluate(workload: Workload, config: Configuration) -> Result:
+    """Task body executed in a pinned worker process."""
+    return _WORKER_BACKEND.evaluate(workload, config)
+
 
 class _ThreadedEvalMixin:
     """Thread-pooled ``evaluate_many`` for backends whose per-experiment cost
@@ -103,10 +201,11 @@ class _ThreadedEvalMixin:
 
     ``max_workers`` gates the pool: ``<= 1`` keeps the sequential path.  Note
     for wall-clock timing backends: concurrent timed runs contend for cores
-    and skew measurements, so :class:`WallclockBackend` defaults to
-    ``max_workers=1`` (opt in explicitly when compile time dominates run
-    time); :class:`PallasBackend` scores with the deterministic TPU cost model
-    and only *verifies* concurrently, so its pool is on by default.
+    and skew measurements, so :class:`WallclockBackend` *rejects*
+    ``max_workers > 1`` at construction (use its core-pinned
+    ``process_workers`` path instead); :class:`PallasBackend` scores with the
+    deterministic TPU cost model and only *verifies* concurrently, so its
+    thread pool is on by default.
     """
 
     max_workers: int = 1
@@ -151,6 +250,12 @@ class CostModelBackend(Backend):
             t *= float(np.exp(self._rng.normal(0.0, self.noise)))
         return Result("ok", time_s=t)
 
+    def store_scope(self) -> str:
+        # Deterministic analytic model: host-independent.  Noisy runs are
+        # scoped by (sigma, seed) so two noise settings never share samples.
+        return (f"costmodel:{self.machine.name}"
+                f":noise={self.noise}:seed={self.seed}")
+
 
 @dataclass
 class WallclockBackend(_ThreadedEvalMixin, Backend):
@@ -159,13 +264,135 @@ class WallclockBackend(_ThreadedEvalMixin, Backend):
     ``nest`` hints from the engine are ignored: the measured nest must be
     re-derived against the *scaled* extents, so each unique structure pays one
     full replay here (amortized by the engine's structural result cache).
+
+    Timing honesty: the in-process thread pool is **forbidden** here
+    (``max_workers > 1`` raises at construction) because concurrent timed
+    runs share cores and skew each other.  Honest batching uses
+    ``process_workers=N`` instead: a persistent ``ProcessPoolExecutor``
+    (``spawn`` start method — safe with an initialized JAX in the parent)
+    whose workers are each pinned to a dedicated CPU core.  Falls back to
+    sequential evaluation when pinning is unavailable.  Call :meth:`close`
+    (or use the backend as a context manager) to release the pool.
     """
 
     scale: float = 0.25
     reps: int = 3
     timeout_s: float = 20.0
     name: str = "wallclock"
-    max_workers: int = 1        # concurrent timing skews wall-clock results
+    max_workers: int = 1        # thread path forbidden — see __post_init__
+    process_workers: int = 0    # >1 → core-pinned process-pool batching
+    mp_start_method: str = "spawn"
+    _pool: object = field(default=None, init=False, repr=False, compare=False)
+    _pool_lockdir: str | None = field(
+        default=None, init=False, repr=False, compare=False)
+    _pool_broken: bool = field(
+        default=False, init=False, repr=False, compare=False)
+
+    def __post_init__(self) -> None:
+        if self.max_workers > 1:
+            raise ValueError(
+                "WallclockBackend(max_workers>1): concurrent timed runs in "
+                "one process contend for cores and skew every measurement. "
+                "Use process_workers=N for the core-pinned process-pool "
+                "path (honest parallel timing), or keep max_workers=1."
+            )
+
+    # -- process-pool batching ------------------------------------------------
+
+    def worker_spec(self) -> dict:
+        """Picklable constructor kwargs from which a pool worker rebuilds
+        this backend (``process_workers`` intentionally excluded — workers
+        evaluate sequentially on their pinned core)."""
+        return {"scale": self.scale, "reps": self.reps,
+                "timeout_s": self.timeout_s}
+
+    def _ensure_pool(self):
+        """Create (once) the core-pinned worker pool, or return ``None`` when
+        honest process-parallel timing is impossible on this host."""
+        if self._pool is not None:
+            return self._pool
+        if self._pool_broken or not hasattr(os, "sched_setaffinity"):
+            return None
+        cores = _usable_cores()
+        workers = min(self.process_workers, len(cores))
+        if workers < 2:
+            return None         # a 1-core host cannot batch honestly
+        try:
+            self._pool_lockdir = tempfile.mkdtemp(prefix="repro-cpupin-")
+            ctx = multiprocessing.get_context(self.mp_start_method)
+            self._pool = ProcessPoolExecutor(
+                max_workers=workers,
+                mp_context=ctx,
+                initializer=_wallclock_worker_init,
+                initargs=(self.worker_spec(), self._pool_lockdir,
+                          tuple(cores)),
+            )
+        except Exception:       # noqa: BLE001 — any startup failure → serial
+            self.close()
+            self._pool_broken = True
+        return self._pool
+
+    def evaluate_many(
+        self,
+        workload: Workload,
+        configs: Sequence[Configuration],
+        nests: Sequence[LoopNest | None] | None = None,
+    ) -> list[Result]:
+        # nest hints are ignored (re-derived against scaled extents; see
+        # ``evaluate``), so they are simply not forwarded.
+        if len(configs) > 1 and self.process_workers > 1:
+            pool = self._ensure_pool()
+            if pool is not None:
+                try:
+                    futs = [pool.submit(_process_evaluate, workload, c)
+                            for c in configs]
+                except Exception:   # noqa: BLE001 — pool died → serial
+                    self.close()
+                    self._pool_broken = True
+                else:
+                    # Collect per future: one failed task must not discard
+                    # the batch's completed timed runs.  A task-level
+                    # failure is re-measured serially; only a broken pool
+                    # (worker process died) poisons the pool itself.
+                    out: list[Result] = []
+                    for f, c in zip(futs, configs):
+                        if self._pool_broken:
+                            out.append(self.evaluate(workload, c))
+                            continue
+                        try:
+                            out.append(f.result())
+                        except BrokenProcessPool:
+                            self.close()
+                            self._pool_broken = True
+                            out.append(self.evaluate(workload, c))
+                        except Exception:   # noqa: BLE001 — task-level only
+                            out.append(self.evaluate(workload, c))
+                    return out
+        return [self.evaluate(workload, c) for c in configs]
+
+    def close(self) -> None:
+        """Shut down the worker pool and release the core-claim directory."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True, cancel_futures=True)
+            self._pool = None
+        if self._pool_lockdir is not None:
+            shutil.rmtree(self._pool_lockdir, ignore_errors=True)
+            self._pool_lockdir = None
+
+    def __enter__(self) -> "WallclockBackend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def store_scope(self) -> str:
+        from .resultstore import host_fingerprint
+
+        # Wall-clock times are a property of the measuring host *and* the
+        # reduced problem scale; reps affect the min-of-N statistic, and the
+        # timeout decides which configs are red.
+        return (f"wallclock:scale={self.scale}:reps={self.reps}"
+                f":timeout={self.timeout_s}@{host_fingerprint()}")
 
     def evaluate(
         self,
@@ -220,6 +447,12 @@ class PallasBackend(_ThreadedEvalMixin, Backend):
     verify: bool = True
     name: str = "pallas"
     max_workers: int = 4
+
+    def store_scope(self) -> str:
+        # Reported time is the deterministic TPU cost model → host-independent;
+        # verification scale/vmem affect which configs are red.
+        return (f"pallas:{self.machine.name}:scale={self.scale}"
+                f":vmem={self.vmem_limit}:verify={self.verify}")
 
     def _measure(self, workload: Workload, nest: LoopNest) -> Result:
         try:

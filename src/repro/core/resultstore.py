@@ -1,0 +1,240 @@
+"""Persistent on-disk result store — measure-once *across* runs.
+
+PR 1 made re-measuring a structurally duplicate schedule free *within* one
+process (:class:`~repro.core.evaluation.EvaluationEngine`'s structural result
+cache).  This module extends that guarantee across processes: every measured
+``(workload, backend, machine, structure) → Result`` is appended to an
+append-only JSONL log, and a later tuning run — a re-tune, a CI job, a
+wallclock sweep on the same machine — preloads it and starts warm.  This is
+the accumulated measurement log that surrogate/Bayesian autotuning
+(arXiv:2010.08040) trains on, and the paper's "compile it, run it, time it"
+budget (§IV-C) is only ever spent once per structure per machine.
+
+Record format (one JSON object per line)::
+
+    {"v": 1, "w": "<workload fingerprint>", "s": "<backend scope>",
+     "k": <canonical key as nested arrays>,
+     "r": {"status": "ok", "time_s": 1.23, "note": ""}}
+
+* ``v`` — schema version.  Records whose version does not match
+  :data:`SCHEMA_VERSION` are ignored on load (a version bump is a clean cold
+  start, never a crash or a misinterpreted record).
+* ``w`` — :meth:`Workload.fingerprint`: stable hash of the workload
+  definition, so renaming or resizing a kernel can never replay stale times.
+* ``s`` — :meth:`Backend.store_scope`: backend kind + everything that affects
+  its measurements (machine model for deterministic backends, host identity +
+  scale/reps for wallclock).
+* ``k`` — the canonical key from :meth:`SearchSpace.try_canonical_key`
+  (structure key, or ``("path", ...)`` for red configurations), serialized by
+  :func:`repro.core.loopnest.encode_key`.
+
+Durability properties:
+
+* **Atomic appends** — each :meth:`append_many` is a single ``os.write`` to an
+  ``O_APPEND`` descriptor, so concurrent writers (process-pool workers, two
+  tuning runs sharing a store) interleave at line granularity, never inside a
+  line.
+* **Corruption tolerance** — :meth:`load` skips lines that fail to parse
+  (e.g. a truncated final line after a crash) instead of refusing the whole
+  log; everything parseable is still replayed.
+* **Append-only** — a record, once written, is never modified; re-measuring
+  never happens (cache invariant: one sample per structure), so duplicate
+  keys can only occur from concurrent first-writers, and the first record
+  wins on load (identical content in the deterministic case).
+
+The default store path is taken from the ``CC_RESULT_STORE`` environment
+variable (see :class:`~repro.core.evaluation.EvaluationEngine`); the
+benchmark harness exposes it as ``benchmarks/run.py --store PATH``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import platform
+import threading
+from typing import Iterable
+
+from .loopnest import encode_key, tuplize
+from .measure import Result
+
+SCHEMA_VERSION = 1
+
+
+def host_fingerprint() -> str:
+    """Identity of the measuring host for wallclock scopes: node name plus
+    visible core count (a container with a different CPU budget is a
+    different machine as far as timed runs are concerned)."""
+    try:
+        cores = len(os.sched_getaffinity(0))
+    except (AttributeError, OSError):
+        cores = os.cpu_count() or 1
+    return f"{platform.node() or 'unknown'}-{platform.machine()}-{cores}c"
+
+
+class ResultStore:
+    """Append-only JSONL store of measured results, shared across runs.
+
+    One instance may serve many engines (and therefore scopes) concurrently;
+    appends are thread-safe and crash-tolerant (see module docstring).  Reads
+    are snapshot loads — an engine preloads its scope once at construction;
+    results appended later by other writers are picked up by the next run.
+    """
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+        self._lock = threading.Lock()
+        self._fd: int | None = None
+        # (w, s, encoded key) already persisted by this process — appends are
+        # dedup'd so engines sharing a store do not re-write preloaded records.
+        self._written: set[tuple[str, str, str]] = set()
+
+    _shared: "dict[str, ResultStore]" = {}
+    _shared_lock = threading.Lock()
+
+    @classmethod
+    def shared(cls, path: str | os.PathLike) -> "ResultStore":
+        """Process-wide store instance for ``path``.
+
+        Engines constructed from a path string (or ``CC_RESULT_STORE``) use
+        this so a benchmark harness spawning dozens of engines shares one
+        append descriptor and one written-set instead of opening the file
+        per engine."""
+        key = os.path.abspath(os.fspath(path))
+        with cls._shared_lock:
+            store = cls._shared.get(key)
+            if store is None:
+                store = cls._shared[key] = cls(key)
+            return store
+
+    @classmethod
+    def drop_shared(cls, path: str | os.PathLike) -> None:
+        """Close and evict the process-wide instance for ``path`` (used by
+        benchmarks that create short-lived stores, so the registry does not
+        hold an open descriptor to an unlinked file forever)."""
+        key = os.path.abspath(os.fspath(path))
+        with cls._shared_lock:
+            store = cls._shared.pop(key, None)
+        if store is not None:
+            store.close()
+
+    # -- read ----------------------------------------------------------------
+
+    def load(self, workload_fp: str, scope: str) -> dict[tuple, Result]:
+        """All stored results for one (workload, backend scope), keyed by the
+        decoded canonical key.  Unparseable lines and records of a different
+        schema version are skipped (corruption/version tolerance); the first
+        record wins on duplicate keys."""
+        out: dict[tuple, Result] = {}
+        try:
+            f = open(self.path, "r", encoding="utf-8")
+        except OSError:
+            return out
+        with f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except (ValueError, TypeError):
+                    continue        # truncated/corrupt line — tolerate
+                if not isinstance(rec, dict) or rec.get("v") != SCHEMA_VERSION:
+                    continue        # schema mismatch — clean cold start
+                if rec.get("w") != workload_fp or rec.get("s") != scope:
+                    continue
+                try:
+                    key = tuplize(rec["k"])
+                    r = rec["r"]
+                    res = Result(
+                        status=str(r["status"]),
+                        time_s=None if r.get("time_s") is None
+                        else float(r["time_s"]),
+                        note=str(r.get("note", "")),
+                    )
+                except (KeyError, TypeError, ValueError):
+                    continue        # structurally invalid record — tolerate
+                out.setdefault(key, res)
+                self._written.add((workload_fp, scope, encode_key(key)))
+        return out
+
+    def count(self) -> int:
+        """Parseable current-schema records in the log (diagnostics only)."""
+        n = 0
+        try:
+            f = open(self.path, "r", encoding="utf-8")
+        except OSError:
+            return 0
+        with f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                except (ValueError, TypeError):
+                    continue
+                if isinstance(rec, dict) and rec.get("v") == SCHEMA_VERSION:
+                    n += 1
+        return n
+
+    # -- write ---------------------------------------------------------------
+
+    def append(self, workload_fp: str, scope: str, key: tuple,
+               result: Result) -> None:
+        self.append_many(workload_fp, scope, [(key, result)])
+
+    def append_many(
+        self,
+        workload_fp: str,
+        scope: str,
+        items: Iterable[tuple[tuple, Result]],
+    ) -> int:
+        """Persist a batch of (key, result) pairs in one atomic write.
+
+        Returns the number of records actually written (pairs already
+        persisted by this process are skipped)."""
+        lines: list[str] = []
+        fresh: list[tuple[str, str, str]] = []
+        for key, res in items:
+            ek = encode_key(key)
+            sig = (workload_fp, scope, ek)
+            if sig in self._written:
+                continue
+            fresh.append(sig)
+            lines.append(json.dumps(
+                {
+                    "v": SCHEMA_VERSION,
+                    "w": workload_fp,
+                    "s": scope,
+                    "k": key,       # nested tuples serialize as JSON arrays
+                    "r": {"status": res.status, "time_s": res.time_s,
+                          "note": res.note},
+                },
+                separators=(",", ":"),
+            ))
+        if not lines:
+            return 0
+        data = ("\n".join(lines) + "\n").encode("utf-8")
+        with self._lock:
+            if self._fd is None:
+                d = os.path.dirname(self.path)
+                if d:
+                    os.makedirs(d, exist_ok=True)
+                self._fd = os.open(
+                    self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644
+                )
+            os.write(self._fd, data)       # single write → line-atomic
+            self._written.update(fresh)
+        return len(lines)
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fd is not None:
+                os.close(self._fd)
+                self._fd = None
+
+    def __enter__(self) -> "ResultStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+

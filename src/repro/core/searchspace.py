@@ -151,6 +151,26 @@ class SearchSpace:
             raise hit
         return hit
 
+    def try_canonical_key(
+        self, config: Configuration
+    ) -> "tuple[LoopNest | TransformError, tuple]":
+        """(nest-or-error, canonical key) in one derivation.
+
+        Derivable configurations are keyed by the resulting structure (the DAG
+        identity of §III/§VIII); structurally broken ones fall back to a
+        ``("path", ...)``-prefixed derivation-path key so every red
+        configuration stays a unique node.  This is the single source of truth
+        for canonical keying: the evaluation engine's result cache, the dedup
+        ``seen`` set, the MCTS transposition table, and the persistent result
+        store all key by exactly this tuple (which is what makes on-disk
+        records replayable across runs — both key forms contain only
+        primitives, see :func:`repro.core.loopnest.encode_key`).
+        """
+        nest = self.try_structure(config)
+        if isinstance(nest, TransformError):
+            return nest, ("path",) + self.path_key(config)
+        return nest, nest.structure_key()
+
     # -- child derivation ----------------------------------------------------
 
     def children(

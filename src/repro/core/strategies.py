@@ -5,10 +5,14 @@ mctree") and cites ProTuner's MCTS results.  We implement:
 
 * :func:`run_greedy`   — the paper's exploitation-only priority queue (delegates
   to :class:`repro.core.autotuner.Autotuner`);
-* :func:`run_mcts`     — UCT: selection by upper confidence bound over mean
-  reward, lazy expansion, evaluation-as-rollout, reward backpropagation.  This
-  escapes the "parallelize the outermost loop first" local minimum because a
-  tile-first subtree keeps receiving visits from the exploration term;
+* :func:`run_mcts`     — UCT over the *transposition DAG*: selection by upper
+  confidence bound over mean reward, lazy expansion, evaluation-as-rollout,
+  visited-set reward backpropagation.  Nodes are merged by canonical structure
+  key (paper §III/§VIII: "different transformation sequences can lead to the
+  same result"), so a schedule reachable through many derivation orders is one
+  node whose statistics every order shares.  This escapes the "parallelize the
+  outermost loop first" local minimum because a tile-first subtree keeps
+  receiving visits from the exploration term;
 * :func:`run_beam`     — beam search over tree levels (HalideTuner successor),
   dispatching each level as one batched evaluation;
 * :func:`run_random`   — uniform random walks (baseline for the comparison),
@@ -46,9 +50,11 @@ def run_greedy(
     budget: int = 400,
     cache: bool = True,
     surrogate_order: bool = False,
+    store=None,
 ) -> TuningLog:
     return Autotuner(workload, space, backend, max_experiments=budget,
-                     cache=cache, surrogate_order=surrogate_order).run()
+                     cache=cache, surrogate_order=surrogate_order,
+                     store=store).run()
 
 
 # ---------------------------------------------------------------------------
@@ -58,8 +64,18 @@ def run_greedy(
 
 @dataclass
 class _Node:
+    """A search-graph node — one *structure*, not one derivation path.
+
+    With transpositions enabled (the default) nodes are merged by canonical
+    structure key, so a node can have several parents: the graph is the DAG
+    the paper describes (§III "different transformation sequences can lead to
+    the same result", §VIII).  Visit counts and values are properties of the
+    structure and are shared by every derivation order that reaches it.
+    """
+
     config: Configuration
-    parent: "_Node | None" = None
+    key: tuple | None = None    # canonical structure key (transposition id)
+    parents: list["_Node"] = field(default_factory=list)
     children: list["_Node"] = field(default_factory=list)
     untried: list[Configuration] | None = None
     visits: int = 0
@@ -67,12 +83,61 @@ class _Node:
     time_s: float | None = None
     dead: bool = False          # invalid config (red node)
     number: int = -1            # experiment number
+    owned: int = 0              # children expanded *by this node* — gates
+                                # progressive widening; transposition links
+                                # add selectable children without consuming
+                                # widening slots (exploration is not starved
+                                # by a densely linked DAG)
 
-    def ucb(self, c: float) -> float:
+    def ucb(self, c: float, parent_visits: int) -> float:
+        """UCB1 as seen from the parent the selection is descending through
+        (a DAG node has no single parent, so the exploration term takes the
+        current parent's visit count explicitly)."""
         if self.visits == 0:
             return float("inf")
         mean = self.value / self.visits
-        return mean + c * math.sqrt(math.log(self.parent.visits + 1) / self.visits)
+        return mean + c * math.sqrt(math.log(parent_visits + 1) / self.visits)
+
+
+def _is_ancestor(candidate: "_Node", node: "_Node") -> bool:
+    """True iff ``candidate`` is reachable from ``node`` via parent edges.
+
+    Used to refuse transposition links that would close a cycle (e.g. an
+    interchange and its inverse re-deriving an ancestor's structure), keeping
+    the graph a DAG — which is what guarantees selection and backpropagation
+    terminate."""
+    seen: set[int] = set()
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if n is candidate:
+            return True
+        if id(n) in seen:
+            continue
+        seen.add(id(n))
+        stack.extend(n.parents)
+    return False
+
+
+def _backprop(start: "_Node", r: float) -> int:
+    """Propagate a reward to ``start`` and every ancestor, once each.
+
+    In a DAG a node can be reached through many parent chains; the visited
+    set guarantees each node is credited exactly once per backpropagation
+    and that the walk terminates even if a cycle were ever introduced.
+    Returns the number of nodes updated (used by tests).
+    """
+    seen: set[int] = set()
+    frontier = [start]
+    while frontier:
+        n = frontier.pop()
+        if id(n) in seen:
+            continue
+        seen.add(id(n))
+        n.visits += 1
+        n.value += r
+        frontier.extend(n.parents)
+    return len(seen)
 
 
 def run_mcts(
@@ -85,8 +150,10 @@ def run_mcts(
     pw_alpha: float = 0.6,
     seed: int = 0,
     cache: bool = True,
+    transpositions: bool = True,
+    store=None,
 ) -> TuningLog:
-    """UCT with progressive widening.
+    """UCT with progressive widening over the transposition DAG.
 
     The branching factor at each node is in the hundreds (190 tilings alone for
     a 3-loop band — paper §V), so naive UCT exhausts its budget broadening the
@@ -94,14 +161,34 @@ def run_mcts(
     ``pw_c · visits^pw_alpha``, forcing depth — this is what lets the search
     reach tile→parallelize compositions the greedy driver never sees.
 
-    Transposition handling rides on the engine: nodes that re-derive an
-    already-measured structure are cache hits (measured once, replayed), and
-    the engine's ``seen`` set prunes structurally duplicate siblings at
-    expansion time.
+    Transpositions (on by default): nodes are merged by canonical structure
+    key — one node per *structure*, not per derivation path.  When a
+    duplicate structure is derived, no budget is ever spent on it.  In a
+    **warm-started** run (persistent ``store`` attached, or
+    ``CC_RESULT_STORE`` set, with records for this workload/backend) the
+    duplicate becomes a DAG edge to the existing node (unless that would
+    close a cycle): its visit counts and values are shared by every
+    derivation order that reaches it, the expanding path immediately
+    receives the known reward, and expansion is additionally *ordered by the
+    stored measurements* — known-good structures first, unknowns next,
+    known-red last — so a re-tune re-reaches the previous run's best in a
+    fraction of the experiments and then spends the remaining budget beyond
+    the old frontier (measurement-log reuse, cf. arXiv:2010.08040; gated in
+    ``benchmarks/bench_warm_start.py``).  In a **cold** run duplicates are
+    skipped exactly like the pre-DAG search: at cold-run collision rates an
+    edge carries no information yet, and measured A/B showed cold linking to
+    be pure trajectory variance — so cold results are byte-identical to
+    ``transpositions=False``.
+
+    ``log.cache`` carries the engine counters plus ``transpositions`` (edges
+    added) and ``dag_nodes`` (unique structures in the graph).
     """
     rng = random.Random(seed)
-    engine = EvaluationEngine(workload, space, backend, cache=cache)
+    engine = EvaluationEngine(workload, space, backend, cache=cache,
+                              store=store)
     log = TuningLog(workload=workload.name, backend=backend.name)
+    table: dict[tuple, _Node] = {}
+    n_links = 0
 
     def record(config: Configuration, parent_num: int | None) -> Experiment:
         exp = Experiment(number=len(log.experiments), config=config,
@@ -111,37 +198,101 @@ def run_mcts(
 
     baseline = Configuration()
     base = record(baseline, None)
+    base_key = engine.canonical_key(baseline)
     engine.seed_seen(baseline)
     if not base.result.ok:
         log.cache = engine.stats_dict()
         return log
     t0 = base.result.time_s
-    root = _Node(config=baseline, time_s=t0, visits=1, value=1.0, number=0)
+    root = _Node(config=baseline, key=base_key, time_s=t0, visits=1,
+                 value=1.0, number=0)
+    table[base_key] = root
 
     def reward(time_s: float | None) -> float:
         if time_s is None:
             return 0.0
         return min(4.0, t0 / time_s)        # speedup vs baseline, capped
 
+    def link(node: _Node, existing: _Node) -> bool:
+        """Add the DAG edge node → existing unless it already exists or would
+        close a cycle (an interchange and its inverse re-deriving an
+        ancestor's structure).  Returns True iff the edge was added."""
+        nonlocal n_links
+        if (existing is node or existing.dead
+                or existing in node.children
+                or _is_ancestor(existing, node)):
+            return False
+        node.children.append(existing)
+        existing.parents.append(node)
+        n_links += 1
+        return True
+
+    # A warm-started engine (persistent store preloaded) carries measured
+    # times for structures this process never evaluated; use them to order
+    # expansion so the search re-reaches the previous run's frontier almost
+    # directly before spending budget on the unknown (the measurement-log
+    # reuse of arXiv:2010.08040).  Only warm runs key every derived child
+    # (the ordering needs the keys anyway); cold runs keep PR 1's lazy
+    # keying — one canonical key per *popped* candidate — because deep nodes
+    # derive thousands of children and progressive widening expands only a
+    # handful, so eager keying would dominate a cold run's wall time for a
+    # handful of early links.
+    warm_order = engine.stats.preloaded > 0
+
     def ensure_untried(node: _Node) -> None:
-        if node.untried is None:
-            # dedup happens lazily via engine.claim() at expansion time —
-            # deep nodes derive thousands of children, and progressive
-            # widening expands only a handful of them.
-            kids = space.children(node.config, dedup=False)
-            rng.shuffle(kids)
+        if node.untried is not None:
+            return
+        kids = space.children(node.config, dedup=False)
+        rng.shuffle(kids)
+        if not warm_order:
             node.untried = kids
+            return
+        # Transposition merge at derivation time: children that re-derive an
+        # already-known structure become DAG edges to the existing node —
+        # its visit counts and values (and its whole subtree) are shared
+        # with this derivation order immediately, for zero budget.  Only
+        # structures never seen before stay on the untried list.
+        fresh: list[tuple[Configuration, tuple]] = []
+        for k in kids:
+            key = engine.canonical_key(k)
+            if transpositions:
+                existing = table.get(key)
+                if existing is not None:
+                    link(node, existing)
+                    continue
+            fresh.append((k, key))
+
+        # untried is popped from the end: sort so stored-good structures
+        # are popped first, unknowns next, stored-red last
+        def rank(item: tuple[Configuration, tuple]):
+            res = engine.peek(item[1])
+            if res is None:
+                return (1, 0.0)
+            if not res.ok:
+                return (0, 0.0)
+            return (2, -res.time_s)
+
+        fresh.sort(key=rank)
+        node.untried = [k for k, _ in fresh]
 
     def may_widen(node: _Node) -> bool:
         ensure_untried(node)
         if not node.untried:
             return False
         limit = pw_c * (node.visits ** pw_alpha)
-        return len(node.children) < limit
+        # ``owned``, not ``len(children)``: transposition links add
+        # selectable children without consuming widening slots, so a densely
+        # linked DAG keeps exploring fresh structures at the same rate as
+        # the tree would.
+        return node.owned < limit
 
     while len(log.experiments) < budget:
-        # 1. selection: descend while widening is not indicated
+        # 1. selection: descend while widening is not indicated, recording
+        # the derivation path for backpropagation.  The graph is acyclic
+        # (links that would close a cycle are refused), so the descent
+        # terminates.
         node = root
+        path = [root]
         while not node.dead:
             if may_widen(node):
                 break
@@ -149,29 +300,56 @@ def run_mcts(
             if not live:
                 node.dead = True
                 break
-            node = max(live, key=lambda ch: ch.ucb(c_explore))
+            node = max(live, key=lambda ch: ch.ucb(c_explore, node.visits))
+            path.append(node)
         if root.dead:
             break
         if node.dead:
             continue
-        # 2. expansion: evaluate one untried child (evaluation = rollout);
-        # structurally duplicate siblings are skipped without spending budget
+        # 2. expansion: evaluate one untried child (evaluation = rollout)
         config = node.untried.pop()
-        if not engine.claim(config):
+        key = engine.canonical_key(config)
+        if transpositions and warm_order:
+            existing = table.get(key)
+            if existing is not None:
+                # The structure was discovered elsewhere *after* this node's
+                # untried list was built — merge instead of re-exploring.
+                # No budget is spent; if the edge is added, every node of
+                # the discovering derivation path immediately learns what
+                # the structure is worth (the existing node keeps its own
+                # statistics, credited at creation and by later selections
+                # through it).
+                engine.claim_key(key)       # keeps the dedup counter honest
+                if link(node, existing):
+                    _backprop(node, reward(existing.time_s))
+                continue
+        if not engine.claim_key(key):
+            # Cold runs skip duplicate structures exactly like the pre-DAG
+            # search: at cold-run collision rates (a handful per hundreds of
+            # experiments) an edge carries no information yet — measured
+            # A/B, linking cold was pure trajectory variance (sometimes
+            # worse), so merging waits until the run is warm.
             continue
         exp = record(config, node.number)
-        child = _Node(config=config, parent=node,
+        child = _Node(config=config, key=key, parents=[node],
                       time_s=exp.result.time_s if exp.result.ok else None,
                       dead=not exp.result.ok, number=exp.number)
         node.children.append(child)
-        # 3. backpropagation
+        node.owned += 1
+        table[key] = child
+        # 3. backpropagation along the selection path (plus the new child).
+        # Path backprop keeps visit counts well-founded on the DAG — the
+        # all-ancestor walk is reserved for transposition discoveries above,
+        # where crediting every derivation order is the point.
         r = reward(child.time_s)
-        n: _Node | None = child
-        while n is not None:
+        child.visits += 1
+        child.value += r
+        for n in path:
             n.visits += 1
             n.value += r
-            n = n.parent
     log.cache = engine.stats_dict()
+    log.cache["transpositions"] = n_links
+    log.cache["dag_nodes"] = len(table)
     return log
 
 
@@ -188,6 +366,7 @@ def run_beam(
     width: int = 4,
     cache: bool = True,
     surrogate_order: bool = False,
+    store=None,
 ) -> TuningLog:
     """Beam search over tree levels.
 
@@ -198,7 +377,7 @@ def run_beam(
     parent wins) so they consume no budget.
     """
     engine = EvaluationEngine(workload, space, backend, cache=cache,
-                              surrogate_order=surrogate_order)
+                              surrogate_order=surrogate_order, store=store)
     log = TuningLog(workload=workload.name, backend=backend.name)
 
     def record(config: Configuration, result, parent_num: int | None) -> Experiment:
@@ -250,6 +429,7 @@ def run_random(
     max_depth: int = 4,
     seed: int = 0,
     cache: bool = True,
+    store=None,
 ) -> TuningLog:
     """Uniform random walks from the root.
 
@@ -261,7 +441,8 @@ def run_random(
     engine's structural cache makes the shared prefixes free to re-measure.
     """
     rng = random.Random(seed)
-    engine = EvaluationEngine(workload, space, backend, cache=cache)
+    engine = EvaluationEngine(workload, space, backend, cache=cache,
+                              store=store)
     log = TuningLog(workload=workload.name, backend=backend.name)
 
     def record(config: Configuration, parent_num: int | None) -> Experiment:

@@ -43,6 +43,38 @@ class Workload:
     flops_per_point: int = 2
     tri_mode: str = ""                      # "lower" | "upper" | ""
 
+    # -- identity --------------------------------------------------------------
+
+    def fingerprint(self) -> str:
+        """Stable short hash of everything that determines this workload's
+        measured semantics — the persistent result store keys records by it so
+        a stored time is only ever replayed for a byte-identical workload
+        definition (same kernel name *and* same extents/accesses/dtype).
+        """
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            import hashlib
+            import json
+
+            payload = json.dumps(
+                {
+                    "name": self.name,
+                    "loop_order": self.loop_order,
+                    "extents": sorted(self.extents.items()),
+                    "out": [self.out_array, self.out_vars],
+                    "terms": [t.accesses for t in self.terms],
+                    "triangular": self.triangular,
+                    "elem_bytes": self.elem_bytes,
+                    "flops_per_point": self.flops_per_point,
+                    "tri_mode": self.tri_mode,
+                },
+                sort_keys=True,
+                separators=(",", ":"),
+            )
+            fp = hashlib.sha256(payload.encode()).hexdigest()[:16]
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
+
     # -- loop-nest IR ----------------------------------------------------------
 
     def nest(self) -> LoopNest:

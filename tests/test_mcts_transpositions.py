@@ -1,0 +1,156 @@
+"""MCTS transposition DAG: node merging by structure, cycle-safe linking,
+terminating backpropagation, and no-regression vs the pre-DAG search."""
+
+import pytest
+
+from repro.core import (
+    GEMM,
+    SYR2K,
+    Configuration,
+    CostModelBackend,
+    SearchSpace,
+)
+from repro.core.strategies import (
+    _backprop,
+    _is_ancestor,
+    _Node,
+    run_greedy,
+    run_mcts,
+)
+
+
+def _diamond():
+    """root → a, b → shared (two derivation orders reach one node)."""
+    root = _Node(config=Configuration())
+    a = _Node(config=Configuration(), parents=[root])
+    b = _Node(config=Configuration(), parents=[root])
+    root.children = [a, b]
+    shared = _Node(config=Configuration(), parents=[a, b])
+    a.children = [shared]
+    b.children = [shared]
+    return root, a, b, shared
+
+
+class TestDagPrimitives:
+    def test_backprop_visits_each_node_once(self):
+        root, a, b, shared = _diamond()
+        updated = _backprop(shared, 2.0)
+        assert updated == 4                       # shared, a, b, root — once each
+        assert shared.visits == a.visits == b.visits == root.visits == 1
+        assert root.value == 2.0                  # not double-counted via a and b
+
+    def test_backprop_terminates_on_cycle(self):
+        """Defensive: even if a cycle were introduced, the visited set
+        guarantees termination (links that would create one are refused in
+        run_mcts, but backprop must not rely on that)."""
+        root, a, b, shared = _diamond()
+        root.parents = [shared]                   # deliberately close a cycle
+        assert _backprop(shared, 1.0) == 4        # terminates, each node once
+
+    def test_is_ancestor(self):
+        root, a, b, shared = _diamond()
+        assert _is_ancestor(root, shared)
+        assert _is_ancestor(a, shared)
+        assert not _is_ancestor(shared, root)
+        assert not _is_ancestor(a, b)
+
+
+class TestTranspositionMerging:
+    def test_two_derivation_orders_share_one_node(self):
+        """parallelize(i);tile(j,k) ≡ tile(j,k);parallelize(i): within one
+        MCTS run, the structure appears as exactly one DAG node, keyed once
+        in the transposition table — visible as dag_nodes + deduped never
+        exceeding the structures actually derived, and as recorded
+        experiments being unique by structure."""
+        space = SearchSpace(root=GEMM.nest())
+        log = run_mcts(GEMM, space, CostModelBackend(), budget=250, seed=0)
+        keys = []
+        for e in log.experiments:
+            nest = space.try_structure(e.config)
+            if not isinstance(nest, Exception):
+                keys.append(nest.structure_key())
+        assert len(keys) == len(set(keys)), "an MCTS structure was re-recorded"
+        assert log.cache["dag_nodes"] >= len(keys)
+
+    def test_warm_run_materializes_dag_edges(self, tmp_path):
+        """DAG edges are added when the run is warm: the second (store-
+        preloaded) run eagerly links duplicate child structures to their
+        existing nodes."""
+        store = tmp_path / "links.jsonl"
+        be = CostModelBackend()
+        cold = run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                        budget=600, seed=1, store=store)
+        warm = run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                        budget=600, seed=1, store=store)
+        assert "transpositions" in cold.cache and "dag_nodes" in cold.cache
+        assert warm.cache["transpositions"] >= 1
+
+    def test_cold_run_identical_to_transpositions_off(self):
+        """Cold runs skip duplicates exactly like the pre-DAG search —
+        merging only begins once a measurement log gives the edges value."""
+        import json
+        on = run_mcts(GEMM, SearchSpace(root=GEMM.nest()),
+                      CostModelBackend(), budget=300, seed=0,
+                      transpositions=True, store=False)
+        off = run_mcts(GEMM, SearchSpace(root=GEMM.nest()),
+                       CostModelBackend(), budget=300, seed=0,
+                       transpositions=False, store=False)
+        a, b = json.loads(on.to_json()), json.loads(off.to_json())
+        a.pop("cache"), b.pop("cache")
+        assert a == b
+        assert on.cache["transpositions"] == 0
+
+    def test_dag_terminates_on_interchange_rich_space(self):
+        """syr2k's triangular nest derives many interchanges whose inverses
+        re-derive ancestors — the cycle guard must keep selection and
+        backprop finite."""
+        log = run_mcts(SYR2K, SearchSpace(root=SYR2K.nest()),
+                       CostModelBackend(), budget=300, seed=2)
+        assert len(log.experiments) <= 300
+        assert log.best().result.ok
+
+
+class TestNoRegression:
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_results_unchanged_or_better_than_no_transpositions(self, seed):
+        be = CostModelBackend()
+        on = run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                      budget=400, seed=seed, transpositions=True)
+        off = run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                       budget=400, seed=seed, transpositions=False)
+        assert (on.best().result.time_s
+                <= off.best().result.time_s * 1.05)
+
+    def test_mcts_still_beats_or_matches_greedy(self):
+        be = CostModelBackend()
+        g = run_greedy(GEMM, SearchSpace(root=GEMM.nest()), be,
+                       budget=300).best().result.time_s
+        m = min(run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                         budget=300, seed=s).best().result.time_s
+                for s in (0, 1))
+        assert m <= g * 1.05
+
+
+class TestWarmOrderedExpansion:
+    def test_warm_mcts_reaches_cold_best_faster(self, tmp_path):
+        """A second MCTS run preloading the first run's store must re-reach
+        the cold best in at most half the experiments (the
+        bench_warm_start acceptance gate, at a test-sized budget)."""
+        store = tmp_path / "mcts.jsonl"
+        be = CostModelBackend()
+        cold = run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                        budget=400, seed=0, store=store)
+        warm = run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                        budget=400, seed=0, store=store)
+        t = cold.best().result.time_s
+
+        def reach(log):
+            for e in log.experiments:
+                if e.result.ok and e.result.time_s <= t:
+                    return e.number
+            return None
+
+        i_cold, i_warm = reach(cold), reach(warm)
+        assert i_warm is not None
+        assert i_warm <= i_cold / 2
+        assert warm.best().result.time_s <= t

@@ -1,0 +1,293 @@
+"""Persistent result store: round-trips, corruption/version tolerance,
+concurrent appends, engine warm starts, and the measurement-subsystem
+plumbing (stable fingerprints, backend scopes, wallclock batching rules)."""
+
+import json
+import os
+import threading
+
+import pytest
+
+from repro.core import (
+    COVARIANCE,
+    GEMM,
+    Autotuner,
+    Configuration,
+    CostModelBackend,
+    Parallelize,
+    Result,
+    ResultStore,
+    SearchSpace,
+    Tile,
+    WallclockBackend,
+)
+from repro.core.evaluation import EvaluationEngine
+from repro.core.loopnest import decode_key, encode_key
+from repro.core.resultstore import SCHEMA_VERSION
+
+
+def make_store(tmp_path, name="store.jsonl"):
+    return ResultStore(tmp_path / name)
+
+
+SCOPE = "costmodel:test"
+
+
+class TestKeyCodec:
+    def test_structure_key_round_trip(self):
+        space = SearchSpace(root=GEMM.nest())
+        cfg = (Configuration()
+               .child(Tile(loops=("i", "j"), sizes=(64, 256)))
+               .child(Parallelize(loop="i1")))
+        key = space.canonical_key(cfg)
+        assert decode_key(encode_key(key)) == key
+
+    def test_path_key_round_trip(self):
+        space = SearchSpace(root=GEMM.nest())
+        broken = Configuration().child(Tile(loops=("i",), sizes=(4096,)))
+        _, key = space.try_canonical_key(broken)
+        assert key[0] == "path"
+        assert decode_key(encode_key(key)) == key
+
+    def test_booleans_survive(self):
+        key = (("i", 64, True, False, 1, 1, False),)
+        rt = decode_key(encode_key(key))
+        assert rt == key
+        assert rt[0][2] is True and rt[0][3] is False
+
+
+class TestWorkloadFingerprint:
+    def test_stable_and_distinct(self):
+        assert GEMM.fingerprint() == GEMM.fingerprint()
+        assert GEMM.fingerprint() != COVARIANCE.fingerprint()
+
+    def test_extent_change_changes_fingerprint(self):
+        assert GEMM.scaled(0.5).fingerprint() != GEMM.fingerprint()
+
+
+class TestRoundTrip:
+    def test_append_load(self, tmp_path):
+        store = make_store(tmp_path)
+        key = (("i", 2000, False, False, 1, 1, False),)
+        store.append("wfp", SCOPE, key, Result("ok", time_s=1.25))
+        store.append("wfp", SCOPE, ("path", ("Tile", ("i",), (4096,))),
+                     Result("compile_error", note="tile too big"))
+        loaded = ResultStore(store.path).load("wfp", SCOPE)
+        assert loaded[key] == Result("ok", time_s=1.25)
+        assert loaded[("path", ("Tile", ("i",), (4096,)))].status == \
+            "compile_error"
+
+    def test_scope_isolation(self, tmp_path):
+        store = make_store(tmp_path)
+        key = (("i", 8, False, False, 1, 1, False),)
+        store.append("w1", SCOPE, key, Result("ok", time_s=1.0))
+        fresh = ResultStore(store.path)
+        assert fresh.load("w2", SCOPE) == {}
+        assert fresh.load("w1", "otherscope") == {}
+        assert len(fresh.load("w1", SCOPE)) == 1
+
+    def test_duplicate_append_skipped(self, tmp_path):
+        store = make_store(tmp_path)
+        key = (("i", 8, False, False, 1, 1, False),)
+        assert store.append_many("w", SCOPE,
+                                 [(key, Result("ok", time_s=1.0))]) == 1
+        assert store.append_many("w", SCOPE,
+                                 [(key, Result("ok", time_s=1.0))]) == 0
+        assert store.count() == 1
+
+
+class TestCorruptionTolerance:
+    KEY = (("i", 8, False, False, 1, 1, False),)
+
+    def _good_line(self) -> str:
+        return json.dumps({
+            "v": SCHEMA_VERSION, "w": "w", "s": SCOPE,
+            "k": json.loads(encode_key(self.KEY)),
+            "r": {"status": "ok", "time_s": 2.0, "note": ""},
+        })
+
+    def test_truncated_last_line_tolerated(self, tmp_path):
+        p = tmp_path / "store.jsonl"
+        p.write_text(self._good_line() + "\n" + self._good_line()[: 25])
+        loaded = ResultStore(p).load("w", SCOPE)
+        assert loaded == {self.KEY: Result("ok", time_s=2.0)}
+
+    def test_garbage_lines_tolerated(self, tmp_path):
+        p = tmp_path / "store.jsonl"
+        p.write_text("\x00\x01 not json\n" + self._good_line() + "\n"
+                     "{\"v\": 1, \"half\": \n")
+        assert len(ResultStore(p).load("w", SCOPE)) == 1
+
+    def test_schema_version_mismatch_is_cold_start(self, tmp_path):
+        p = tmp_path / "store.jsonl"
+        rec = json.loads(self._good_line())
+        rec["v"] = SCHEMA_VERSION + 1
+        p.write_text(json.dumps(rec) + "\n")
+        assert ResultStore(p).load("w", SCOPE) == {}
+
+    def test_missing_file_is_cold_start(self, tmp_path):
+        assert ResultStore(tmp_path / "absent.jsonl").load("w", SCOPE) == {}
+
+
+class TestConcurrentAppends:
+    def test_threaded_appends_all_survive(self, tmp_path):
+        store = make_store(tmp_path)
+        n_threads, per_thread = 8, 50
+
+        def writer(t):
+            for i in range(per_thread):
+                key = (("i", t * per_thread + i, False, False, 1, 1, False),)
+                store.append("w", SCOPE, key, Result("ok", time_s=float(i)))
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        store.close()
+        loaded = ResultStore(store.path).load("w", SCOPE)
+        assert len(loaded) == n_threads * per_thread
+        # every line parseable — no interleaved partial writes
+        with open(store.path) as f:
+            for line in f:
+                json.loads(line)
+
+    def test_two_store_instances_same_file(self, tmp_path):
+        """Two processes sharing one path: O_APPEND keeps lines whole and
+        loads see the union (modelled here with two instances)."""
+        a = make_store(tmp_path)
+        b = ResultStore(a.path)
+        k1 = (("i", 1, False, False, 1, 1, False),)
+        k2 = (("i", 2, False, False, 1, 1, False),)
+        a.append("w", SCOPE, k1, Result("ok", time_s=1.0))
+        b.append("w", SCOPE, k2, Result("ok", time_s=2.0))
+        loaded = ResultStore(a.path).load("w", SCOPE)
+        assert set(loaded) == {k1, k2}
+
+
+class TestEngineIntegration:
+    def test_second_engine_starts_warm(self, tmp_path):
+        path = tmp_path / "store.jsonl"
+
+        class Counting(CostModelBackend):
+            calls = 0
+
+            def _measure(self, w, n):
+                Counting.calls += 1
+                return super()._measure(w, n)
+
+        s1 = SearchSpace(root=GEMM.nest())
+        e1 = EvaluationEngine(GEMM, s1, Counting(), store=path)
+        log1 = Autotuner(GEMM, s1, Counting(), max_experiments=200,
+                         engine=e1).run()
+        assert Counting.calls > 0
+        Counting.calls = 0
+
+        s2 = SearchSpace(root=GEMM.nest())
+        e2 = EvaluationEngine(GEMM, s2, Counting(), store=path)
+        log2 = Autotuner(GEMM, s2, Counting(), max_experiments=200,
+                         engine=e2).run()
+        assert Counting.calls == 0          # fully served from the store
+        assert e2.stats.preloaded > 0
+        a, b = json.loads(log1.to_json()), json.loads(log2.to_json())
+        a.pop("cache"), b.pop("cache")
+        assert a == b                       # warm replay is byte-identical
+
+    def test_env_var_attaches_store(self, tmp_path, monkeypatch):
+        path = tmp_path / "envstore.jsonl"
+        monkeypatch.setenv("CC_RESULT_STORE", str(path))
+        s = SearchSpace(root=GEMM.nest())
+        eng = EvaluationEngine(GEMM, s, CostModelBackend())
+        assert eng.store is not None
+        eng.evaluate(Configuration())
+        assert ResultStore(path).count() == 1
+
+    def test_store_false_disables_env(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("CC_RESULT_STORE",
+                           str(tmp_path / "unused.jsonl"))
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend(), store=False)
+        assert eng.store is None
+
+    def test_cache_off_explicit_store_raises(self, tmp_path):
+        with pytest.raises(ValueError, match="cache=True"):
+            EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                             CostModelBackend(), cache=False,
+                             store=tmp_path / "s.jsonl")
+
+    def test_cache_off_ignores_env_store(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("CC_RESULT_STORE", str(tmp_path / "s.jsonl"))
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend(), cache=False)
+        assert eng.store is None
+
+    def test_shared_store_instance_per_path(self, tmp_path):
+        p = tmp_path / "shared.jsonl"
+        e1 = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                              CostModelBackend(), store=p)
+        e2 = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                              CostModelBackend(), store=str(p))
+        assert e1.store is e2.store
+
+    def test_engine_side_red_nodes_not_persisted(self, tmp_path):
+        path = tmp_path / "store.jsonl"
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend(), store=path)
+        broken = Configuration().child(Tile(loops=("i",), sizes=(4096,)))
+        assert eng.evaluate(broken).status == "compile_error"
+        assert ResultStore(path).count() == 0
+
+
+class TestBackendScopes:
+    def test_scopes_distinct_per_backend_kind(self):
+        scopes = {CostModelBackend().store_scope(),
+                  WallclockBackend().store_scope()}
+        assert len(scopes) == 2
+
+    def test_wallclock_scope_embeds_scale_and_host(self):
+        a = WallclockBackend(scale=0.1).store_scope()
+        b = WallclockBackend(scale=0.2).store_scope()
+        assert a != b and "@" in a
+
+    def test_costmodel_scope_host_independent(self):
+        assert "@" not in CostModelBackend().store_scope()
+        assert (CostModelBackend(noise=0.1).store_scope()
+                != CostModelBackend().store_scope())
+
+
+class TestWallclockBatchingRules:
+    def test_thread_pool_rejected(self):
+        with pytest.raises(ValueError, match="process_workers"):
+            WallclockBackend(max_workers=4)
+
+    def test_serial_fallback_without_pool(self):
+        be = WallclockBackend(scale=0.05, reps=1, process_workers=8)
+        # force the no-pin fallback path regardless of host capabilities
+        be._pool_broken = True
+        configs = [Configuration(), Configuration().child(
+            Parallelize(loop="k"))]
+        rs = be.evaluate_many(GEMM, configs)
+        assert rs[0].status == "ok" and rs[1].status == "illegal"
+
+    @pytest.mark.skipif(not hasattr(os, "sched_setaffinity")
+                        or len(os.sched_getaffinity(0)) < 2,
+                        reason="needs sched_setaffinity and ≥2 cores")
+    def test_process_pool_matches_serial_statuses(self):
+        configs = [
+            Configuration(),
+            Configuration().child(Tile(loops=("i", "j"), sizes=(64, 64))),
+            Configuration().child(Parallelize(loop="k")),       # illegal
+            Configuration().child(Tile(loops=("i",), sizes=(4096,))),
+        ]
+        serial = WallclockBackend(scale=0.05, reps=1)
+        want = [r.status for r in serial.evaluate_many(GEMM, configs)]
+        with WallclockBackend(scale=0.05, reps=1, process_workers=2) as be:
+            got = [r.status for r in be.evaluate_many(GEMM, configs)]
+            assert be._pool is not None and not be._pool_broken
+            # each worker claimed a dedicated core via the lock directory
+            locks = [f for f in os.listdir(be._pool_lockdir)
+                     if f.startswith("cpu")]
+            assert len(locks) >= 1
+        assert got == want
+        assert be._pool is None             # context exit released the pool
