@@ -43,9 +43,8 @@ def run_one(wname: str, parallelize: bool) -> dict:
     }
     tag = f"fig_{wname}_{'par' if parallelize else 'nopar'}"
     save_result(tag, rec)
-    (save_result.__self__ if False else None)
-    from .common import RESULTS
-    (RESULTS / f"{tag}.csv").write_text(trace_csv(log))
+    from .common import results_dir
+    (results_dir() / f"{tag}.csv").write_text(trace_csv(log))
     return rec, log
 
 

@@ -3,15 +3,25 @@
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
 RESULTS = pathlib.Path(__file__).parent / "results"
 
 
+def results_dir() -> pathlib.Path:
+    """Where benchmark artifacts land.  ``CC_BENCH_RESULTS`` overrides the
+    in-repo ``benchmarks/results/`` — the bench smoke test points it at a
+    tmpdir so a pytest run never mutates the repo's committed results."""
+    override = os.environ.get("CC_BENCH_RESULTS")
+    return pathlib.Path(override) if override else RESULTS
+
+
 def save_result(name: str, payload: dict) -> pathlib.Path:
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    path = RESULTS / f"{name}.json"
+    d = results_dir()
+    d.mkdir(parents=True, exist_ok=True)
+    path = d / f"{name}.json"
     path.write_text(json.dumps(payload, indent=1, default=float))
     return path
 

@@ -5,6 +5,7 @@
   bench_mcts_vs_greedy    paper §VIII / ProTuner (beyond-paper strategies)
   bench_eval_cache        evaluation-engine experiments/sec vs pre-PR path
   bench_warm_start        persistent-store warm starts + MCTS transposition DAG
+  bench_surrogate         learned surrogate vs analytic ordering (wallclock)
   bench_kernels           Pallas kernel micro-benchmarks
   bench_roofline          §Roofline table from the 80-cell dry-run records
 
@@ -31,14 +32,17 @@ import os
 import sys
 import time
 
-TRAJECTORY = os.path.join(
-    os.path.dirname(os.path.abspath(__file__)), "results",
-    "BENCH_trajectory.json")
+def _trajectory_path() -> str:
+    """The cumulative trajectory file, honoring the ``CC_BENCH_RESULTS``
+    results-dir override (used by the pytest bench smoke test)."""
+    from .common import results_dir
+
+    return os.path.join(os.fspath(results_dir()), "BENCH_trajectory.json")
 
 
 def _load_trajectory() -> list:
     try:
-        with open(TRAJECTORY) as f:
+        with open(_trajectory_path()) as f:
             data = json.load(f)
         return data if isinstance(data, list) else []
     except (OSError, ValueError):
@@ -50,10 +54,11 @@ def _collect_gates(ran: set[str]) -> dict:
     that ran *to completion* in this invocation (a stale on-disk gate from
     an earlier run must not be re-recorded under this run's label, so
     failed suites are excluded even though a gate file may exist)."""
-    results = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                           "results")
+    from .common import results_dir
+
+    results = os.fspath(results_dir())
     gates: dict = {}
-    for name in ("eval_cache", "warm_start"):
+    for name in ("eval_cache", "warm_start", "surrogate"):
         if name not in ran:
             continue
         try:
@@ -92,7 +97,7 @@ def main(argv=None) -> None:
 
     from . import (bench_autotune, bench_beyond_transforms, bench_eval_cache,
                    bench_kernels, bench_mcts_vs_greedy, bench_pragma_stacking,
-                   bench_roofline, bench_warm_start)
+                   bench_roofline, bench_surrogate, bench_warm_start)
 
     suites = {
         "pragma_stacking": bench_pragma_stacking.main,
@@ -100,6 +105,7 @@ def main(argv=None) -> None:
         "mcts_vs_greedy": bench_mcts_vs_greedy.main,
         "eval_cache": bench_eval_cache.main,
         "warm_start": bench_warm_start.main,
+        "surrogate": bench_surrogate.main,
         "beyond_transforms": bench_beyond_transforms.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
@@ -168,14 +174,15 @@ def main(argv=None) -> None:
             "suites": {n: m for n, m in suite_meta.items()},
             "gates": gates,
         })
-        os.makedirs(os.path.dirname(TRAJECTORY), exist_ok=True)
+        trajectory = _trajectory_path()
+        os.makedirs(os.path.dirname(trajectory), exist_ok=True)
         # atomic replace: a crash mid-write must not destroy the cumulative
         # trajectory later PRs rely on
-        tmp = TRAJECTORY + ".tmp"
+        tmp = trajectory + ".tmp"
         with open(tmp, "w") as f:
             json.dump(traj, f, indent=1)
-        os.replace(tmp, TRAJECTORY)
-        print(f"appended gate row #{len(traj)} to {TRAJECTORY}")
+        os.replace(tmp, trajectory)
+        print(f"appended gate row #{len(traj)} to {trajectory}")
 
     failed_suites = [n for n, m in suite_meta.items() if m["failed"]]
     failed_gates = [n for n, a in gates.items() if not a.get("pass")]

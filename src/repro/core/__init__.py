@@ -33,6 +33,7 @@ from .measure import (
 from .resultstore import ResultStore, host_fingerprint
 from .searchspace import DEFAULT_TILE_SIZES, Configuration, SearchSpace
 from .strategies import STRATEGIES, run_beam, run_greedy, run_mcts, run_random
+from .surrogate import Surrogate, nest_from_key, spearman, structure_features
 from .transformations import (
     Interchange,
     Parallelize,
@@ -49,10 +50,11 @@ __all__ = [
     "CostModelBackend", "DEFAULT_TILE_SIZES", "EvalStats", "EvaluationEngine",
     "Experiment", "GEMM", "IllegalTransform", "Interchange", "Loop",
     "LoopNest", "Machine", "PAPER_WORKLOADS", "PallasBackend", "Parallelize",
-    "Result", "ResultStore", "SYR2K", "SearchSpace", "STRATEGIES", "TPU_V5E",
-    "Tile", "TransformError", "Transformation", "TuningLog", "Unroll",
-    "Vectorize", "WallclockBackend", "Workload", "XEON_8180M", "check_legal",
-    "estimate_time", "estimate_time_uncached", "host_fingerprint", "is_legal",
-    "make_nest", "matmul_workload", "run_beam", "run_greedy", "run_mcts",
-    "run_random",
+    "Result", "ResultStore", "SYR2K", "SearchSpace", "STRATEGIES",
+    "Surrogate", "TPU_V5E", "Tile", "TransformError", "Transformation",
+    "TuningLog", "Unroll", "Vectorize", "WallclockBackend", "Workload",
+    "XEON_8180M", "check_legal", "estimate_time", "estimate_time_uncached",
+    "host_fingerprint", "is_legal", "make_nest", "matmul_workload",
+    "nest_from_key", "run_beam", "run_greedy", "run_mcts", "run_random",
+    "spearman", "structure_features",
 ]

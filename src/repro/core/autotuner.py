@@ -104,8 +104,11 @@ class TuningLog:
 class Autotuner:
     """Paper-faithful greedy driver (exploitation-only priority queue).
 
-    ``cache``/``surrogate_order``/``store`` configure the shared evaluation
-    engine (``store`` attaches the persistent cross-run result cache — see
+    ``cache``/``surrogate``/``store`` configure the shared evaluation
+    engine (``surrogate`` is ``"analytic"`` | ``"learned"`` | a prefit
+    :class:`~repro.core.surrogate.Surrogate` | ``None``; ``surrogate_order``
+    is the deprecated bool alias for ``"analytic"``; ``store`` attaches the
+    persistent cross-run result cache — see
     :class:`~repro.core.resultstore.ResultStore`); an externally constructed
     ``engine`` may be injected instead (it carries the run's dedup state, so
     share one only across runs that should share it).
@@ -120,6 +123,7 @@ class Autotuner:
         max_seconds: float | None = None,
         on_experiment: Callable[[Experiment], None] | None = None,
         cache: bool = True,
+        surrogate=None,
         surrogate_order: bool = False,
         engine: EvaluationEngine | None = None,
         store=None,
@@ -132,7 +136,8 @@ class Autotuner:
         self.on_experiment = on_experiment
         self.engine = engine or EvaluationEngine(
             workload, space, backend,
-            cache=cache, surrogate_order=surrogate_order, store=store,
+            cache=cache, surrogate=surrogate,
+            surrogate_order=surrogate_order, store=store,
         )
 
     def run(self) -> TuningLog:

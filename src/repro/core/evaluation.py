@@ -31,8 +31,15 @@ path used by ``run_greedy`` / ``run_mcts`` / ``run_beam`` / ``run_random``:
    hits, intra-batch duplicates, and genuine misses, and hands the misses to
    ``Backend.evaluate_many`` (thread-pooled for compile+measure backends).
 4. **Surrogate-ordered expansion** — :meth:`order_children` ranks candidate
-   children by the memoized analytic cost model so wallclock-budgeted searches
-   evaluate the model's top-ranked children first.
+   children by a cost surrogate so wallclock-budgeted searches evaluate the
+   top-ranked children first.  ``surrogate="analytic"`` scores with the
+   memoized analytic cost model; ``surrogate="learned"`` scores with a
+   :class:`~repro.core.surrogate.Surrogate` regression fit to the measured
+   results (preloaded from the persistent store at construction, refit online
+   as the backend measures — falling back to the analytic model until enough
+   samples exist).  ``surrogate=None`` (default) preserves derivation order
+   byte-identically.  The old ``surrogate_order=True`` bool is kept as a
+   deprecated alias for ``surrogate="analytic"``.
 5. **Dedup bookkeeping** — the global ``seen`` set over canonical structure
    keys lives here, shared by the drivers instead of re-implemented per
    strategy: :meth:`sweep` filters eagerly (greedy), :meth:`claim` lazily
@@ -77,6 +84,7 @@ from .loopnest import LoopNest
 from .measure import Backend, Result
 from .resultstore import ResultStore
 from .searchspace import Configuration, SearchSpace
+from .surrogate import Surrogate
 from .transformations import TransformError
 from .workloads import Workload
 
@@ -119,14 +127,28 @@ class EvaluationEngine:
         Enable the structural result cache.  Off, every configuration is
         evaluated by the backend afresh (identical experiment ordering —
         used by the determinism tests and for noisy-backend re-measurement).
+    surrogate:
+        Child-ordering surrogate for :meth:`order_children` / :meth:`sweep`:
+
+        * ``None`` (default) — no reordering; derivation order is preserved
+          and runs stay byte-identical to the pre-surrogate drivers.
+        * ``"analytic"`` — rank cheapest-predicted-first by the memoized
+          analytic cost model (the former ``surrogate_order=True``).
+        * ``"learned"`` — rank by a :class:`~repro.core.surrogate.Surrogate`
+          regression fit to measured results: preloaded store records train
+          it before the first measurement, every backend-measured result
+          refits it online, and until ``min_fit`` samples exist it falls
+          back to the analytic ordering (cold-start behavior).
+        * a :class:`~repro.core.surrogate.Surrogate` instance — use it
+          directly (pre-fit models, custom hyperparameters); it still
+          receives online :meth:`~repro.core.surrogate.Surrogate.observe`
+          updates.
     surrogate_order:
-        Make :meth:`order_children` sort candidates by the memoized analytic
-        cost model (cheapest-predicted first) instead of preserving derivation
-        order.  Off by default so cost-model-backed runs stay byte-compatible
-        with the seed driver; turn on for wallclock/Pallas runs under a time
-        budget.
+        **Deprecated** boolean alias: ``surrogate_order=True`` means
+        ``surrogate="analytic"``.  Ignored when ``surrogate`` is given.
     surrogate_machine:
-        Machine model for surrogate scoring; defaults to the backend's
+        Machine model for analytic surrogate scoring (and the learned
+        surrogate's analytic anchor feature); defaults to the backend's
         ``machine`` when it has one, else the paper's Xeon 8180M.
     store:
         Persistent result store for cross-run warm starts.  ``None`` (the
@@ -148,6 +170,7 @@ class EvaluationEngine:
         space: SearchSpace,
         backend: Backend,
         cache: bool = True,
+        surrogate: "Surrogate | str | None" = None,
         surrogate_order: bool = False,
         surrogate_machine: Machine | None = None,
         store: "ResultStore | str | os.PathLike | bool | None" = None,
@@ -156,10 +179,22 @@ class EvaluationEngine:
         self.space = space
         self.backend = backend
         self.cache = cache
-        self.surrogate_order = surrogate_order
         self.surrogate_machine = surrogate_machine or getattr(
             backend, "machine", XEON_8180M
         )
+        if surrogate is None and surrogate_order:
+            surrogate = "analytic"      # deprecated bool alias
+        self._learned: Surrogate | None = None
+        if isinstance(surrogate, Surrogate):
+            self._learned = surrogate
+            surrogate = "learned"
+        elif surrogate == "learned":
+            self._learned = Surrogate(workload, machine=self.surrogate_machine)
+        elif surrogate not in (None, "analytic"):
+            raise ValueError(
+                f"EvaluationEngine: surrogate must be None, 'analytic', "
+                f"'learned' or a Surrogate instance, got {surrogate!r}")
+        self.surrogate = surrogate
         self.stats = EvalStats()
         self._results: dict[tuple, Result] = {}
         self._seen: set[tuple] = set()
@@ -183,6 +218,15 @@ class EvaluationEngine:
                 if warm:
                     self._results.update(warm)
                     self.stats.preloaded = len(warm)
+                    if self._learned is not None:
+                        # fit from the accumulated measurement log *before*
+                        # the first measurement (warm-start training)
+                        self._learned.fit_items(warm.items())
+
+    @property
+    def surrogate_order(self) -> bool:
+        """Deprecated read alias: True iff any surrogate ordering is active."""
+        return self.surrogate is not None
 
     # -- keys ----------------------------------------------------------------
 
@@ -236,26 +280,48 @@ class EvaluationEngine:
 
     # -- surrogate ordering ----------------------------------------------------
 
-    def _surrogate_score(self, nest: "LoopNest | TransformError") -> float:
+    def _surrogate_score(
+        self, nest: "LoopNest | TransformError", optimistic: bool = False
+    ) -> float:
         """Predicted time of a derived nest; ``inf`` for red candidates (no
         structure / illegal) so they sort last and a truncated budget is
-        spent on children that can actually win.  Single source of truth for
-        both :meth:`sweep` (greedy) and :meth:`order_children` (beam)."""
+        spent on children that can actually win.  Scores with the learned
+        surrogate when one is active and fitted, else the analytic model.
+        Single source of truth for :meth:`sweep` (greedy),
+        :meth:`order_children` (beam) and :meth:`surrogate_score` (MCTS).
+        ``optimistic`` switches a fitted learned surrogate to its
+        lower-confidence-bound estimate (exploration bonus); the analytic
+        fallback has no uncertainty, so the flag changes nothing there."""
         if isinstance(nest, TransformError):
             return float("inf")
         try:
             check_legal(nest)
         except IllegalTransform:
             return float("inf")
+        if self._learned is not None and self._learned.ready:
+            key = nest.structure_key()
+            if optimistic:
+                return self._learned.lcb(key, nest=nest)
+            return self._learned.predict_one(key, nest=nest)
         return estimate_time(nest, self.surrogate_machine)
+
+    def surrogate_score(self, config: Configuration) -> float:
+        """Surrogate score of one configuration (``inf`` for red candidates)
+        — the expansion-prior hook used by MCTS.  With a fitted learned
+        surrogate this is the optimistic lower-confidence-bound estimate
+        (``exp(mean − std)``), so high-uncertainty structures receive an
+        exploration bonus; otherwise the analytic prediction."""
+        return self._surrogate_score(
+            self.space.try_structure(config), optimistic=True)
 
     def order_children(
         self, configs: Sequence[Configuration]
     ) -> list[Configuration]:
-        """Rank candidates cheapest-predicted-first by the analytic model.
+        """Rank candidates cheapest-predicted-first by the active surrogate.
         The sort is stable, so equal scores keep derivation order
-        (determinism)."""
-        if not self.surrogate_order:
+        (determinism); with ``surrogate=None`` the input order is returned
+        unchanged."""
+        if self.surrogate is None:
             return list(configs)
         return sorted(
             configs, key=lambda c: self._surrogate_score(self.space.try_structure(c))
@@ -327,6 +393,10 @@ class EvaluationEngine:
                 results[i] = res
                 if cache is not None:
                     cache[nest.structure_key()] = res
+                if self._learned is not None:
+                    # online training: the learned surrogate refits lazily
+                    # every ``refit_every`` fresh measurements
+                    self._learned.observe(nest.structure_key(), res)
             if self.store is not None:
                 # Persist the batch in one atomic append — a re-tune (or a
                 # concurrent run on another machine slot) starts warm from
@@ -380,7 +450,7 @@ class EvaluationEngine:
                 batch_seen.add(key)
             picked.append((c, nest, key))
 
-        if self.surrogate_order:
+        if self.surrogate is not None:
             picked.sort(key=lambda item: self._surrogate_score(item[1]))
 
         if room is not None:
@@ -400,7 +470,7 @@ class EvaluationEngine:
     def stats_dict(self) -> dict[str, float]:
         # _results also holds ("path", ...)-keyed red compile_error entries;
         # count only genuinely measured structures
-        return {
+        out = {
             "hits": self.stats.hits,
             "misses": self.stats.misses,
             "deduped": self.stats.deduped,
@@ -410,3 +480,10 @@ class EvaluationEngine:
                 1 for k in self._results if not (k and k[0] == "path")
             ),
         }
+        # only when a surrogate is active: surrogate=None logs must stay
+        # byte-identical to the pre-surrogate drivers
+        if self.surrogate is not None:
+            out["surrogate"] = (self._learned.stats()
+                                if self._learned is not None
+                                else {"model": "analytic"})
+        return out

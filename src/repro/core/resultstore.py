@@ -158,6 +158,21 @@ class ResultStore:
                 self._written.add((workload_fp, scope, encode_key(key)))
         return out
 
+    def ok_items(self, workload_fp: str, scope: str
+                 ) -> list[tuple[tuple, float]]:
+        """The measured ``ok`` records of one (workload, scope) as
+        ``(canonical key, seconds)`` pairs, sorted by encoded key — the
+        canonical training/held-out set for the learned surrogate
+        (:class:`~repro.core.surrogate.Surrogate`): the sort makes the split
+        and the fit independent of on-disk record order."""
+        items = [
+            (key, res.time_s)
+            for key, res in self.load(workload_fp, scope).items()
+            if res.ok and res.time_s is not None
+        ]
+        items.sort(key=lambda kv: encode_key(kv[0]))
+        return items
+
     def count(self) -> int:
         """Parseable current-schema records in the log (diagnostics only)."""
         n = 0

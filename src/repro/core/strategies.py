@@ -49,12 +49,13 @@ def run_greedy(
     backend: Backend,
     budget: int = 400,
     cache: bool = True,
+    surrogate=None,
     surrogate_order: bool = False,
     store=None,
 ) -> TuningLog:
     return Autotuner(workload, space, backend, max_experiments=budget,
-                     cache=cache, surrogate_order=surrogate_order,
-                     store=store).run()
+                     cache=cache, surrogate=surrogate,
+                     surrogate_order=surrogate_order, store=store).run()
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +152,7 @@ def run_mcts(
     seed: int = 0,
     cache: bool = True,
     transpositions: bool = True,
+    surrogate=None,
     store=None,
 ) -> TuningLog:
     """UCT with progressive widening over the transposition DAG.
@@ -180,12 +182,27 @@ def run_mcts(
     be pure trajectory variance — so cold results are byte-identical to
     ``transpositions=False``.
 
+    ``surrogate`` ("analytic" | "learned" | a prefit
+    :class:`~repro.core.surrogate.Surrogate` | None) adds an **expansion
+    prior** (surrogate-informed MCTS, arXiv:2105.04555): each node's untried
+    children are ordered by the engine's surrogate score before expansion, so
+    progressive widening spends its slots on the structures the model ranks
+    fastest.  A fitted learned surrogate scores with its optimistic
+    lower-confidence bound, so high-uncertainty structures keep an
+    exploration bonus.  Exact stored measurements (warm runs) still dominate
+    the ordering; the prior only ranks the *unknown* structures between
+    them.  ``surrogate=None`` (default) keeps the search byte-identical to
+    the prior-free driver.  Note the prior derives a canonical key per
+    candidate child (like warm ordering does), trading per-node keying cost
+    for better expansion order — worth it when evaluation is expensive
+    (wallclock/Pallas), not for free cost-model sweeps.
+
     ``log.cache`` carries the engine counters plus ``transpositions`` (edges
     added) and ``dag_nodes`` (unique structures in the graph).
     """
     rng = random.Random(seed)
     engine = EvaluationEngine(workload, space, backend, cache=cache,
-                              store=store)
+                              surrogate=surrogate, store=store)
     log = TuningLog(workload=workload.name, backend=backend.name)
     table: dict[tuple, _Node] = {}
     n_links = 0
@@ -236,15 +253,17 @@ def run_mcts(
     # keying — one canonical key per *popped* candidate — because deep nodes
     # derive thousands of children and progressive widening expands only a
     # handful, so eager keying would dominate a cold run's wall time for a
-    # handful of early links.
+    # handful of early links.  A surrogate expansion prior opts into the
+    # same eager keying (the score needs the derived structure anyway).
     warm_order = engine.stats.preloaded > 0
+    prior = engine.surrogate is not None
 
     def ensure_untried(node: _Node) -> None:
         if node.untried is not None:
             return
         kids = space.children(node.config, dedup=False)
         rng.shuffle(kids)
-        if not warm_order:
+        if not (warm_order or prior):
             node.untried = kids
             return
         # Transposition merge at derivation time: children that re-derive an
@@ -255,7 +274,7 @@ def run_mcts(
         fresh: list[tuple[Configuration, tuple]] = []
         for k in kids:
             key = engine.canonical_key(k)
-            if transpositions:
+            if transpositions and warm_order:
                 existing = table.get(key)
                 if existing is not None:
                     link(node, existing)
@@ -263,10 +282,13 @@ def run_mcts(
             fresh.append((k, key))
 
         # untried is popped from the end: sort so stored-good structures
-        # are popped first, unknowns next, stored-red last
+        # are popped first, unknowns next (best-predicted first when a
+        # surrogate prior is active), stored-red last
         def rank(item: tuple[Configuration, tuple]):
             res = engine.peek(item[1])
             if res is None:
+                if prior:
+                    return (1, -engine.surrogate_score(item[0]))
                 return (1, 0.0)
             if not res.ok:
                 return (0, 0.0)
@@ -365,6 +387,7 @@ def run_beam(
     budget: int = 400,
     width: int = 4,
     cache: bool = True,
+    surrogate=None,
     surrogate_order: bool = False,
     store=None,
 ) -> TuningLog:
@@ -374,9 +397,14 @@ def run_beam(
     dispatched as **one** ``evaluate_many`` batch (thread-pooled on
     compile+measure backends).  Children proposed by several beam parents
     are structurally duplicate: the engine's ``claim`` drops them (first
-    parent wins) so they consume no budget.
+    parent wins) so they consume no budget.  ``surrogate``
+    ("analytic" | "learned" | None) orders each level's children before the
+    budget truncation, so a truncated level keeps the children the model
+    ranks fastest (``surrogate_order=True`` is the deprecated alias for
+    "analytic").
     """
     engine = EvaluationEngine(workload, space, backend, cache=cache,
+                              surrogate=surrogate,
                               surrogate_order=surrogate_order, store=store)
     log = TuningLog(workload=workload.name, backend=backend.name)
 
@@ -429,6 +457,7 @@ def run_random(
     max_depth: int = 4,
     seed: int = 0,
     cache: bool = True,
+    surrogate=None,
     store=None,
 ) -> TuningLog:
     """Uniform random walks from the root.
@@ -439,10 +468,15 @@ def run_random(
     tree plots wrong).  A walk re-entering an already-logged derivation path
     reuses that experiment as the parent instead of re-logging it, and the
     engine's structural cache makes the shared prefixes free to re-measure.
+
+    ``surrogate`` is accepted for strategy-API uniformity (and so a shared
+    learned surrogate still receives this run's measurements as training
+    data), but uniform walks never *order* children by it — random is the
+    surrogate-free control in every comparison.
     """
     rng = random.Random(seed)
     engine = EvaluationEngine(workload, space, backend, cache=cache,
-                              store=store)
+                              surrogate=surrogate, store=store)
     log = TuningLog(workload=workload.name, backend=backend.name)
 
     def record(config: Configuration, parent_num: int | None) -> Experiment:

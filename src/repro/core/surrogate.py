@@ -1,0 +1,563 @@
+"""Learned cost surrogate trained on the persistent measurement log.
+
+The analytic cost model (:mod:`repro.core.costmodel`) ranks children by a
+first-principles machine model.  That model is deliberately *not* the machine
+the wallclock backend measures on — it predicts a 112-thread Xeon while this
+container executes on whatever cores it actually has — so analytic
+``surrogate_order`` mis-ranks exactly where measured data disagrees with the
+model's assumptions.  Model-guided autotuning (arXiv:2010.08040 for Bayesian
+search over loop-transformation configurations, arXiv:2105.04555 for
+surrogate-informed MCTS expansion) closes that gap by *fitting* the ranking
+function to the accumulated measurement log — which is precisely what the
+:class:`~repro.core.resultstore.ResultStore` persists across runs.
+
+This module implements that learned surrogate with zero new dependencies:
+
+* :func:`structure_features` — a fixed-length numeric feature vector extracted
+  from a canonical structure key (loop depth, grid/tile volumes, tile-size
+  chains per source var, interchange positions, parallel/unroll/vectorize
+  markers) plus workload fingerprint features (extents, access contiguity,
+  triangularity).  One feature is the log of the *analytic* model's own
+  prediction, so the regression learns the measured-vs-model residual — the
+  learned surrogate can only refine the analytic ranking, never start from
+  less information than it.
+* :class:`Surrogate` — pure-numpy regularized regression over those features.
+  Two model forms: Bayesian ridge (``model="ridge"``, the default — closed
+  form, calibrated predictive uncertainty for exploration bonuses) and
+  gradient-boosted stumps (``model="stumps"`` — piecewise-constant, captures
+  threshold effects like "tile fits in L2").  Both are deterministic: the
+  same training set produces byte-identical rankings in any process.
+* :func:`nest_from_key` — reconstructs a :class:`LoopNest` from a canonical
+  structure key and its workload, which is what lets the surrogate (and the
+  benchmark gates) score *stored* keys without replaying any derivation.
+* :func:`spearman` — rank correlation, used by the acceptance gate
+  (``benchmarks/bench_surrogate.py``): the learned surrogate's held-out rank
+  correlation must beat the analytic model's.
+
+Training data flows in two ways:
+
+* **Warm start** — ``EvaluationEngine(surrogate="learned", store=...)`` fits
+  the surrogate from the preloaded store records before the first
+  measurement (see :meth:`Surrogate.fit`).
+* **Online refit** — every backend-measured result is :meth:`observe`-d; the
+  model refits lazily once ``refit_every`` new samples accumulate, so a cold
+  run's ordering improves *during* the search.
+
+Until ``min_fit`` ok-samples exist the surrogate reports ``ready == False``
+and the engine falls back to the analytic ordering — a cold learned run
+starts exactly as an analytic one and takes over as evidence accumulates.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .costmodel import XEON_8180M, Machine, estimate_time
+from .loopnest import Loop, LoopNest, encode_key
+from .measure import Result
+from .workloads import Workload
+
+__all__ = [
+    "Surrogate",
+    "nest_from_key",
+    "spearman",
+    "structure_features",
+]
+
+
+# ---------------------------------------------------------------------------
+# Structure-key → LoopNest reconstruction
+# ---------------------------------------------------------------------------
+
+
+def nest_from_key(key: tuple, workload: Workload) -> LoopNest:
+    """Reconstruct a :class:`LoopNest` from a canonical structure key.
+
+    A structure key is a tuple of per-loop tuples
+    ``(origin, trips, parallel, is_point, span, unroll, vectorize)`` — see
+    :meth:`LoopNest.skey`.  Together with the workload (accesses, extents,
+    triangular pairs, flops) that determines everything the cost model and
+    the legality checker consume; loop *names* are synthesized (they carry no
+    structural information).  Raises :class:`ValueError` for anything that is
+    not a structure key — including the ``("path", ...)`` red-node keys the
+    result store also holds.
+    """
+    if not isinstance(key, tuple):
+        raise ValueError(f"not a structure key: {type(key).__name__}")
+    if key and key[0] == "path":
+        raise ValueError("path key (red node) has no structure")
+    loops = []
+    for i, entry in enumerate(key):
+        if not (isinstance(entry, tuple) and len(entry) == 7):
+            raise ValueError(f"malformed structure key entry #{i}: {entry!r}")
+        origin, trips, parallel, is_point, span, unroll, vectorize = entry
+        if (not isinstance(origin, str)
+                or not isinstance(trips, int) or isinstance(trips, bool)
+                or trips <= 0
+                or not isinstance(parallel, bool)
+                or not isinstance(is_point, bool)
+                or not isinstance(span, int) or isinstance(span, bool)
+                or not isinstance(unroll, int) or isinstance(unroll, bool)
+                or not isinstance(vectorize, bool)):
+            raise ValueError(f"malformed structure key entry #{i}: {entry!r}")
+        loops.append(Loop(
+            name=f"{origin}.{i}", origin=origin, trips=trips,
+            parallel=parallel, is_point=is_point, span=span,
+            unroll=unroll, vectorize=vectorize,
+        ))
+    base = workload.nest()
+    return LoopNest(
+        name=base.name,
+        loops=tuple(loops),
+        accesses=base.accesses,
+        extents=dict(base.extents),
+        triangular=base.triangular,
+        flops_per_point=base.flops_per_point,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Feature extraction
+# ---------------------------------------------------------------------------
+
+_VMAX = 4           # source vars featurized individually (paper kernels: 3)
+_PER_VAR = 8
+
+
+def feature_names(workload: Workload) -> list[str]:
+    """Column names of :func:`structure_features` (diagnostics/tests)."""
+    names = [
+        "log_analytic",
+        "n_loops", "n_point", "n_parallel", "n_unrolled", "n_vectorized",
+        "log_grid_steps", "log_tile_volume", "log_parallel_trips",
+        "log_fork_entries",
+        "inner_log_trips", "inner_is_point", "inner_parallel",
+        "inner_contiguity", "depth_ratio",
+    ]
+    vars_ = (tuple(workload.loop_order) + ("",) * _VMAX)[:_VMAX]
+    for v in vars_:
+        tag = v or "pad"
+        names += [
+            f"{tag}.n_loops", f"{tag}.n_levels", f"{tag}.log_outer_tile",
+            f"{tag}.log_inner_tile", f"{tag}.pos_outer", f"{tag}.pos_inner",
+            f"{tag}.parallel", f"{tag}.log_extent",
+        ]
+    return names
+
+
+def structure_features(
+    key: tuple, workload: Workload, machine: Machine = XEON_8180M,
+    nest: LoopNest | None = None,
+) -> np.ndarray:
+    """Fixed-length feature vector for one canonical structure key.
+
+    Pure function of ``(key, workload, machine)`` — no hashing, no process
+    state — so the same store trains byte-identical models everywhere.  Pass
+    ``nest`` when the caller already holds the derived nest (the evaluation
+    engine does) to skip the :func:`nest_from_key` reconstruction.
+    """
+    if nest is None:
+        nest = nest_from_key(key, workload)
+    loops = nest.loops
+    n = len(loops)
+    lg = lambda x: math.log2(max(float(x), 1.0))  # noqa: E731
+
+    grid = 1.0
+    tile = 1.0
+    par = 1.0
+    n_point = n_par = n_unroll = n_vec = 0
+    outermost_par = None
+    for i, l in enumerate(loops):
+        if l.is_point:
+            n_point += 1
+            tile *= l.trips
+        else:
+            grid *= l.trips
+        if l.parallel:
+            n_par += 1
+            par *= l.trips
+            if outermost_par is None:
+                outermost_par = i
+        if l.unroll > 1:
+            n_unroll += 1
+        if l.vectorize:
+            n_vec += 1
+    fork = 1.0
+    if outermost_par is not None:
+        for l in loops[:outermost_par]:
+            fork *= l.trips
+
+    inner = loops[-1] if loops else None
+    accesses = nest.accesses
+    if inner is not None and accesses:
+        contig = sum(
+            1 for a in accesses if a.vars and a.vars[-1] == inner.origin
+        ) / len(accesses)
+    else:
+        contig = 0.0
+
+    feats = [
+        math.log(max(estimate_time(nest, machine), 1e-12)),
+        float(n), float(n_point), float(n_par), float(n_unroll), float(n_vec),
+        lg(grid), lg(tile), lg(par), lg(fork),
+        lg(inner.trips) if inner else 0.0,
+        float(inner.is_point) if inner else 0.0,
+        float(inner.parallel) if inner else 0.0,
+        contig,
+        n / max(len(workload.loop_order), 1),
+    ]
+
+    vars_ = (tuple(workload.loop_order) + ("",) * _VMAX)[:_VMAX]
+    for v in vars_:
+        mine = [(i, l) for i, l in enumerate(loops) if l.origin == v]
+        points = [l.trips for _, l in mine if l.is_point]
+        if not v or not mine:
+            feats += [0.0] * _PER_VAR
+            continue
+        feats += [
+            float(len(mine)),
+            float(len(points)),
+            lg(points[0]) if points else 0.0,
+            lg(points[-1]) if points else 0.0,
+            mine[0][0] / n,
+            mine[-1][0] / n,
+            float(any(l.parallel for _, l in mine)),
+            lg(workload.extents.get(v, 1)),
+        ]
+    return np.asarray(feats, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Rank correlation (gate metric)
+# ---------------------------------------------------------------------------
+
+
+def _ranks(x: np.ndarray) -> np.ndarray:
+    """Average ranks (1-based), ties averaged — Spearman's rank transform."""
+    x = np.asarray(x, dtype=np.float64)
+    order = np.argsort(x, kind="stable")
+    sx = x[order]
+    r = np.empty(len(x))
+    i = 0
+    while i < len(x):
+        j = i
+        while j + 1 < len(x) and sx[j + 1] == sx[i]:
+            j += 1
+        r[i:j + 1] = (i + j) / 2.0 + 1.0
+        i = j + 1
+    out = np.empty(len(x))
+    out[order] = r
+    return out
+
+
+def spearman(a: Sequence[float], b: Sequence[float]) -> float:
+    """Spearman rank correlation of two equal-length sequences (0.0 when
+    either side is constant or shorter than 2 — no ranking information)."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    if len(a) != len(b):
+        raise ValueError(f"length mismatch: {len(a)} vs {len(b)}")
+    if len(a) < 2:
+        return 0.0
+    ra, rb = _ranks(a), _ranks(b)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = math.sqrt(float(ra @ ra) * float(rb @ rb))
+    if denom == 0.0:
+        return 0.0
+    return float(ra @ rb) / denom
+
+
+# ---------------------------------------------------------------------------
+# The surrogate model
+# ---------------------------------------------------------------------------
+
+
+class Surrogate:
+    """Learned execution-time surrogate for one (workload, backend scope).
+
+    Training samples are ``(canonical structure key, measured seconds)``
+    pairs; the regression target is log-time (multiplicative errors, and the
+    4+ orders of magnitude between a naive and a blocked schedule stay
+    numerically tame).  Only ``ok`` results train the model — red nodes carry
+    no time, and legality is checked separately by the engine.
+
+    ``model="ridge"`` (default): Bayesian ridge regression,
+    ``w = (XᵀX + λI)⁻¹ Xᵀy`` over standardized features, with the closed-form
+    predictive variance ``s²(1 + xᵀ(XᵀX + λI)⁻¹x)`` as the uncertainty
+    estimate (:meth:`std_one`) — what MCTS expansion priors use as an
+    exploration bonus (:meth:`lcb`).
+
+    ``model="stumps"``: gradient-boosted depth-1 regression trees (least-
+    squares stumps, shrinkage ``learning_rate``), for threshold effects the
+    linear model cannot express; uncertainty degrades to the constant
+    training RMSE.
+
+    Both are pure numpy, fully deterministic (training items are canonically
+    ordered by encoded key before fitting), and cheap to refit — the engine
+    refits online every ``refit_every`` new measurements.
+    """
+
+    def __init__(
+        self,
+        workload: Workload,
+        machine: Machine | None = None,
+        model: str = "ridge",
+        ridge_lambda: float = 1.0,
+        min_fit: int = 8,
+        refit_every: int = 8,
+        n_rounds: int = 120,
+        learning_rate: float = 0.15,
+    ):
+        if model not in ("ridge", "stumps"):
+            raise ValueError(f"Surrogate: unknown model {model!r} "
+                             f"(choose 'ridge' or 'stumps')")
+        self.workload = workload
+        self.machine = machine or XEON_8180M
+        self.model = model
+        self.ridge_lambda = float(ridge_lambda)
+        self.min_fit = int(min_fit)
+        self.refit_every = int(refit_every)
+        self.n_rounds = int(n_rounds)
+        self.learning_rate = float(learning_rate)
+        # encoded key → (key, log_time); encoded-key dict gives O(1) dedup
+        # and a canonical (sorted) fit order independent of insertion order.
+        self._samples: dict[str, tuple[tuple, float]] = {}
+        self._feat_cache: dict[tuple, np.ndarray] = {}
+        self._pending = 0           # observations since the last fit
+        self._fitted = False
+        self._version = 0
+        self._pred_cache: dict[tuple, tuple[float, float]] = {}
+        # ridge state
+        self._mu: np.ndarray | None = None
+        self._sd: np.ndarray | None = None
+        self._w: np.ndarray | None = None
+        self._A_inv: np.ndarray | None = None
+        self._s2 = 0.0
+        # stumps state
+        self._base = 0.0
+        self._stumps: list[tuple[int, float, float, float]] = []
+        self._rmse = 0.0
+
+    # -- construction from the persistent log --------------------------------
+
+    @classmethod
+    def fit(cls, store, workload: Workload, scope: str,
+            machine: Machine | None = None, **kwargs) -> "Surrogate":
+        """Fit a surrogate from every stored ``ok`` record of one
+        (workload, backend scope) — the measurement log the
+        :class:`~repro.core.resultstore.ResultStore` accumulates across runs.
+
+        ``store`` is a :class:`ResultStore` or a path to one.
+        """
+        from .resultstore import ResultStore
+
+        if not isinstance(store, ResultStore):
+            store = ResultStore.shared(store)
+        s = cls(workload, machine=machine, **kwargs)
+        s.fit_items(store.load(workload.fingerprint(), scope).items())
+        return s
+
+    def fit_items(
+        self, items: Iterable[tuple[tuple, "Result | float"]]
+    ) -> "Surrogate":
+        """Ingest (key, Result-or-seconds) pairs and fit immediately (if at
+        least ``min_fit`` ok-samples exist).  Returns self for chaining."""
+        for key, res in items:
+            self.observe(key, res)
+        self._refit(force=True)
+        return self
+
+    # -- online accumulation ---------------------------------------------------
+
+    def observe(self, key: tuple, result: "Result | float") -> None:
+        """Record one measured structure.  Non-ok results, path keys (red
+        nodes have no structure) and duplicates are ignored."""
+        if isinstance(result, Result):
+            if not result.ok or result.time_s is None:
+                return
+            t = float(result.time_s)
+        else:
+            t = float(result)
+        if t <= 0.0 or not isinstance(key, tuple) or (key and key[0] == "path"):
+            return
+        ek = encode_key(key)
+        if ek in self._samples:
+            return
+        self._samples[ek] = (key, math.log(t))
+        self._pending += 1
+
+    @property
+    def n_samples(self) -> int:
+        return len(self._samples)
+
+    @property
+    def ready(self) -> bool:
+        """True once a model has been fit — callers fall back to the analytic
+        ordering until then (cold-start behavior)."""
+        self._refit()
+        return self._fitted
+
+    # -- fitting ---------------------------------------------------------------
+
+    def _features(self, key: tuple, nest: LoopNest | None = None) -> np.ndarray:
+        f = self._feat_cache.get(key)
+        if f is None:
+            f = structure_features(key, self.workload, self.machine, nest=nest)
+            self._feat_cache[key] = f
+        return f
+
+    def _refit(self, force: bool = False) -> None:
+        if len(self._samples) < self.min_fit:
+            return
+        if self._fitted and not force and self._pending < self.refit_every:
+            return
+        # canonical order: byte-identical fits regardless of insertion order
+        ordered = sorted(self._samples.items())
+        X = np.stack([self._features(key) for _, (key, _) in ordered])
+        y = np.array([lt for _, (_, lt) in ordered])
+        if self.model == "ridge":
+            self._fit_ridge(X, y)
+        else:
+            self._fit_stumps(X, y)
+        self._pending = 0
+        self._fitted = True
+        self._version += 1
+        self._pred_cache.clear()
+
+    def _fit_ridge(self, X: np.ndarray, y: np.ndarray) -> None:
+        self._mu = X.mean(axis=0)
+        sd = X.std(axis=0)
+        sd[sd < 1e-12] = 1.0        # constant columns contribute nothing
+        self._sd = sd
+        Z = (X - self._mu) / sd
+        Z = np.hstack([np.ones((len(Z), 1)), Z])
+        A = Z.T @ Z + self.ridge_lambda * np.eye(Z.shape[1])
+        A[0, 0] -= self.ridge_lambda        # do not shrink the intercept
+        A_inv = np.linalg.inv(A)
+        w = A_inv @ (Z.T @ y)
+        resid = y - Z @ w
+        dof = max(len(y) - 1, 1)
+        self._w = w
+        self._A_inv = A_inv
+        self._s2 = max(float(resid @ resid) / dof, 1e-8)
+
+    def _fit_stumps(self, X: np.ndarray, y: np.ndarray) -> None:
+        self._base = float(y.mean())
+        resid = y - self._base
+        stumps: list[tuple[int, float, float, float]] = []
+        n, d = X.shape
+        for _ in range(self.n_rounds):
+            best = None     # (sse, feat, thresh, left, right)
+            for j in range(d):
+                col = X[:, j]
+                uniq = np.unique(col)
+                if len(uniq) < 2:
+                    continue
+                order = np.argsort(col, kind="stable")
+                sc, sr = col[order], resid[order]
+                csum = np.cumsum(sr)
+                csq = np.cumsum(sr * sr)
+                total, total_sq = csum[-1], csq[-1]
+                # candidate splits between distinct adjacent values
+                cut = np.nonzero(sc[1:] > sc[:-1])[0]
+                if len(cut) == 0:
+                    continue
+                nl = cut + 1
+                nr = n - nl
+                sl, sq_l = csum[cut], csq[cut]
+                sr_, sq_r = total - sl, total_sq - sq_l
+                sse = (sq_l - sl * sl / nl) + (sq_r - sr_ * sr_ / nr)
+                k = int(np.argmin(sse))
+                cand = (float(sse[k]), j,
+                        float((sc[cut[k]] + sc[cut[k] + 1]) / 2.0),
+                        float(sl[k] / nl[k]), float(sr_[k] / nr[k]))
+                if best is None or cand[0] < best[0] - 1e-15:
+                    best = cand
+            if best is None:
+                break
+            _, j, thresh, left, right = best
+            stumps.append((j, thresh,
+                           self.learning_rate * left,
+                           self.learning_rate * right))
+            pred = np.where(X[:, j] <= thresh,
+                            self.learning_rate * left,
+                            self.learning_rate * right)
+            resid = resid - pred
+            if float(resid @ resid) / n < 1e-10:
+                break
+        self._stumps = stumps
+        self._rmse = max(math.sqrt(float(resid @ resid) / n), 1e-4)
+
+    # -- prediction ------------------------------------------------------------
+
+    def _predict_log(self, key: tuple, nest: LoopNest | None = None
+                     ) -> tuple[float, float]:
+        """(mean, std) of the predicted log-time."""
+        self._refit()
+        if not self._fitted:
+            raise RuntimeError(
+                "Surrogate not fitted yet "
+                f"({len(self._samples)}/{self.min_fit} samples) — "
+                "check .ready and fall back to the analytic model")
+        hit = self._pred_cache.get(key)
+        if hit is not None:
+            return hit
+        x = self._features(key, nest=nest)
+        if self.model == "ridge":
+            z = np.concatenate([[1.0], (x - self._mu) / self._sd])
+            mean = float(z @ self._w)
+            var = self._s2 * (1.0 + float(z @ self._A_inv @ z))
+            out = (mean, math.sqrt(max(var, 0.0)))
+        else:
+            mean = self._base
+            for j, thresh, left, right in self._stumps:
+                mean += left if x[j] <= thresh else right
+            out = (float(mean), self._rmse)
+        self._pred_cache[key] = out
+        return out
+
+    def predict_one(self, key: tuple, nest: LoopNest | None = None) -> float:
+        """Predicted execution time (seconds) of one structure."""
+        return math.exp(self._predict_log(key, nest=nest)[0])
+
+    def predict(self, keys: Sequence[tuple]) -> np.ndarray:
+        return np.array([self.predict_one(k) for k in keys])
+
+    def std_one(self, key: tuple, nest: LoopNest | None = None) -> float:
+        """Predictive uncertainty (std of log-time — a multiplicative
+        factor): exploration bonuses should widen with it."""
+        return self._predict_log(key, nest=nest)[1]
+
+    def lcb(self, key: tuple, nest: LoopNest | None = None,
+            kappa: float = 1.0) -> float:
+        """Optimistic (lower-confidence-bound) time estimate,
+        ``exp(mean − κ·std)`` — structures the model is *unsure* about look
+        faster, so exploration is biased toward them (the expansion prior of
+        arXiv:2105.04555)."""
+        mean, std = self._predict_log(key, nest=nest)
+        return math.exp(mean - kappa * std)
+
+    # -- ranking ---------------------------------------------------------------
+
+    def rank(self, keys: Sequence[tuple]) -> list[int]:
+        """Indices of ``keys`` sorted fastest-predicted-first (stable: ties
+        keep input order).  This is the child-ordering primitive the engine
+        builds :meth:`EvaluationEngine.order_children` on."""
+        preds = self.predict(keys)
+        return [int(i) for i in np.argsort(preds, kind="stable")]
+
+    def stats(self) -> dict:
+        """Fit diagnostics (recorded in benchmark summaries)."""
+        self._refit()
+        return {
+            "model": self.model,
+            "n_samples": len(self._samples),
+            "fitted": self._fitted,
+            "version": self._version,
+            "resid_std": (math.sqrt(self._s2) if self.model == "ridge"
+                          else self._rmse) if self._fitted else None,
+        }

@@ -1,0 +1,61 @@
+"""CI smoke for the perf gates: ``benchmarks/run.py --quick --json`` must
+exit 0 and append a well-formed trajectory row.
+
+Runs the real harness in a subprocess with ``CC_BENCH_RESULTS`` pointed at a
+tmpdir, so the repo's committed ``benchmarks/results/`` artifacts (including
+the cumulative ``BENCH_trajectory.json`` perf trajectory) are never touched
+by a pytest run.  This is what makes the acceptance gates of the perf PRs
+(eval-cache speedup, MCTS warm-start halving) run under plain tier-1 pytest
+instead of only when someone remembers to invoke the harness."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_quick_gates_pass_and_trajectory_row_is_well_formed(tmp_path):
+    committed = os.path.join(REPO, "benchmarks", "results",
+                             "BENCH_trajectory.json")
+    before = open(committed).read() if os.path.exists(committed) else None
+
+    out_json = tmp_path / "quick.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["CC_BENCH_RESULTS"] = str(tmp_path)
+    env.pop("CC_RESULT_STORE", None)    # gates must measure cold
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick",
+         "--json", str(out_json)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, (
+        f"--quick gate regression (exit {proc.returncode}):\n"
+        f"{proc.stdout[-3000:]}\n{proc.stderr[-3000:]}")
+
+    # the --json payload is machine-readable and complete
+    payload = json.loads(out_json.read_text())
+    assert set(payload) == {"suites", "rows", "gates"}
+    assert not any(m["failed"] for m in payload["suites"].values())
+    assert payload["gates"], "quick mode must record acceptance gates"
+    assert all(g.get("pass") for g in payload["gates"].values())
+    for row in payload["rows"]:
+        assert {"name", "us_per_call", "derived"} <= set(row)
+
+    # a well-formed row was appended to the (redirected) trajectory
+    traj = json.loads((tmp_path / "BENCH_trajectory.json").read_text())
+    assert isinstance(traj, list) and len(traj) == 1
+    row = traj[-1]
+    assert {"timestamp", "label", "quick", "suites", "gates"} <= set(row)
+    assert row["quick"] is True
+    assert row["label"] == "quick.json"
+    assert row["gates"] == payload["gates"]
+
+    # and the committed trajectory was left alone
+    after = open(committed).read() if os.path.exists(committed) else None
+    assert after == before

@@ -1,0 +1,132 @@
+"""Structure-key codec round trips: ``encode_key``/``decode_key`` and
+``SearchSpace.try_canonical_key``.
+
+The persistent result store serializes canonical keys to JSON strings; a key
+that does not survive ``decode_key(encode_key(k)) == k`` byte-for-byte would
+silently split (or merge!) store records across runs.  Property tests run
+under hypothesis when it is installed (the conftest shim skips them
+otherwise); the deterministic pseudo-random walks below always run.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import GEMM, SYR2K, Configuration, SearchSpace
+from repro.core.loopnest import decode_key, encode_key, tuplize
+from repro.core.transformations import TransformError
+
+# -- hypothesis strategies ---------------------------------------------------
+
+_scalar = st.one_of(
+    st.booleans(),
+    st.integers(min_value=-(2 ** 53), max_value=2 ** 53),
+    st.text(max_size=12),
+)
+_key = st.recursive(
+    _scalar, lambda inner: st.lists(inner, max_size=5).map(tuple), max_leaves=24
+).flatmap(lambda v: st.just(v if isinstance(v, tuple) else (v,)))
+
+
+class TestEncodeDecodeRoundTrip:
+    @given(key=_key)
+    @settings(max_examples=200)
+    def test_round_trip_identity(self, key):
+        assert decode_key(encode_key(key)) == key
+
+    @given(key=_key)
+    @settings(max_examples=100)
+    def test_booleans_survive(self, key):
+        """JSON distinguishes ``true`` from ``1`` — a decoded key must too."""
+        out = decode_key(encode_key(key))
+
+        def flat(t):
+            for v in t:
+                if isinstance(v, tuple):
+                    yield from flat(v)
+                else:
+                    yield v
+
+        for a, b in zip(flat(key), flat(out)):
+            assert type(a) is type(b)
+
+    @given(key=_key)
+    @settings(max_examples=100)
+    def test_encoding_is_canonical(self, key):
+        """One key, one string — the store's written-set dedups by it."""
+        assert encode_key(key) == encode_key(decode_key(encode_key(key)))
+
+    def test_empty_and_nested_empties(self):
+        for key in ((), ((),), ((), ((), ())), (("path",), ())):
+            assert decode_key(encode_key(key)) == key
+
+
+class TestRealKeysRoundTrip:
+    """Keys actually produced by the search space (no hypothesis needed)."""
+
+    @pytest.mark.parametrize("workload", [GEMM, SYR2K], ids=lambda w: w.name)
+    def test_all_root_children(self, workload):
+        space = SearchSpace(root=workload.nest())
+        for config in space.children(Configuration(), dedup=False):
+            nest, key = space.try_canonical_key(config)
+            assert decode_key(encode_key(key)) == key
+            if isinstance(nest, TransformError):
+                assert key[0] == "path"
+            else:
+                assert key == nest.structure_key()
+
+    def test_random_walks(self):
+        """Deterministic pseudo-random deep walks: every reachable key —
+        structure keys and ``("path", ...)`` red keys alike — must survive
+        the codec, at any depth."""
+        rng = random.Random(7)
+        space = SearchSpace(root=GEMM.nest())
+        for _ in range(40):
+            config = Configuration()
+            for _ in range(rng.randint(1, 4)):
+                kids = space.children(config)
+                if not kids:
+                    break
+                config = rng.choice(kids)
+                _, key = space.try_canonical_key(config)
+                assert decode_key(encode_key(key)) == key
+
+    def test_path_and_structure_keys_never_collide(self):
+        """Red configurations are keyed by ("path", ...); a structure key's
+        first element is a per-loop tuple, so the namespaces are disjoint."""
+        space = SearchSpace(root=GEMM.nest())
+        seen_struct, seen_path = set(), set()
+        for config in space.children(Configuration(), dedup=False):
+            nest, key = space.try_canonical_key(config)
+            (seen_path if isinstance(nest, TransformError)
+             else seen_struct).add(encode_key(key))
+        assert seen_struct and not (seen_struct & seen_path)
+
+
+class TestMalformedRejection:
+    def test_decode_rejects_non_json(self):
+        with pytest.raises(ValueError):
+            decode_key("not a json document")
+
+    def test_decode_rejects_truncated(self):
+        good = encode_key((("i", 64, False),))
+        with pytest.raises(ValueError):
+            decode_key(good[:-3])
+
+    def test_encode_rejects_unserializable(self):
+        with pytest.raises(TypeError):
+            encode_key((object(),))
+
+    def test_tuplize_passes_scalars_through(self):
+        assert tuplize(5) == 5
+        assert tuplize([1, [True, "x"]]) == (1, (True, "x"))
+
+    def test_decode_of_non_array_is_not_a_tuple(self):
+        """A record whose ``k`` field is a bare scalar decodes to that scalar
+        — callers (the store reader) treat only tuples as keys."""
+        assert decode_key("3") == 3
+        assert not isinstance(decode_key("3"), tuple)

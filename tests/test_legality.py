@@ -1,0 +1,138 @@
+"""Dedicated tests for :mod:`repro.core.legality` — the Polly-analogue
+dependence model that produces the paper's red nodes (§VI): reduction
+parallelization, triangular-bound ordering/tiling rules, and the legal
+schedules that must *not* be rejected."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core import (
+    COVARIANCE,
+    GEMM,
+    SYR2K,
+    Interchange,
+    Parallelize,
+    Tile,
+    check_legal,
+    is_legal,
+)
+from repro.core.legality import IllegalTransform
+
+
+def _apply(workload, *ts):
+    nest = workload.nest()
+    for t in ts:
+        nest = t.apply(nest)
+    return nest
+
+
+class TestReductionParallelization:
+    def test_parallelize_reduction_loop_is_illegal(self):
+        """gemm's k carries the accumulation: Polly 'does not consider the
+        associativity of the addition' (§V), so thread-parallelizing it is
+        the canonical red node."""
+        nest = _apply(GEMM, Parallelize(loop="k"))
+        with pytest.raises(IllegalTransform, match="reduction"):
+            check_legal(nest)
+        assert not is_legal(nest)
+
+    @pytest.mark.parametrize("loop", ["i", "j"])
+    def test_parallelize_output_loops_is_legal(self, loop):
+        assert is_legal(_apply(GEMM, Parallelize(loop=loop)))
+
+    def test_point_loop_of_reduction_var_inherits_the_dependence(self):
+        """Tiling k then parallelizing its floor or point loop is still a
+        reduction parallelization — the origin carries the dependence."""
+        tiled = _apply(GEMM, Tile(loops=("k",), sizes=(64,)))
+        for derived in ("k1", "k2"):
+            with pytest.raises(IllegalTransform, match="reduction"):
+                check_legal(Parallelize(loop=derived).apply(tiled))
+
+    def test_both_output_loops_parallel_is_legal(self):
+        assert is_legal(
+            _apply(GEMM, Parallelize(loop="i"), Parallelize(loop="j")))
+
+
+class TestTriangularBounds:
+    """covariance iterates ``for j >= i`` — ``i`` provides ``j``'s bound."""
+
+    def test_interchange_untiled_pair_is_illegal(self):
+        nest = _apply(
+            COVARIANCE,
+            Interchange(loops=("i", "j", "k"), permutation=("j", "i", "k")),
+        )
+        with pytest.raises(IllegalTransform, match="triangular"):
+            check_legal(nest)
+
+    def test_rotation_keeping_provider_first_is_legal(self):
+        assert is_legal(_apply(
+            COVARIANCE,
+            Interchange(loops=("i", "j", "k"), permutation=("i", "k", "j")),
+        ))
+
+    def test_dependent_tiled_without_provider_is_illegal(self):
+        nest = _apply(COVARIANCE, Tile(loops=("j",), sizes=(64,)))
+        with pytest.raises(IllegalTransform, match="triangular"):
+            check_legal(nest)
+
+    def test_provider_tiled_without_dependent_is_legal(self):
+        assert is_legal(_apply(COVARIANCE, Tile(loops=("i",), sizes=(64,))))
+
+    def test_dependent_tile_wider_than_provider_is_illegal(self):
+        """An unbalanced tile straddles the diagonal: paper §VI-B's 'large
+        number of unsuccessful configurations' on the triangular kernels."""
+        nest = _apply(COVARIANCE, Tile(loops=("i", "j"), sizes=(16, 64)))
+        with pytest.raises(IllegalTransform, match="wider"):
+            check_legal(nest)
+
+    def test_balanced_tiling_is_legal(self):
+        assert is_legal(
+            _apply(COVARIANCE, Tile(loops=("i", "j"), sizes=(64, 64))))
+        assert is_legal(
+            _apply(COVARIANCE, Tile(loops=("i", "j"), sizes=(64, 16))))
+
+    def test_dependent_point_hoisted_above_provider_floor_is_illegal(self):
+        nest = _apply(
+            COVARIANCE,
+            Tile(loops=("i", "j"), sizes=(64, 64)),
+            # i1 j1 i2 j2 k → hoist j2 to the front: j's point loop now
+            # precedes i's floor loop (and j precedes its provider at all)
+            Interchange(loops=("i1", "j1", "i2", "j2"),
+                        permutation=("j2", "i1", "j1", "i2")),
+        )
+        with pytest.raises(IllegalTransform, match="triangular"):
+            check_legal(nest)
+
+    def test_syr2k_shares_the_covariance_rules(self):
+        with pytest.raises(IllegalTransform):
+            check_legal(_apply(
+                SYR2K,
+                Interchange(loops=("i", "j", "k"),
+                            permutation=("j", "i", "k")),
+            ))
+        assert is_legal(
+            _apply(SYR2K, Tile(loops=("i", "j"), sizes=(16, 16))))
+
+
+class TestRectangularFreedom:
+    """gemm has no triangular pairs: reordering and unbalanced tiling of the
+    non-reduction band must stay legal (pure accumulation dependences stay
+    lexicographically positive under any permutation)."""
+
+    def test_any_interchange_is_legal(self):
+        import itertools
+
+        for perm in itertools.permutations(("i", "j", "k")):
+            if perm == ("i", "j", "k"):
+                continue
+            assert is_legal(_apply(
+                GEMM, Interchange(loops=("i", "j", "k"), permutation=perm)))
+
+    def test_unbalanced_tiling_is_legal(self):
+        assert is_legal(
+            _apply(GEMM, Tile(loops=("i", "j"), sizes=(4, 256))))
+
+    def test_baseline_is_legal(self):
+        for w in (GEMM, SYR2K, COVARIANCE):
+            check_legal(w.nest())      # must not raise

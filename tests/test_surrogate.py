@@ -1,0 +1,280 @@
+"""Learned surrogate: feature extraction, determinism (same store →
+byte-identical ranking across processes), engine/strategy wiring, and the
+``surrogate=None`` no-behavior-change guarantee."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    COVARIANCE,
+    GEMM,
+    Configuration,
+    CostModelBackend,
+    EvaluationEngine,
+    ResultStore,
+    SearchSpace,
+    Surrogate,
+    XEON_8180M,
+    estimate_time,
+    nest_from_key,
+    spearman,
+    structure_features,
+    run_beam,
+    run_greedy,
+    run_mcts,
+)
+from repro.core.surrogate import feature_names
+
+
+def _ok_keys_and_times(workload, n=60):
+    """(key, analytic seconds) for the first ``n`` ok root children — a
+    noise-free training set the ridge model can fit almost exactly."""
+    space = SearchSpace(root=workload.nest())
+    out = []
+    for c in space.children(Configuration(), dedup=False):
+        nest, key = space.try_canonical_key(c)
+        if isinstance(nest, Exception):
+            continue
+        out.append((key, estimate_time(nest, XEON_8180M)))
+        if len(out) >= n:
+            break
+    return out
+
+
+class TestFeatureExtraction:
+    def test_vector_length_matches_names(self):
+        items = _ok_keys_and_times(GEMM, n=5)
+        f = structure_features(items[0][0], GEMM)
+        assert len(f) == len(feature_names(GEMM)) == 47
+
+    def test_pure_function_of_key(self):
+        key = _ok_keys_and_times(GEMM, n=1)[0][0]
+        a = structure_features(key, GEMM)
+        b = structure_features(key, GEMM)
+        assert a.dtype == np.float64 and np.array_equal(a, b)
+
+    def test_nest_hint_changes_nothing(self):
+        space = SearchSpace(root=GEMM.nest())
+        c = space.children(Configuration())[0]
+        nest, key = space.try_canonical_key(c)
+        assert np.array_equal(
+            structure_features(key, GEMM),
+            structure_features(key, GEMM, nest=nest))
+
+    def test_nest_from_key_round_trips_structure(self):
+        for key, t in _ok_keys_and_times(COVARIANCE, n=20):
+            rebuilt = nest_from_key(key, COVARIANCE)
+            assert rebuilt.structure_key() == key
+            # and the analytic model agrees with the originally derived nest
+            assert estimate_time(rebuilt, XEON_8180M) == pytest.approx(t)
+
+    @pytest.mark.parametrize("bad", [
+        ("path", ("Tile", ("i",), (4,))),       # red-node path key
+        (("i", 64, False),),                     # 3-tuple entry
+        (("i", 64, False, True, 1, 1, "x"),),    # wrong marker type
+        (("i", 0, False, True, 1, 1, False),),   # non-positive trips
+        ((7, 64, False, True, 1, 1, False),),    # non-str origin
+        "not-a-tuple",
+    ])
+    def test_nest_from_key_rejects_malformed(self, bad):
+        with pytest.raises(ValueError):
+            nest_from_key(bad, GEMM)
+
+
+class TestSurrogateModel:
+    def test_ridge_learns_the_analytic_ranking(self):
+        items = _ok_keys_and_times(GEMM)
+        sur = Surrogate(GEMM).fit_items(items)
+        assert sur.ready
+        rho = spearman(sur.predict([k for k, _ in items]),
+                       [t for _, t in items])
+        assert rho > 0.9
+
+    def test_stumps_model_fits_too(self):
+        items = _ok_keys_and_times(GEMM)
+        sur = Surrogate(GEMM, model="stumps").fit_items(items)
+        rho = spearman(sur.predict([k for k, _ in items]),
+                       [t for _, t in items])
+        assert rho > 0.9
+
+    def test_not_ready_below_min_fit_and_fallback_contract(self):
+        items = _ok_keys_and_times(GEMM, n=3)
+        sur = Surrogate(GEMM, min_fit=8).fit_items(items)
+        assert not sur.ready
+        with pytest.raises(RuntimeError, match="not fitted"):
+            sur.predict_one(items[0][0])
+
+    def test_uncertainty_and_lcb(self):
+        items = _ok_keys_and_times(GEMM)
+        sur = Surrogate(GEMM).fit_items(items)
+        key = items[0][0]
+        assert sur.std_one(key) > 0.0
+        assert sur.lcb(key) < sur.predict_one(key)
+
+    def test_rank_is_stable_argsort(self):
+        items = _ok_keys_and_times(GEMM, n=20)
+        sur = Surrogate(GEMM).fit_items(items)
+        keys = [k for k, _ in items]
+        order = sur.rank(keys)
+        assert sorted(order) == list(range(len(keys)))
+        preds = sur.predict(keys)
+        assert all(preds[a] <= preds[b]
+                   for a, b in zip(order, order[1:]))
+
+    def test_observe_ignores_red_and_duplicate(self):
+        sur = Surrogate(GEMM)
+        key = _ok_keys_and_times(GEMM, n=1)[0][0]
+        sur.observe(("path", "x"), 1.0)
+        sur.observe(key, 1.0)
+        sur.observe(key, 2.0)           # duplicate key: first sample wins
+        from repro.core import Result
+        sur.observe(key, Result("illegal"))
+        assert sur.n_samples == 1
+
+    def test_unknown_model_rejected(self):
+        with pytest.raises(ValueError):
+            Surrogate(GEMM, model="forest")
+
+    def test_spearman_basics(self):
+        assert spearman([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+        assert spearman([1, 2, 3], [3, 2, 1]) == pytest.approx(-1.0)
+        assert spearman([1, 1, 1], [1, 2, 3]) == 0.0
+        assert spearman([1.0], [2.0]) == 0.0
+        with pytest.raises(ValueError):
+            spearman([1, 2], [1, 2, 3])
+
+
+_RANK_SCRIPT = """
+import json, sys
+from repro.core import GEMM, CostModelBackend, Surrogate
+store_path = sys.argv[1]
+scope = CostModelBackend().store_scope()
+sur = Surrogate.fit(store_path, GEMM, scope)
+keys = sorted(sur._samples)
+order = sur.rank([key for key, _ in (sur._samples[e] for e in keys)])
+print(json.dumps({
+    "order": order,
+    "preds": [round(p, 15) for p in
+              sur.predict([sur._samples[e][0] for e in keys]).tolist()],
+}))
+"""
+
+
+class TestDeterminism:
+    def test_same_store_same_ranking_across_processes(self, tmp_path):
+        """Byte-identical ranking from the same store in two fresh
+        processes — the cross-machine-federation prerequisite."""
+        store = tmp_path / "det.jsonl"
+        run_greedy(GEMM, SearchSpace(root=GEMM.nest()), CostModelBackend(),
+                   budget=80, store=store)
+        ResultStore.drop_shared(store)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (
+            os.path.join(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))), "src")
+            + (os.pathsep + env["PYTHONPATH"]
+               if env.get("PYTHONPATH") else ""))
+        outs = []
+        for _ in range(2):
+            proc = subprocess.run(
+                [sys.executable, "-c", _RANK_SCRIPT, str(store)],
+                capture_output=True, text=True, env=env, timeout=300)
+            assert proc.returncode == 0, proc.stderr[-2000:]
+            outs.append(proc.stdout)
+        assert outs[0] == outs[1]
+        assert json.loads(outs[0])["order"]     # non-empty ranking
+
+    def test_fit_order_independence(self):
+        """Insertion order of training samples must not change the model."""
+        items = _ok_keys_and_times(GEMM, n=30)
+        a = Surrogate(GEMM).fit_items(items)
+        b = Surrogate(GEMM).fit_items(list(reversed(items)))
+        keys = [k for k, _ in items]
+        assert np.array_equal(a.predict(keys), b.predict(keys))
+
+
+class TestEngineWiring:
+    def test_none_keeps_logs_byte_identical(self):
+        """surrogate=None (the default) must not change any strategy log —
+        the pre-surrogate behavior, byte for byte."""
+        be = CostModelBackend()
+        for run in (run_greedy, run_beam):
+            base = run(GEMM, SearchSpace(root=GEMM.nest()), be, budget=120)
+            none = run(GEMM, SearchSpace(root=GEMM.nest()), be, budget=120,
+                       surrogate=None)
+            assert base.to_json() == none.to_json()
+        m0 = run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                      budget=150, seed=3, store=False)
+        m1 = run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                      budget=150, seed=3, store=False, surrogate=None)
+        assert m0.to_json() == m1.to_json()
+
+    def test_deprecated_alias_equals_analytic(self):
+        be = CostModelBackend()
+        old = run_greedy(GEMM, SearchSpace(root=GEMM.nest()), be,
+                         budget=120, surrogate_order=True)
+        new = run_greedy(GEMM, SearchSpace(root=GEMM.nest()), be,
+                         budget=120, surrogate="analytic")
+        assert old.to_json() == new.to_json()
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()), be,
+                               surrogate_order=True)
+        assert eng.surrogate == "analytic" and eng.surrogate_order
+
+    def test_none_engine_preserves_child_order_and_stats(self):
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend())
+        kids = eng.space.children(Configuration())
+        assert eng.order_children(kids) == list(kids)
+        assert not eng.surrogate_order
+        assert "surrogate" not in eng.stats_dict()
+
+    def test_invalid_surrogate_value_rejected(self):
+        with pytest.raises(ValueError, match="surrogate"):
+            EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                             CostModelBackend(), surrogate="magic")
+
+    def test_learned_engine_observes_and_reports(self):
+        log = run_greedy(GEMM, SearchSpace(root=GEMM.nest()),
+                         CostModelBackend(), budget=60,
+                         surrogate="learned", store=False)
+        sur = log.cache["surrogate"]
+        assert sur["model"] == "ridge" and sur["fitted"]
+        assert sur["n_samples"] > 0
+
+    def test_warm_start_fits_before_first_measurement(self, tmp_path):
+        store = tmp_path / "warm.jsonl"
+        be = CostModelBackend()
+        run_greedy(GEMM, SearchSpace(root=GEMM.nest()), be, budget=80,
+                   store=store)
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()), be,
+                               surrogate="learned", store=store)
+        assert eng.stats.preloaded > 0
+        assert eng._learned.ready        # fitted from the log, zero misses
+        assert eng.stats.misses == 0
+        ResultStore.drop_shared(store)
+
+    def test_prefit_surrogate_instance_is_used_directly(self):
+        items = _ok_keys_and_times(GEMM)
+        sur = Surrogate(GEMM).fit_items(items)
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend(), surrogate=sur)
+        assert eng.surrogate == "learned" and eng._learned is sur
+
+    def test_mcts_expansion_prior_runs_and_finds_good_config(self, tmp_path):
+        store = tmp_path / "prior.jsonl"
+        be = CostModelBackend()
+        cold = run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                        budget=300, seed=0, store=store)
+        warm = run_mcts(GEMM, SearchSpace(root=GEMM.nest()), be,
+                        budget=300, seed=0, store=store,
+                        surrogate="learned")
+        assert warm.best().result.time_s <= cold.best().result.time_s * 1.05
+        assert "surrogate" in warm.cache
+        ResultStore.drop_shared(store)

@@ -1,0 +1,195 @@
+"""Dedicated tests for :mod:`repro.core.transformations` — structural
+applicability (red-node error paths), the rewritten loop structures, pragma
+pretty-printing, and the equality/key invariants the DAG dedup relies on."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core import (
+    GEMM,
+    Configuration,
+    Interchange,
+    Parallelize,
+    Tile,
+    TransformError,
+    Unroll,
+    Vectorize,
+)
+from repro.core.transformations import apply_all, render_pragmas
+
+
+def _nest():
+    return GEMM.nest()      # i[2000] / j[2300] / k[2600]
+
+
+class TestTileStructure:
+    def test_tile_replaces_band_with_floor_and_point_loops(self):
+        nest = Tile(loops=("i", "j"), sizes=(64, 16)).apply(_nest())
+        names = [l.name for l in nest.loops]
+        assert names == ["i1", "j1", "i2", "j2", "k"]
+        i1, j1, i2, j2, _ = nest.loops
+        assert (i1.trips, i1.is_point, i1.span) == (-(-2000 // 64), False, 64)
+        assert (i2.trips, i2.is_point, i2.span) == (64, True, 1)
+        assert (j1.trips, j2.trips) == (-(-2300 // 16), 16)
+        assert all(l.origin == "i" for l in (i1, i2))
+
+    def test_stacked_tiling_gets_fresh_names(self):
+        nest = Tile(loops=("i",), sizes=(256,)).apply(_nest())
+        nest = Tile(loops=("i2",), sizes=(16,)).apply(nest)
+        names = [l.name for l in nest.loops]
+        assert len(set(names)) == len(names), f"name collision: {names}"
+        # the re-tiled point loop spans stay exact for codegen
+        spans = {l.name: l.span for l in nest.loops}
+        assert spans["i1"] == 256 and spans[names[1]] == 16
+
+    def test_mismatched_sizes_rejected(self):
+        err = Tile(loops=("i", "j"), sizes=(64,)).try_apply(_nest())
+        assert isinstance(err, TransformError)
+
+    def test_non_contiguous_band_rejected(self):
+        err = Tile(loops=("i", "k"), sizes=(64, 64)).try_apply(_nest())
+        assert isinstance(err, TransformError)
+        assert "contiguous" in str(err)
+
+    def test_size_not_smaller_than_trip_count_rejected(self):
+        err = Tile(loops=("i",), sizes=(2000,)).try_apply(_nest())
+        assert isinstance(err, TransformError)
+
+    def test_parallelized_loop_rejected(self):
+        nest = Parallelize(loop="i").apply(_nest())
+        err = Tile(loops=("i",), sizes=(64,)).try_apply(nest)
+        assert isinstance(err, TransformError)
+
+    def test_apply_raises_what_try_apply_returns(self):
+        t = Tile(loops=("i", "k"), sizes=(64, 64))
+        err = t.try_apply(_nest())
+        with pytest.raises(TransformError) as exc:
+            t.apply(_nest())
+        assert str(exc.value) == str(err)
+
+
+class TestInterchangeStructure:
+    def test_reorders_loops(self):
+        nest = Interchange(
+            loops=("i", "j", "k"), permutation=("k", "i", "j")
+        ).apply(_nest())
+        assert [l.name for l in nest.loops] == ["k", "i", "j"]
+
+    def test_identity_permutation_preserves_structure(self):
+        nest = Interchange(
+            loops=("i", "j", "k"), permutation=("i", "j", "k")
+        ).apply(_nest())
+        assert nest.structure_key() == _nest().structure_key()
+
+    def test_non_permutation_rejected(self):
+        err = Interchange(
+            loops=("i", "j"), permutation=("i", "i")
+        ).try_apply(_nest())
+        assert isinstance(err, TransformError)
+
+    def test_non_contiguous_rejected(self):
+        err = Interchange(
+            loops=("i", "k"), permutation=("k", "i")
+        ).try_apply(_nest())
+        assert isinstance(err, TransformError)
+
+    def test_parallelized_loop_rejected(self):
+        nest = Parallelize(loop="j").apply(_nest())
+        err = Interchange(
+            loops=("i", "j"), permutation=("j", "i")
+        ).try_apply(nest)
+        assert isinstance(err, TransformError)
+
+
+class TestMarkerTransformations:
+    def test_parallelize_marks_and_rejects_repeat(self):
+        nest = Parallelize(loop="i").apply(_nest())
+        assert nest.loop("i").parallel
+        assert isinstance(
+            Parallelize(loop="i").try_apply(nest), TransformError)
+
+    def test_unroll_paths(self):
+        nest = Unroll(loop="k", factor=4).apply(_nest())
+        assert nest.loop("k").unroll == 4
+        assert isinstance(
+            Unroll(loop="k", factor=2).try_apply(nest), TransformError)
+        assert isinstance(
+            Unroll(loop="i", factor=4000).try_apply(nest), TransformError)
+        par = Parallelize(loop="i").apply(_nest())
+        assert isinstance(
+            Unroll(loop="i", factor=4).try_apply(par), TransformError)
+
+    def test_vectorize_only_innermost(self):
+        nest = Vectorize(loop="k").apply(_nest())
+        assert nest.loops[-1].vectorize
+        assert isinstance(Vectorize(loop="i").try_apply(_nest()),
+                          TransformError)
+        assert isinstance(Vectorize(loop="k").try_apply(nest),
+                          TransformError)
+
+
+class TestPrettyPrinting:
+    def test_pragma_strings_match_paper_syntax(self):
+        assert (Tile(loops=("i", "j"), sizes=(64, 128)).pragma()
+                == "#pragma clang loop(i,j) tile sizes(64,128)")
+        assert (Interchange(loops=("i", "j"), permutation=("j", "i")).pragma()
+                == "#pragma clang loop(i,j) interchange permutation(j,i)")
+        assert (Parallelize(loop="i").pragma()
+                == "#pragma clang loop(i) parallelize_thread")
+        assert (Unroll(loop="k", factor=4).pragma()
+                == "#pragma clang loop(k) unroll factor(4)")
+        assert (Vectorize(loop="k").pragma()
+                == "#pragma clang loop(k) vectorize")
+
+    def test_render_pragmas_one_line_each(self):
+        ts = [Tile(loops=("i",), sizes=(64,)), Parallelize(loop="j")]
+        assert render_pragmas(ts) == "\n".join(t.pragma() for t in ts)
+        assert Configuration(tuple(ts)).pragmas() == render_pragmas(ts)
+
+    def test_loop_pretty_carries_markers(self):
+        nest = Tile(loops=("i",), sizes=(64,)).apply(_nest())
+        nest = Parallelize(loop="i1").apply(nest)
+        nest = Unroll(loop="k", factor=2).apply(nest)
+        s = nest.pretty()
+        assert "i1[32;par]" in s
+        assert "i2[64;pt]" in s
+        assert "unroll2" in s
+        assert s.startswith("gemm: ")
+
+
+class TestEqualityAndKeys:
+    def test_value_equality_and_hash(self):
+        a = Tile(loops=("i", "j"), sizes=(64, 16))
+        b = Tile(loops=("i", "j"), sizes=(64, 16))
+        assert a == b and hash(a) == hash(b)
+        assert a != Tile(loops=("i", "j"), sizes=(16, 64))
+        assert Parallelize(loop="i") != Vectorize(loop="i")
+
+    def test_key_distinguishes_types_and_is_memoized(self):
+        a = Interchange(loops=("i", "j"), permutation=("j", "i"))
+        b = Interchange(loops=("i", "j"), permutation=("j", "i"))
+        assert a.key() == b.key()
+        assert a.key()[0] == "Interchange"
+        assert a.key() is a.key()       # per-instance memo
+        assert (Parallelize(loop="i").key()
+                != Vectorize(loop="i").key())
+
+    def test_apply_all_equals_sequential_application(self):
+        ts = (Tile(loops=("i", "j"), sizes=(64, 64)),
+              Parallelize(loop="i1"))
+        chained = apply_all(_nest(), ts)
+        step = _nest()
+        for t in ts:
+            step = t.apply(step)
+        assert chained.structure_key() == step.structure_key()
+
+    def test_transform_order_changes_path_but_not_always_structure(self):
+        """The DAG property (§III): parallelize∘tile ≡ tile∘parallelize by
+        structure while the derivation paths differ."""
+        t1 = (Parallelize(loop="i"), Tile(loops=("j", "k"), sizes=(64, 64)))
+        t2 = (Tile(loops=("j", "k"), sizes=(64, 64)), Parallelize(loop="i"))
+        assert (apply_all(_nest(), t1).structure_key()
+                == apply_all(_nest(), t2).structure_key())
+        assert (Configuration(t1).path_key()
+                != Configuration(t2).path_key())
