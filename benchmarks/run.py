@@ -6,6 +6,7 @@
   bench_eval_cache        evaluation-engine experiments/sec vs pre-PR path
   bench_warm_start        persistent-store warm starts + MCTS transposition DAG
   bench_surrogate         learned surrogate vs analytic ordering (wallclock)
+  bench_session           TuningSpec → CLI end-to-end vs legacy driver (PR 4)
   bench_kernels           Pallas kernel micro-benchmarks
   bench_roofline          §Roofline table from the 80-cell dry-run records
 
@@ -18,6 +19,9 @@ Prints a final ``name,us_per_call,derived`` CSV.  Run with
   perf trajectory consumed by later PRs — append, don't re-measure by hand).
 * ``--store PATH`` — set ``CC_RESULT_STORE`` for the run so every tuning
   engine warm-starts from (and feeds) the persistent result store at PATH.
+* ``--compact-store`` — maintenance mode: compact the ``--store`` JSONL
+  (newest record per key, drop corrupt/old-schema lines) and exit without
+  running any suite.
 * ``--quick`` — smoke mode: only the cheap cost-model gate suites
   (``eval_cache`` + the cost-model half of ``warm_start``), and exit non-zero
   if any acceptance gate regressed.  This is the CI regression check; it is
@@ -58,7 +62,7 @@ def _collect_gates(ran: set[str]) -> dict:
 
     results = os.fspath(results_dir())
     gates: dict = {}
-    for name in ("eval_cache", "warm_start", "surrogate"):
+    for name in ("eval_cache", "warm_start", "surrogate", "session"):
         if name not in ran:
             continue
         try:
@@ -86,18 +90,36 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--quick", action="store_true",
         help="cheap cost-model gate suites only; exit 1 on gate regression")
+    ap.add_argument(
+        "--compact-store", action="store_true",
+        help="compact the --store JSONL (newest record per key) and exit "
+             "without running any suite")
     args = ap.parse_args(argv)
 
     if args.json:
         d = os.path.dirname(args.json) or "."
         if not os.path.isdir(d):
             ap.error(f"--json: directory {d!r} does not exist")
+    if args.compact_store:
+        if not args.store:
+            ap.error("--compact-store requires --store PATH")
+        from repro.core.resultstore import ResultStore
+
+        store = ResultStore.shared(args.store)
+        stats = store.compact()
+        ResultStore.drop_shared(args.store)
+        print(f"compacted {args.store}: kept {stats['kept']}, dropped "
+              f"{stats['dropped_duplicates']} duplicate / "
+              f"{stats['dropped_foreign']} old-schema / "
+              f"{stats['dropped_corrupt']} corrupt record(s)")
+        return
     if args.store:
         os.environ["CC_RESULT_STORE"] = args.store
 
     from . import (bench_autotune, bench_beyond_transforms, bench_eval_cache,
                    bench_kernels, bench_mcts_vs_greedy, bench_pragma_stacking,
-                   bench_roofline, bench_surrogate, bench_warm_start)
+                   bench_roofline, bench_session, bench_surrogate,
+                   bench_warm_start)
 
     suites = {
         "pragma_stacking": bench_pragma_stacking.main,
@@ -106,6 +128,7 @@ def main(argv=None) -> None:
         "eval_cache": bench_eval_cache.main,
         "warm_start": bench_warm_start.main,
         "surrogate": bench_surrogate.main,
+        "session": bench_session.main,
         "beyond_transforms": bench_beyond_transforms.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
@@ -114,6 +137,7 @@ def main(argv=None) -> None:
         suites = {
             "eval_cache": bench_eval_cache.main,
             "warm_start": lambda: bench_warm_start.main(quick=True),
+            "session": bench_session.main,
         }
     if args.only:
         if args.only not in suites:

@@ -12,8 +12,7 @@ prints the pragma form + the block config you would pass to
 import numpy as np
 
 from repro.core import (GEMM, Configuration, PallasBackend, SearchSpace,
-                        WallclockBackend)
-from repro.core.strategies import run_greedy
+                        TuningSession, WallclockBackend)
 
 
 def main():
@@ -28,9 +27,11 @@ def main():
     be = WallclockBackend(scale=0.12, reps=2)
     print("tuning gemm tiles on real XLA:CPU wallclock "
           f"(scale=0.12 → extents ≈ {GEMM.scaled(0.12).extents}) ...")
-    # surrogate_order: under a tight wallclock budget, spend the compile+run
-    # experiments on the cost model's top-ranked children first
-    log = run_greedy(GEMM, space, be, budget=60, surrogate_order=True)
+    # surrogate="analytic": under a tight wallclock budget, spend the
+    # compile+run experiments on the cost model's top-ranked children first
+    # (the old boolean alias for this is deprecated)
+    session = TuningSession(be, surrogate="analytic")
+    log = session.tune(GEMM, space, strategy="greedy", budget=60)
     best = log.best()
     print(f"\nbaseline (XLA default einsum): "
           f"{log.baseline.result.time_s*1e3:.1f} ms")

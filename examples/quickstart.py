@@ -8,8 +8,7 @@ without parallelization, and prints the local-minimum phenomenon of §VI.
 """
 
 from repro.core import (GEMM, Configuration, CostModelBackend, Parallelize,
-                        SearchSpace, Tile)
-from repro.core.strategies import run_greedy, run_mcts
+                        SearchSpace, Tile, TuningSession)
 
 
 def main():
@@ -28,9 +27,11 @@ def main():
     print("\na multi-step configuration:")
     print(cfg.pragmas())
 
-    be = CostModelBackend()
+    # one TuningSession owns measurement for every strategy; strategies are
+    # registry names (greedy / mcts / beam / random / ei)
+    session = TuningSession(CostModelBackend())
     print("\n--- greedy, parallelize enabled (paper Fig. 6) ---")
-    log = run_greedy(GEMM, space, be, budget=300)
+    log = session.tune(GEMM, space, strategy="greedy", budget=300)
     b = log.best()
     print(f"baseline {log.baseline.result.time_s:.2f}s → best "
           f"{b.result.time_s:.3f}s at experiment #{b.number}")
@@ -39,7 +40,8 @@ def main():
           "greedy local minimum of §VI-A.")
 
     print("\n--- MCTS (paper §VIII future work) ---")
-    mlog = run_mcts(GEMM, SearchSpace(root=nest), be, budget=600, seed=1)
+    mlog = session.tune(GEMM, SearchSpace(root=nest), strategy="mcts",
+                        budget=600, seed=1)
     mb = mlog.best()
     print(f"best {mb.result.time_s:.3f}s at depth {len(mb.config)}:")
     print(mb.pragmas)

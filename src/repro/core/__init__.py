@@ -8,11 +8,15 @@ Public API::
         Tile, Interchange, Parallelize,    # §IV-B transformations
         Autotuner,                         # §IV-C greedy driver
         CostModelBackend, WallclockBackend, PallasBackend,
+        TuningSession, TuningSpec,         # ask/tell session facade (PR 4)
+        Strategy, register_strategy,       # strategy plugin protocol
         STRATEGIES,                        # greedy / mcts / beam / random
     )
 """
 
-from .autotuner import Autotuner, Experiment, TuningLog
+from .acquisition import AcquisitionStrategy, expected_improvement
+from .autotuner import (Autotuner, Experiment, NoSuccessfulExperiment,
+                        TuningLog)
 from .costmodel import (
     TPU_V5E,
     XEON_8180M,
@@ -32,7 +36,11 @@ from .measure import (
 )
 from .resultstore import ResultStore, host_fingerprint
 from .searchspace import DEFAULT_TILE_SIZES, Configuration, SearchSpace
-from .strategies import STRATEGIES, run_beam, run_greedy, run_mcts, run_random
+from .session import (STRATEGY_REGISTRY, Proposal, Strategy, TuningSession,
+                      TuningSpec, register_strategy, resolve_strategy)
+from .strategies import (STRATEGIES, BeamStrategy, GreedyStrategy,
+                         MctsStrategy, RandomWalkStrategy, run_beam,
+                         run_greedy, run_mcts, run_random)
 from .surrogate import Surrogate, nest_from_key, spearman, structure_features
 from .transformations import (
     Interchange,
@@ -46,15 +54,19 @@ from .transformations import (
 from .workloads import COVARIANCE, GEMM, PAPER_WORKLOADS, SYR2K, Workload, matmul_workload
 
 __all__ = [
-    "Access", "Autotuner", "Backend", "COVARIANCE", "Configuration",
-    "CostModelBackend", "DEFAULT_TILE_SIZES", "EvalStats", "EvaluationEngine",
-    "Experiment", "GEMM", "IllegalTransform", "Interchange", "Loop",
-    "LoopNest", "Machine", "PAPER_WORKLOADS", "PallasBackend", "Parallelize",
-    "Result", "ResultStore", "SYR2K", "SearchSpace", "STRATEGIES",
-    "Surrogate", "TPU_V5E", "Tile", "TransformError", "Transformation",
-    "TuningLog", "Unroll", "Vectorize", "WallclockBackend", "Workload",
+    "Access", "AcquisitionStrategy", "Autotuner", "Backend", "BeamStrategy",
+    "COVARIANCE", "Configuration", "CostModelBackend", "DEFAULT_TILE_SIZES",
+    "EvalStats", "EvaluationEngine", "Experiment", "GEMM", "GreedyStrategy",
+    "IllegalTransform", "Interchange", "Loop", "LoopNest", "Machine",
+    "MctsStrategy", "NoSuccessfulExperiment", "PAPER_WORKLOADS",
+    "PallasBackend", "Parallelize", "Proposal", "RandomWalkStrategy",
+    "Result", "ResultStore", "SYR2K", "STRATEGIES", "STRATEGY_REGISTRY",
+    "SearchSpace", "Strategy", "Surrogate", "TPU_V5E", "Tile",
+    "TransformError", "Transformation", "TuningLog", "TuningSession",
+    "TuningSpec", "Unroll", "Vectorize", "WallclockBackend", "Workload",
     "XEON_8180M", "check_legal", "estimate_time", "estimate_time_uncached",
-    "host_fingerprint", "is_legal", "make_nest", "matmul_workload",
-    "nest_from_key", "run_beam", "run_greedy", "run_mcts", "run_random",
+    "expected_improvement", "host_fingerprint", "is_legal", "make_nest",
+    "matmul_workload", "nest_from_key", "register_strategy",
+    "resolve_strategy", "run_beam", "run_greedy", "run_mcts", "run_random",
     "spearman", "structure_features",
 ]

@@ -1,0 +1,80 @@
+"""Expected-improvement acquisition — the first post-redesign strategy plugin.
+
+Bayesian-optimization autotuners (arXiv:2010.08040) pick the next measurement
+by an *acquisition function* over a fitted posterior — which the engine's
+Bayesian ridge surrogate exposes as :meth:`EvaluationEngine.posterior`
+(mean/std of predicted log-time).  So this is a small registry plugin, not a
+fifth driver fork: pool the children of every ok experiment, score the pool,
+propose the argmax.  ``acquisition="ei"`` is expected improvement over the
+best measured time (explores uncertain structures *and* exploits
+predicted-fast ones); ``"lcb"`` is the engine's optimistic
+lower-confidence-bound score.  Until the learned surrogate is fitted, both
+fall back to the analytic ranking.  Use it as
+``TuningSession(be, surrogate="learned").tune(w, space, strategy="ei")``."""
+
+from __future__ import annotations
+
+import math
+
+from .autotuner import Experiment
+from .searchspace import Configuration
+from .session import Proposal, Strategy, register_strategy
+
+
+def expected_improvement(mean: float, std: float, best_log: float) -> float:
+    """Gaussian closed-form EI against incumbent ``best_log`` (minimize)."""
+    if std <= 0.0:
+        return max(0.0, best_log - mean)
+    z = (best_log - mean) / std
+    cdf = 0.5 * (1.0 + math.erf(z / math.sqrt(2.0)))
+    pdf = math.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
+    return std * (z * cdf + pdf)
+
+
+@register_strategy("ei")
+class AcquisitionStrategy(Strategy):
+    """Global candidate pool re-ranked by the acquisition each round."""
+
+    def __init__(self, acquisition: str = "ei", batch: int = 8):
+        if acquisition not in ("ei", "lcb"):
+            raise ValueError(
+                f"acquisition must be 'ei' or 'lcb', got {acquisition!r}")
+        self.acquisition = acquisition
+        self.batch = batch
+        self._pool: list[tuple[Configuration, int]] = []  # (config, parent #)
+        self._best: float | None = None     # best measured ok time_s
+        self._started = False
+
+    @property
+    def finished(self) -> bool:
+        return self._started and not self._pool
+
+    def _score(self, config: Configuration) -> float:   # higher is better
+        if self.acquisition == "ei" and self._best is not None:
+            post = self.engine.posterior(config)
+            if post is not None:
+                return expected_improvement(*post, math.log(self._best))
+        # pre-fit fallback: rank by the engine's (analytic/LCB) point score
+        return -self.engine.surrogate_score(config)
+
+    def propose(self, n: int) -> list[Proposal]:
+        if not self._started:
+            self._started = True
+            return [Proposal(Configuration(), None)]
+        self._pool.sort(key=lambda item: self._score(item[0]))
+        out: list[Proposal] = []
+        while self._pool and len(out) < min(n, self.batch):
+            config, parent = self._pool.pop()           # best-scored last
+            if self.engine.claim(config):               # structural dedup
+                out.append(Proposal(config, parent))
+        return out
+
+    def observe(self, exp: Experiment) -> None:
+        if exp.number == 0:
+            self.engine.seed_seen(exp.config)
+        if exp.result.ok:
+            if self._best is None or exp.result.time_s < self._best:
+                self._best = exp.result.time_s
+            self._pool.extend(
+                (k, exp.number)
+                for k in self.space.children(exp.config, dedup=False))

@@ -25,9 +25,7 @@ Exploration strategies beyond the paper's greedy one live in
 
 from __future__ import annotations
 
-import heapq
 import json
-import time
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -35,6 +33,29 @@ from .evaluation import EvaluationEngine
 from .measure import Backend, Result
 from .searchspace import Configuration, SearchSpace
 from .workloads import Workload
+
+
+class NoSuccessfulExperiment(ValueError):
+    """:meth:`TuningLog.best` on a log with no ``ok`` experiment.
+
+    Every driver can produce such a log (e.g. ``budget=1`` on a backend whose
+    baseline measurement fails), and callers used to get a bare ``ValueError``
+    from ``min()`` with no diagnosis.  This error carries the red-node
+    evidence instead: ``notes`` maps each distinct ``(status, note)`` pair to
+    the number of experiments that failed that way.  Subclasses ``ValueError``
+    so pre-existing ``except ValueError`` handlers keep working."""
+
+    def __init__(self, workload: str, backend: str,
+                 notes: dict[tuple[str, str], int]):
+        self.workload = workload
+        self.backend = backend
+        self.notes = notes
+        detail = "; ".join(
+            f"{status}×{n}" + (f" ({note})" if note else "")
+            for (status, note), n in list(notes.items())[:4]
+        ) or "log is empty"
+        super().__init__(
+            f"no successful experiment for {workload} on {backend}: {detail}")
 
 
 @dataclass
@@ -72,6 +93,12 @@ class TuningLog:
 
     def best(self) -> Experiment:
         ok = [e for e in self.experiments if e.result.ok]
+        if not ok:
+            notes: dict[tuple[str, str], int] = {}
+            for e in self.experiments:
+                sig = (e.result.status, e.result.note)
+                notes[sig] = notes.get(sig, 0) + 1
+            raise NoSuccessfulExperiment(self.workload, self.backend, notes)
         return min(ok, key=lambda e: e.result.time_s)
 
     def new_best_trace(self) -> list[tuple[int, float]]:
@@ -90,7 +117,7 @@ class TuningLog:
             c[e.result.status] = c.get(e.result.status, 0) + 1
         return c
 
-    def to_json(self) -> str:
+    def to_dict(self) -> dict:
         payload = {
             "workload": self.workload,
             "backend": self.backend,
@@ -98,7 +125,10 @@ class TuningLog:
         }
         if self.cache is not None:
             payload["cache"] = self.cache
-        return json.dumps(payload, indent=1)
+        return payload
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1)
 
 
 class Autotuner:
@@ -141,47 +171,19 @@ class Autotuner:
         )
 
     def run(self) -> TuningLog:
-        engine = self.engine
-        log = TuningLog(workload=self.workload.name, backend=self.backend.name)
-        t_start = time.perf_counter()
+        # The loop body lives in GreedyStrategy + TuningSession now (the
+        # ask/tell inversion of PR 4); this entry point survives unchanged
+        # and byte-identical (A/B-tested against the frozen pre-PR driver in
+        # tests/reference_drivers.py).  Lazy import: strategies imports
+        # Autotuner for the run_greedy shim.
+        from .session import TuningSession
+        from .strategies import GreedyStrategy
 
-        def record(config: Configuration, result: Result,
-                   parent: int | None) -> Experiment:
-            exp = Experiment(number=len(log.experiments), config=config,
-                             result=result, parent=parent)
-            log.experiments.append(exp)
-            if self.on_experiment:
-                self.on_experiment(exp)
-            return exp
-
-        # Experiment 0: the baseline configuration — executed too, "since it
-        # might be the fastest configuration" (§IV-C) — and marked seen so its
-        # structure cannot be re-derived as a child.
-        baseline = Configuration()
-        base = record(baseline, engine.evaluate(baseline), None)
-        engine.seed_seen(baseline)
-        heap: list[tuple[float, int]] = []
-        if base.result.ok:
-            heapq.heappush(heap, (base.result.time_s, base.number))
-
-        while heap:
-            if len(log.experiments) >= self.max_experiments:
-                break
-            if (
-                self.max_seconds is not None
-                and time.perf_counter() - t_start > self.max_seconds
-            ):
-                break
-            _, num = heapq.heappop(heap)
-            parent = log.experiments[num]
-            # fused dedup + surrogate ordering + batched evaluation
-            swept = engine.sweep(
-                self.space.children(parent.config, dedup=False),
-                room=self.max_experiments - len(log.experiments),
-            )
-            for child, res in swept:
-                exp = record(child, res, parent.number)
-                if exp.result.ok:
-                    heapq.heappush(heap, (exp.result.time_s, exp.number))
-        log.cache = engine.stats_dict()
-        return log
+        return TuningSession(self.backend).tune(
+            self.workload, self.space,
+            strategy=GreedyStrategy(),
+            budget=self.max_experiments,
+            max_seconds=self.max_seconds,
+            on_experiment=self.on_experiment,
+            engine=self.engine,
+        )

@@ -75,6 +75,7 @@ Cache invariants
 from __future__ import annotations
 
 import os
+import warnings
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -182,6 +183,11 @@ class EvaluationEngine:
         self.surrogate_machine = surrogate_machine or getattr(
             backend, "machine", XEON_8180M
         )
+        if surrogate_order:
+            warnings.warn(
+                "surrogate_order= is deprecated; pass surrogate='analytic' "
+                "instead (or surrogate='learned' for the trained model)",
+                DeprecationWarning, stacklevel=2)
         if surrogate is None and surrogate_order:
             surrogate = "analytic"      # deprecated bool alias
         self._learned: Surrogate | None = None
@@ -314,6 +320,24 @@ class EvaluationEngine:
         return self._surrogate_score(
             self.space.try_structure(config), optimistic=True)
 
+    def posterior(self, config: Configuration) -> tuple[float, float] | None:
+        """(mean, std) of the predicted **log**-time under the fitted learned
+        surrogate's ridge posterior, or ``None`` when no fitted learned
+        surrogate is active or the configuration is red (broken derivation /
+        illegal).  This is the hook acquisition-function strategies build on
+        (expected improvement needs the full posterior, not just a point
+        score — see :mod:`repro.core.acquisition`)."""
+        if self._learned is None or not self._learned.ready:
+            return None
+        nest = self.space.try_structure(config)
+        if isinstance(nest, TransformError):
+            return None
+        try:
+            check_legal(nest)
+        except IllegalTransform:
+            return None
+        return self._learned._predict_log(nest.structure_key(), nest=nest)
+
     def order_children(
         self, configs: Sequence[Configuration]
     ) -> list[Configuration]:
@@ -338,6 +362,14 @@ class EvaluationEngine:
         """Derive the nest and the canonical/result-cache key in one step —
         for derivable structures the two keys are the same tuple."""
         return self.space.try_canonical_key(config)
+
+    def prep(self, config: Configuration) -> tuple["LoopNest | TransformError", tuple]:
+        """Public :meth:`_prep`: (nest-or-error, canonical key) in one
+        derivation.  Ask/tell strategies attach this to their proposals
+        (``Proposal.prepped``) so the session's batched evaluation skips the
+        re-derivation — the derivation caches make a re-prep cheap, but on
+        the greedy hot loop (tens of µs per experiment) it is measurable."""
+        return self._prep(config)
 
     def _evaluate_prepped(
         self,
@@ -424,19 +456,18 @@ class EvaluationEngine:
             [(c, *self._prep(c)) for c in configs]
         )
 
-    def sweep(
+    def select_prepped(
         self,
         configs: Sequence[Configuration],
         room: int | None = None,
-    ) -> list[tuple[Configuration, Result]]:
-        """Fused child sweep: dedup + (optional) surrogate ordering +
-        batched evaluation in one pass — the greedy driver's hot loop.
+    ) -> list[tuple[Configuration, "LoopNest | TransformError", tuple]]:
+        """Selection half of :meth:`sweep`: dedup + (optional) surrogate
+        ordering + ``room`` truncation + claiming, *without* evaluation.
 
-        Each configuration's nest is derived once and its canonical key
-        doubles as the result-cache key.  ``room`` truncates *after*
-        dedup/ordering, so a budget cap is spent on unseen (and, with
-        surrogate ordering, most promising) children only.
-        """
+        Returns (config, nest-or-error, key) triples — feed them to
+        :meth:`evaluate_prepped` (or attach them to ``Proposal.prepped``) so
+        nothing is derived twice.  Everything returned is marked globally
+        seen; budget-truncated children stay claimable."""
         picked: list[tuple[Configuration, "LoopNest | TransformError", tuple]] = []
         dedup = self.space.dedup
         seen = self._seen
@@ -460,6 +491,46 @@ class EvaluationEngine:
             # a budget-truncated child must stay claimable by a later sweep
             # (e.g. a shared engine injected across runs)
             seen.update(key for _, _, key in picked)
+        return picked
+
+    def select(
+        self,
+        configs: Sequence[Configuration],
+        room: int | None = None,
+    ) -> list[Configuration]:
+        """Ask/tell form of the child sweep: dedup + surrogate ordering +
+        truncation + claiming, deferring measurement to the caller (the
+        :class:`~repro.core.session.TuningSession` evaluates the returned
+        proposals as one batch).  ``sweep(cs, room)`` ≡ ``select(cs, room)``
+        followed by ``evaluate_many`` on the selection — byte-identical
+        counters and results, tested."""
+        return [c for c, _, _ in self.select_prepped(configs, room)]
+
+    def evaluate_prepped(
+        self,
+        items: Sequence[tuple[Configuration, "LoopNest | TransformError", tuple]],
+    ) -> list[Result]:
+        """Order-preserving batched evaluation of pre-derived (config,
+        nest-or-error, key) triples — the counterpart of
+        :meth:`select_prepped`/:meth:`prep` for callers that already hold
+        the derivation.  Identical results and counters to
+        :meth:`evaluate_many` on the same configurations."""
+        return self._evaluate_prepped(items)
+
+    def sweep(
+        self,
+        configs: Sequence[Configuration],
+        room: int | None = None,
+    ) -> list[tuple[Configuration, Result]]:
+        """Fused child sweep: dedup + (optional) surrogate ordering +
+        batched evaluation in one pass — the greedy driver's hot loop.
+
+        Each configuration's nest is derived once and its canonical key
+        doubles as the result-cache key.  ``room`` truncates *after*
+        dedup/ordering, so a budget cap is spent on unseen (and, with
+        surrogate ordering, most promising) children only.
+        """
+        picked = self.select_prepped(configs, room)
         return [
             (c, r)
             for (c, _, _), r in zip(picked, self._evaluate_prepped(picked))

@@ -229,6 +229,20 @@ class ResultStore:
             return 0
         data = ("\n".join(lines) + "\n").encode("utf-8")
         with self._lock:
+            if self._fd is not None:
+                # A concurrent compact() (possibly in another process)
+                # os.replace()s the file; an O_APPEND descriptor would keep
+                # writing to the unlinked old inode and every later record
+                # would silently vanish.  One fstat/stat pair per batch
+                # detects the swap and reopens the new file.
+                try:
+                    if (os.fstat(self._fd).st_ino
+                            != os.stat(self.path).st_ino):
+                        os.close(self._fd)
+                        self._fd = None
+                except OSError:
+                    os.close(self._fd)
+                    self._fd = None
             if self._fd is None:
                 d = os.path.dirname(self.path)
                 if d:
@@ -239,6 +253,75 @@ class ResultStore:
             os.write(self._fd, data)       # single write → line-atomic
             self._written.update(fresh)
         return len(lines)
+
+    def compact(self) -> dict[str, int]:
+        """Rewrite the JSONL keeping the newest record per key, atomically.
+
+        The log is append-only, so a long-lived store accumulates dead
+        weight: unparseable lines, records of older schema versions (ignored
+        by :meth:`load` anyway), and duplicate ``(workload, scope, key)``
+        records from concurrent first-writers.  Compaction rewrites the file
+        with exactly one record — the newest — per key, preserving first-seen
+        key order, via a temp file + ``os.replace`` so a crash mid-compaction
+        can never lose the log.  The append descriptor is reopened lazily
+        afterwards (the old one would point at the replaced inode), and
+        :meth:`append_many` — in this and any other process holding the
+        store open — detects the inode swap per batch and reopens, so
+        post-compaction appends are never lost.  Records another process
+        appends *during* the read→replace window can still be dropped:
+        compaction is a maintenance operation, run it when no tuning run is
+        actively writing the store.
+
+        Returns ``{"kept": n, "dropped_duplicates": n, "dropped_foreign": n,
+        "dropped_corrupt": n}``.  In the deterministic case duplicate records
+        are identical, so newest-wins == first-wins (what :meth:`load` does);
+        keeping the newest means a re-measured record (e.g. after a schema
+        of measurement changed enough to bump ``SCHEMA_VERSION``) survives.
+        """
+        stats = {"kept": 0, "dropped_duplicates": 0, "dropped_foreign": 0,
+                 "dropped_corrupt": 0}
+        with self._lock:
+            try:
+                f = open(self.path, "r", encoding="utf-8")
+            except OSError:
+                return stats        # nothing on disk — nothing to compact
+            newest: dict[tuple[str, str, str], str] = {}
+            with f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except (ValueError, TypeError):
+                        stats["dropped_corrupt"] += 1
+                        continue
+                    if (not isinstance(rec, dict)
+                            or rec.get("v") != SCHEMA_VERSION):
+                        stats["dropped_foreign"] += 1
+                        continue
+                    try:
+                        sig = (str(rec["w"]), str(rec["s"]),
+                               encode_key(tuplize(rec["k"])))
+                    except (KeyError, TypeError, ValueError):
+                        stats["dropped_corrupt"] += 1
+                        continue
+                    if sig in newest:
+                        stats["dropped_duplicates"] += 1
+                    newest[sig] = line      # newest record wins
+            stats["kept"] = len(newest)
+            tmp = self.path + ".compact.tmp"
+            with open(tmp, "w", encoding="utf-8") as out:
+                for line in newest.values():
+                    out.write(line + "\n")
+            os.replace(tmp, self.path)
+            if self._fd is not None:
+                # the O_APPEND descriptor points at the replaced inode;
+                # drop it so the next append reopens the compacted file
+                os.close(self._fd)
+                self._fd = None
+            self._written.update(newest)
+        return stats
 
     def close(self) -> None:
         with self._lock:

@@ -1,0 +1,478 @@
+"""Ask/tell tuning sessions — one measurement loop for every strategy.
+
+The paper frames every search strategy as the same loop: derive children from
+the tree-shaped search space (§III), pick which configuration to measure next,
+observe the result (§IV-C).  Before this module, that loop was re-owned by
+four monolithic ``run_*`` drivers which each re-threaded the same kwargs and
+hard-wired measurement inline.  This module inverts the control flow:
+
+* :class:`Strategy` — the ask/tell protocol (cf. Bayesian-optimization
+  autotuners, arXiv:2010.08040; surrogate-informed MCTS, arXiv:2105.04555):
+  :meth:`~Strategy.propose` returns up to ``n`` :class:`Proposal`\\ s, the
+  session measures them as **one batch** through the shared
+  :class:`~repro.core.evaluation.EvaluationEngine`, and
+  :meth:`~Strategy.observe` feeds each logged
+  :class:`~repro.core.autotuner.Experiment` back.  Strategies never measure;
+  the session never searches.
+* :func:`register_strategy` / :data:`STRATEGY_REGISTRY` — new strategies are
+  ~50-line plugins (see :mod:`repro.core.acquisition` for the
+  expected-improvement acquisition), not fifth and sixth driver forks.
+* :class:`TuningSession` — owns the engine, batching, dedup, surrogate
+  refits, result-store persistence, and budget accounting once;
+  ``session.tune(workload, space, strategy="mcts", budget=...)`` returns the
+  same :class:`~repro.core.autotuner.TuningLog` the legacy drivers did.  The
+  legacy ``run_*`` functions survive as thin shims that are byte-identical
+  to the pre-redesign drivers (A/B-tested against frozen copies).
+* :class:`TuningSpec` — a declarative (dataclass ⇄ JSON) description of a
+  whole tuning job: workload, space limits, backend, strategy, budget, store
+  path.  One document round-trips through CI/fleet schedulers, and
+  ``python -m repro.core.session spec.json`` runs it end to end.
+
+Session/strategy contract
+-------------------------
+* A :class:`Strategy` instance drives **one** run; the registry constructs a
+  fresh instance per :meth:`TuningSession.tune` call when given a name/class.
+* ``propose(n)`` returns at most ``n`` proposals; every returned proposal is
+  evaluated and logged (in order), so a strategy may pre-assign experiment
+  numbers (``len(log)`` at propose time + offset) for parent attribution.
+* An empty ``propose`` is allowed while :attr:`~Strategy.finished` is False —
+  the session just re-checks budgets and asks again (e.g. greedy popping a
+  fully-deduped parent) — but the strategy must guarantee progress toward
+  ``finished``, or the loop would spin.
+* The session evaluates each proposal batch with
+  :meth:`EvaluationEngine.evaluate_many`: intra-batch structural duplicates
+  are measured once, results replay from the structural cache and the
+  persistent store exactly as they did inline in the legacy drivers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+from .autotuner import Experiment, NoSuccessfulExperiment, TuningLog
+from .evaluation import EvaluationEngine
+from .measure import Backend, CostModelBackend, PallasBackend, WallclockBackend
+from .searchspace import Configuration, SearchSpace
+from .workloads import PAPER_WORKLOADS, Workload, matmul_workload
+
+__all__ = [
+    "Proposal",
+    "Strategy",
+    "STRATEGY_REGISTRY",
+    "TuningSession",
+    "TuningSpec",
+    "register_strategy",
+    "resolve_strategy",
+]
+
+
+# ---------------------------------------------------------------------------
+# The ask/tell protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Proposal:
+    """One configuration a strategy asks the session to measure.
+
+    ``parent`` is the experiment number the logged result should attach to
+    (None for the baseline) — parent edges are strategy knowledge (greedy's
+    popped heap node, MCTS's expansion node), so they travel with the ask.
+    ``prepped`` optionally carries the (nest-or-error, canonical key) pair
+    from :meth:`EvaluationEngine.prep`/:meth:`~EvaluationEngine.
+    select_prepped`: a strategy that derived the structure while selecting
+    attaches it so the session's batched evaluation skips the re-derivation
+    (measurable on the greedy hot loop; results are identical either way).
+    """
+
+    config: Configuration
+    parent: int | None = None
+    prepped: tuple | None = field(default=None, compare=False)
+
+
+class Strategy:
+    """Base class of the ask/tell protocol.
+
+    Subclasses implement :meth:`propose` / :meth:`observe` / :attr:`finished`
+    and are registered by name via :func:`register_strategy`.  The session
+    :meth:`bind`\\ s the strategy to the run's engine/space/workload before
+    the first ``propose`` — strategies consult the engine for dedup
+    (``claim``), ordering (``order_children``/``select``), stored
+    measurements (``peek``) and surrogate scores, but never measure.
+    """
+
+    engine: EvaluationEngine
+    space: SearchSpace
+    workload: Workload
+
+    def bind(self, engine: EvaluationEngine, space: SearchSpace,
+             workload: Workload) -> None:
+        self.engine = engine
+        self.space = space
+        self.workload = workload
+        self.on_bound()
+
+    def on_bound(self) -> None:
+        """Hook for derived state that needs the bound engine (e.g. MCTS
+        checks ``engine.stats.preloaded`` to enable warm ordering)."""
+
+    def propose(self, n: int) -> Sequence[Proposal]:
+        """Ask: up to ``n`` configurations to measure next (the session
+        evaluates them as one batch and logs every one, in order)."""
+        raise NotImplementedError
+
+    def observe(self, exp: Experiment) -> None:
+        """Tell: one logged experiment (config, result, number, parent)."""
+        raise NotImplementedError
+
+    @property
+    def finished(self) -> bool:
+        """True once the strategy has nothing left to propose."""
+        return False
+
+    def finalize(self, log: TuningLog) -> None:
+        """Hook called after the run with ``log.cache`` populated —
+        strategies append their own counters here (e.g. MCTS transposition
+        stats)."""
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry
+# ---------------------------------------------------------------------------
+
+STRATEGY_REGISTRY: dict[str, type[Strategy]] = {}
+
+
+def register_strategy(name: str) -> Callable[[type[Strategy]], type[Strategy]]:
+    """Class decorator registering a :class:`Strategy` under ``name`` so
+    ``TuningSession.tune(..., strategy=name)`` and :class:`TuningSpec`
+    documents can resolve it.  Re-registering a name overwrites (lets tests
+    and downstream plugins shadow built-ins deliberately)."""
+
+    def deco(cls: type[Strategy]) -> type[Strategy]:
+        cls.strategy_name = name
+        STRATEGY_REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def _ensure_builtin_strategies() -> None:
+    # Built-in strategies live in sibling modules that import *this* module
+    # for the base class — registration happens on their import, which must
+    # therefore be lazy here to avoid a cycle.
+    from . import acquisition, strategies  # noqa: F401
+
+
+def resolve_strategy(spec, **kwargs) -> Strategy:
+    """Resolve a strategy *name*, *class*, or *instance* to a bound-ready
+    instance.  ``kwargs`` are constructor arguments (rejected for instances —
+    an already-constructed strategy carries its own configuration)."""
+    if isinstance(spec, Strategy):
+        if kwargs:
+            raise TypeError(
+                f"strategy kwargs {sorted(kwargs)} cannot be applied to an "
+                f"already-constructed {type(spec).__name__} instance")
+        return spec
+    if isinstance(spec, type) and issubclass(spec, Strategy):
+        return spec(**kwargs)
+    if isinstance(spec, str):
+        _ensure_builtin_strategies()
+        cls = STRATEGY_REGISTRY.get(spec)
+        if cls is None:
+            raise ValueError(
+                f"unknown strategy {spec!r} "
+                f"(registered: {', '.join(sorted(STRATEGY_REGISTRY))})")
+        return cls(**kwargs)
+    raise TypeError(f"strategy must be a name, Strategy subclass or "
+                    f"instance, got {type(spec).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# The session facade
+# ---------------------------------------------------------------------------
+
+
+class TuningSession:
+    """Owns measurement for ask/tell strategies — the one public entry point.
+
+    ``backend``/``store``/``surrogate``/``cache`` configure the
+    :class:`~repro.core.evaluation.EvaluationEngine` constructed per
+    :meth:`tune` call (semantics identical to the legacy drivers' kwargs:
+    ``store`` attaches the persistent :class:`~repro.core.resultstore.
+    ResultStore` for cross-run warm starts, ``surrogate`` is
+    ``"analytic" | "learned" | Surrogate | None``).  One session may run many
+    tunes (different workloads/spaces/strategies) against the same backend;
+    each tune gets a fresh engine unless one is injected.
+    """
+
+    def __init__(
+        self,
+        backend: Backend,
+        *,
+        store=None,
+        surrogate=None,
+        cache: bool = True,
+    ):
+        self.backend = backend
+        self.store = store
+        self.surrogate = surrogate
+        self.cache = cache
+
+    def tune(
+        self,
+        workload: Workload,
+        space: SearchSpace,
+        strategy="greedy",
+        budget: int = 400,
+        *,
+        max_seconds: float | None = None,
+        on_experiment: Callable[[Experiment], None] | None = None,
+        engine: EvaluationEngine | None = None,
+        **strategy_kwargs,
+    ) -> TuningLog:
+        """Run one ask/tell tuning loop and return its :class:`TuningLog`.
+
+        ``strategy`` is a registry name (``"greedy" | "mcts" | "beam" |
+        "random" | "ei" | ...``), a :class:`Strategy` subclass, or an
+        instance; ``strategy_kwargs`` go to the constructor (``seed=``,
+        ``width=``, ``c_explore=``, ...).  ``engine`` injects an externally
+        constructed engine (it carries dedup/cache state — the
+        :class:`~repro.core.autotuner.Autotuner` compatibility path uses
+        this); otherwise one is built from the session's configuration.
+        """
+        strat = resolve_strategy(strategy, **strategy_kwargs)
+        engine = engine or EvaluationEngine(
+            workload, space, self.backend,
+            cache=self.cache, surrogate=self.surrogate, store=self.store,
+        )
+        log = TuningLog(workload=workload.name, backend=self.backend.name)
+        strat.bind(engine, space, workload)
+        t_start = time.perf_counter()
+
+        while not strat.finished:
+            # The baseline is exempt from the experiment budget: every legacy
+            # driver recorded and measured experiment 0 even under budget<=0
+            # ("executed too, since it might be the fastest configuration",
+            # §IV-C), so the first ask always gets room for one proposal.
+            if log.experiments and len(log.experiments) >= budget:
+                break
+            if (max_seconds is not None
+                    and time.perf_counter() - t_start > max_seconds):
+                break
+            room = budget - len(log.experiments)
+            if not log.experiments:
+                room = max(room, 1)
+            proposals = list(strat.propose(room))
+            if not proposals:
+                continue    # e.g. greedy popped a fully-deduped parent
+            results = engine.evaluate_prepped(
+                [(p.config, *(p.prepped if p.prepped is not None
+                              else engine.prep(p.config)))
+                 for p in proposals])
+            for prop, res in zip(proposals, results):
+                exp = Experiment(number=len(log.experiments),
+                                 config=prop.config, result=res,
+                                 parent=prop.parent)
+                log.experiments.append(exp)
+                if on_experiment:
+                    on_experiment(exp)
+                strat.observe(exp)
+        log.cache = engine.stats_dict()
+        strat.finalize(log)
+        return log
+
+
+# ---------------------------------------------------------------------------
+# Declarative tuning jobs (dataclass ⇄ JSON)
+# ---------------------------------------------------------------------------
+
+_BACKENDS = {
+    "costmodel": CostModelBackend,
+    "wallclock": WallclockBackend,
+    "pallas": PallasBackend,
+}
+
+# JSON arrays decode as lists; these SearchSpace/backend fields want tuples.
+_TUPLE_SPACE_FIELDS = ("tile_sizes", "unroll_factors")
+
+
+@dataclass
+class TuningSpec:
+    """A whole tuning job as one serializable document.
+
+    ``workload`` names a :data:`~repro.core.workloads.PAPER_WORKLOADS` entry
+    or ``"matmul"`` (with ``workload_args`` = m/n/k/... for
+    :func:`~repro.core.workloads.matmul_workload`); ``workload_args`` may
+    also carry ``scale`` to pre-scale extents.  ``space_args`` are
+    :class:`SearchSpace` kwargs (sans ``root``), ``backend_args`` the
+    backend constructor's, ``strategy_args`` the strategy constructor's.
+    ``store`` is a result-store path (cross-run warm start).  Round-trips
+    losslessly through :meth:`to_json`/:meth:`from_json`, and
+    ``python -m repro.core.session spec.json`` executes it.
+    """
+
+    workload: str = "gemm"
+    workload_args: dict = field(default_factory=dict)
+    strategy: str = "greedy"
+    strategy_args: dict = field(default_factory=dict)
+    budget: int = 400
+    backend: str = "costmodel"
+    backend_args: dict = field(default_factory=dict)
+    space_args: dict = field(default_factory=dict)
+    surrogate: str | None = None
+    store: str | None = None
+    cache: bool = True
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuningSpec":
+        if not isinstance(d, dict):
+            raise ValueError(f"TuningSpec document must be a JSON object, "
+                             f"got {type(d).__name__}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown TuningSpec field(s) {sorted(unknown)} "
+                f"(known: {sorted(known)})")
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1)
+
+    @classmethod
+    def from_json(cls, s: str) -> "TuningSpec":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str | os.PathLike) -> None:
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "TuningSpec":
+        with open(path, "r", encoding="utf-8") as f:
+            return cls.from_json(f.read())
+
+    # -- resolution ----------------------------------------------------------
+
+    def build_workload(self) -> Workload:
+        args = dict(self.workload_args)
+        scale = args.pop("scale", None)
+        if self.workload == "matmul":
+            args.setdefault("name", "matmul")
+            w = matmul_workload(**args)
+        else:
+            if args:
+                raise ValueError(
+                    f"workload_args {sorted(args)} are only valid for "
+                    f"workload='matmul' (besides 'scale')")
+            w = PAPER_WORKLOADS.get(self.workload)
+            if w is None:
+                raise ValueError(
+                    f"unknown workload {self.workload!r} (known: "
+                    f"{', '.join(sorted(PAPER_WORKLOADS))}, matmul)")
+        return w.scaled(scale) if scale is not None else w
+
+    def build_space(self, workload: Workload) -> SearchSpace:
+        args = dict(self.space_args)
+        for f in _TUPLE_SPACE_FIELDS:
+            if f in args:
+                args[f] = tuple(args[f])
+        return SearchSpace(root=workload.nest(), **args)
+
+    def build_backend(self) -> Backend:
+        cls = _BACKENDS.get(self.backend)
+        if cls is None:
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(known: {', '.join(sorted(_BACKENDS))})")
+        return cls(**self.backend_args)
+
+    def run(self, on_experiment: Callable[[Experiment], None] | None = None
+            ) -> TuningLog:
+        """Execute the job end to end and return the :class:`TuningLog`."""
+        workload = self.build_workload()
+        session = TuningSession(
+            self.build_backend(),
+            store=self.store, surrogate=self.surrogate, cache=self.cache,
+        )
+        return session.tune(
+            workload, self.build_space(workload),
+            strategy=self.strategy, budget=self.budget,
+            on_experiment=on_experiment, **self.strategy_args,
+        )
+
+
+# ---------------------------------------------------------------------------
+# CLI entry point: python -m repro.core.session spec.json
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.session",
+        description="Run a declarative TuningSpec JSON document end to end.")
+    ap.add_argument("spec", help="path to a TuningSpec JSON document")
+    ap.add_argument("--out", metavar="LOG.json", default=None,
+                    help="write the full TuningLog JSON here")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="override the spec's experiment budget")
+    ap.add_argument("--store", default=None,
+                    help="override the spec's result-store path")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the per-run summary line")
+    args = ap.parse_args(argv)
+
+    try:
+        spec = TuningSpec.load(args.spec)
+    except (OSError, ValueError, TypeError) as e:
+        print(f"error: cannot load spec {args.spec!r}: {e}", file=sys.stderr)
+        return 2
+    if args.budget is not None:
+        spec.budget = args.budget
+    if args.store is not None:
+        spec.store = args.store
+
+    try:
+        log = spec.run()
+    except (ValueError, TypeError) as e:
+        print(f"error: spec {args.spec!r} failed to resolve: {e}",
+              file=sys.stderr)
+        return 2
+
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            f.write(log.to_json())
+    try:
+        best = log.best()
+        summary = (f"best time_s={best.result.time_s:.6g} "
+                   f"at experiment #{best.number}")
+        rc = 0
+    except NoSuccessfulExperiment as e:
+        summary = f"FAILED: {e}"
+        rc = 1
+    if not args.quiet:
+        print(f"{log.workload} [{spec.strategy} on {log.backend}] "
+              f"{len(log.experiments)} experiments: {summary}")
+    return rc
+
+
+if __name__ == "__main__":
+    # Under ``python -m repro.core.session`` runpy executes a *second* copy
+    # of this module (the package __init__ already imported the canonical
+    # one, whose registry the built-in strategies populated).  Delegate to
+    # the canonical module so there is exactly one STRATEGY_REGISTRY.
+    from repro.core.session import main as _canonical_main
+
+    sys.exit(_canonical_main())

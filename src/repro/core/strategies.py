@@ -1,37 +1,48 @@
-"""Search-space exploration strategies beyond the paper's greedy driver.
+"""Search strategies as ask/tell plugins over the shared tuning session.
 
 The paper's §VIII motivates Monte Carlo tree search ("the origin of the name
 mctree") and cites ProTuner's MCTS results.  We implement:
 
-* :func:`run_greedy`   — the paper's exploitation-only priority queue (delegates
-  to :class:`repro.core.autotuner.Autotuner`);
-* :func:`run_mcts`     — UCT over the *transposition DAG*: selection by upper
-  confidence bound over mean reward, lazy expansion, evaluation-as-rollout,
-  visited-set reward backpropagation.  Nodes are merged by canonical structure
-  key (paper §III/§VIII: "different transformation sequences can lead to the
-  same result"), so a schedule reachable through many derivation orders is one
-  node whose statistics every order shares.  This escapes the "parallelize the
-  outermost loop first" local minimum because a tile-first subtree keeps
-  receiving visits from the exploration term;
-* :func:`run_beam`     — beam search over tree levels (HalideTuner successor),
-  dispatching each level as one batched evaluation;
-* :func:`run_random`   — uniform random walks (baseline for the comparison),
-  recording every step of a walk so the experiment tree has true parent edges.
+* :class:`GreedyStrategy` — the paper's exploitation-only priority queue
+  ("an extreme form of Monte Carlo tree search with exploitation only ...
+  an alternative description could be hill climbing with backtracking",
+  §IV-C);
+* :class:`MctsStrategy` — UCT over the *transposition DAG*: selection by
+  upper confidence bound over mean reward, lazy expansion,
+  evaluation-as-rollout, visited-set reward backpropagation.  Nodes are
+  merged by canonical structure key (paper §III/§VIII: "different
+  transformation sequences can lead to the same result"), so a schedule
+  reachable through many derivation orders is one node whose statistics every
+  order shares.  This escapes the "parallelize the outermost loop first"
+  local minimum because a tile-first subtree keeps receiving visits from the
+  exploration term;
+* :class:`BeamStrategy` — beam search over tree levels (HalideTuner
+  successor), dispatching each level as one batched evaluation;
+* :class:`RandomWalkStrategy` — uniform random walks (the control),
+  recording every step of a walk so the experiment tree has true parent
+  edges.
 
-Every strategy routes measurement through one
-:class:`~repro.core.evaluation.EvaluationEngine` per run: incremental
-schedule derivation, the structural result cache (a schedule reached through
-two different transformation orders is measured once), and batched backend
-dispatch all live there — no strategy owns an inline ``evaluate()`` closure
-anymore.  Greedy, MCTS and beam also share the engine's structural dedup
-``seen`` set (eager ``sweep``, lazy ``claim``); random walks instead dedup by
-derivation path so repeat visits reuse logged experiments.  All strategies
-emit the same :class:`TuningLog` (with engine cache counters) so the
-benchmark harness plots them together.
+Each is a ~50–120-line :class:`~repro.core.session.Strategy` subclass: it
+*proposes* configurations and *observes* results; measurement, batching,
+dedup bookkeeping, surrogate refits, store persistence, and budget accounting
+live once in the :class:`~repro.core.session.TuningSession` (which routes
+every proposal through the run's
+:class:`~repro.core.evaluation.EvaluationEngine`).  The expected-improvement
+acquisition strategy (:mod:`repro.core.acquisition`) registers the same way —
+new strategies are registry plugins, not driver forks.
+
+The pre-redesign ``run_greedy`` / ``run_mcts`` / ``run_beam`` /
+``run_random`` functions survive below as thin compatibility shims that
+construct the equivalent session + strategy.  They are **byte-identical** to
+the monolithic pre-PR drivers on deterministic backends (A/B-tested against
+frozen copies in ``tests/reference_drivers.py``) — same experiments, same
+parents, same engine counters.  All strategies emit the same
+:class:`TuningLog` so the benchmark harness plots them together.
 """
 
 from __future__ import annotations
 
+import heapq
 import math
 import random
 from dataclasses import dataclass, field
@@ -40,22 +51,52 @@ from .autotuner import Autotuner, Experiment, TuningLog
 from .evaluation import EvaluationEngine
 from .measure import Backend
 from .searchspace import Configuration, SearchSpace
+from .session import Proposal, Strategy, TuningSession, register_strategy
 from .workloads import Workload
 
 
-def run_greedy(
-    workload: Workload,
-    space: SearchSpace,
-    backend: Backend,
-    budget: int = 400,
-    cache: bool = True,
-    surrogate=None,
-    surrogate_order: bool = False,
-    store=None,
-) -> TuningLog:
-    return Autotuner(workload, space, backend, max_experiments=budget,
-                     cache=cache, surrogate=surrogate,
-                     surrogate_order=surrogate_order, store=store).run()
+# ---------------------------------------------------------------------------
+# Greedy (paper §IV-C)
+# ---------------------------------------------------------------------------
+
+
+@register_strategy("greedy")
+class GreedyStrategy(Strategy):
+    """Exploitation-only priority queue: always expand the fastest
+    not-yet-expanded configuration.  ``propose`` pops one parent and returns
+    its deduped (and, with a surrogate, ordered) children — the engine's
+    :meth:`~repro.core.evaluation.EvaluationEngine.select` is the selection
+    half of the old fused ``sweep``; the session measures the batch."""
+
+    def __init__(self):
+        self._heap: list[tuple[float, int]] = []
+        self._configs: dict[int, Configuration] = {}
+        self._started = False
+        self._observed = 0
+
+    @property
+    def finished(self) -> bool:
+        return self._started and not self._heap
+
+    def propose(self, n: int) -> list[Proposal]:
+        if not self._started:
+            self._started = True
+            return [Proposal(Configuration(), None)]
+        _, num = heapq.heappop(self._heap)
+        kids = self.space.children(self._configs[num], dedup=False)
+        return [Proposal(c, num, prepped=(nest, key))
+                for c, nest, key in self.engine.select_prepped(kids, room=n)]
+
+    def observe(self, exp: Experiment) -> None:
+        if self._observed == 0:
+            # experiment 0 is the baseline — executed too, "since it might be
+            # the fastest configuration" (§IV-C), and marked seen so its
+            # structure cannot be re-evaluated as a child
+            self.engine.seed_seen(exp.config)
+        self._observed += 1
+        if exp.result.ok:
+            self._configs[exp.number] = exp.config
+            heapq.heappush(self._heap, (exp.result.time_s, exp.number))
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +182,410 @@ def _backprop(start: "_Node", r: float) -> int:
     return len(seen)
 
 
+@register_strategy("mcts")
+class MctsStrategy(Strategy):
+    """UCT with progressive widening over the transposition DAG.
+
+    The branching factor at each node is in the hundreds (190 tilings alone
+    for a 3-loop band — paper §V), so naive UCT exhausts its budget
+    broadening the root.  Progressive widening caps the children considered
+    at a node to ``pw_c · visits^pw_alpha``, forcing depth — this is what
+    lets the search reach tile→parallelize compositions the greedy driver
+    never sees.
+
+    Transpositions (on by default): nodes are merged by canonical structure
+    key — one node per *structure*, not per derivation path.  When a
+    duplicate structure is derived, no budget is ever spent on it.  In a
+    **warm-started** run (persistent store preloaded into the engine) the
+    duplicate becomes a DAG edge to the existing node (unless that would
+    close a cycle), and expansion is additionally *ordered by the stored
+    measurements* — known-good structures first, unknowns next, known-red
+    last — so a re-tune re-reaches the previous run's best in a fraction of
+    the experiments (measurement-log reuse, cf. arXiv:2010.08040; gated in
+    ``benchmarks/bench_warm_start.py``).  In a **cold** run duplicates are
+    skipped exactly like the pre-DAG search (measured A/B: cold linking was
+    pure trajectory variance), so cold results are byte-identical to
+    ``transpositions=False``.
+
+    An active engine surrogate adds an **expansion prior**
+    (surrogate-informed MCTS, arXiv:2105.04555): each node's untried
+    children are ordered by the engine's surrogate score before expansion.
+    A fitted learned surrogate scores with its optimistic
+    lower-confidence bound, so high-uncertainty structures keep an
+    exploration bonus; exact stored measurements still dominate.
+
+    Ask/tell shape: each ``propose`` runs one selection descent and returns
+    the single configuration to expand (evaluation *is* the rollout, so the
+    result must be observed before the next descent); transposition merges
+    and dedup skips consume no budget and loop inside ``propose``.
+    ``log.cache`` gains ``transpositions`` (edges added) and ``dag_nodes``
+    (unique structures) via :meth:`finalize`.
+    """
+
+    def __init__(self, c_explore: float = 0.7, pw_c: float = 4.0,
+                 pw_alpha: float = 0.6, seed: int = 0,
+                 transpositions: bool = True):
+        self.c_explore = c_explore
+        self.pw_c = pw_c
+        self.pw_alpha = pw_alpha
+        self.transpositions = transpositions
+        self.rng = random.Random(seed)
+        self.table: dict[tuple, _Node] = {}
+        self.root: _Node | None = None
+        self.n_links = 0
+        self._t0: float | None = None
+        self._started = False
+        self._finished = False
+        self._pending: tuple[_Node, tuple, list[_Node]] | None = None
+
+    def on_bound(self) -> None:
+        # Only warm runs key every derived child (the ordering needs the keys
+        # anyway); cold runs keep lazy keying — one canonical key per
+        # *popped* candidate — because deep nodes derive thousands of
+        # children and progressive widening expands only a handful.  A
+        # surrogate expansion prior opts into the same eager keying (the
+        # score needs the derived structure anyway).
+        self.warm_order = self.engine.stats.preloaded > 0
+        self.prior = self.engine.surrogate is not None
+
+    @property
+    def finished(self) -> bool:
+        return self._finished
+
+    # -- DAG plumbing --------------------------------------------------------
+
+    def _reward(self, time_s: float | None) -> float:
+        if time_s is None:
+            return 0.0
+        return min(4.0, self._t0 / time_s)  # speedup vs baseline, capped
+
+    def _link(self, node: _Node, existing: _Node) -> bool:
+        """Add the DAG edge node → existing unless it already exists or would
+        close a cycle.  Returns True iff the edge was added."""
+        if (existing is node or existing.dead
+                or existing in node.children
+                or _is_ancestor(existing, node)):
+            return False
+        node.children.append(existing)
+        existing.parents.append(node)
+        self.n_links += 1
+        return True
+
+    def _ensure_untried(self, node: _Node) -> None:
+        if node.untried is not None:
+            return
+        kids = self.space.children(node.config, dedup=False)
+        self.rng.shuffle(kids)
+        if not (self.warm_order or self.prior):
+            node.untried = kids
+            return
+        # Transposition merge at derivation time: children that re-derive an
+        # already-known structure become DAG edges to the existing node —
+        # its visit counts and values (and its whole subtree) are shared
+        # with this derivation order immediately, for zero budget.  Only
+        # structures never seen before stay on the untried list.
+        engine = self.engine
+        fresh: list[tuple[Configuration, tuple]] = []
+        for k in kids:
+            key = engine.canonical_key(k)
+            if self.transpositions and self.warm_order:
+                existing = self.table.get(key)
+                if existing is not None:
+                    self._link(node, existing)
+                    continue
+            fresh.append((k, key))
+
+        # untried is popped from the end: sort so stored-good structures
+        # are popped first, unknowns next (best-predicted first when a
+        # surrogate prior is active), stored-red last
+        def rank(item: tuple[Configuration, tuple]):
+            res = engine.peek(item[1])
+            if res is None:
+                if self.prior:
+                    return (1, -engine.surrogate_score(item[0]))
+                return (1, 0.0)
+            if not res.ok:
+                return (0, 0.0)
+            return (2, -res.time_s)
+
+        fresh.sort(key=rank)
+        node.untried = [k for k, _ in fresh]
+
+    def _may_widen(self, node: _Node) -> bool:
+        self._ensure_untried(node)
+        if not node.untried:
+            return False
+        limit = self.pw_c * (node.visits ** self.pw_alpha)
+        # ``owned``, not ``len(children)``: transposition links add
+        # selectable children without consuming widening slots, so a densely
+        # linked DAG keeps exploring fresh structures at the same rate as
+        # the tree would.
+        return node.owned < limit
+
+    # -- ask/tell ------------------------------------------------------------
+
+    def propose(self, n: int) -> list[Proposal]:
+        if not self._started:
+            self._started = True
+            return [Proposal(Configuration(), None)]
+        engine = self.engine
+        while True:
+            # 1. selection: descend while widening is not indicated,
+            # recording the derivation path for backpropagation.  The graph
+            # is acyclic (links that would close a cycle are refused), so
+            # the descent terminates.
+            node = self.root
+            path = [self.root]
+            while not node.dead:
+                if self._may_widen(node):
+                    break
+                live = [ch for ch in node.children if not ch.dead]
+                if not live:
+                    node.dead = True
+                    break
+                node = max(
+                    live, key=lambda ch: ch.ucb(self.c_explore, node.visits))
+                path.append(node)
+            if self.root.dead:
+                self._finished = True
+                return []
+            if node.dead:
+                continue
+            # 2. expansion: propose one untried child (evaluation = rollout)
+            config = node.untried.pop()
+            nest, key = engine.prep(config)
+            if self.transpositions and self.warm_order:
+                existing = self.table.get(key)
+                if existing is not None:
+                    # The structure was discovered elsewhere *after* this
+                    # node's untried list was built — merge instead of
+                    # re-exploring.  No budget is spent; if the edge is
+                    # added, every node of the discovering derivation path
+                    # immediately learns what the structure is worth.
+                    engine.claim_key(key)   # keeps the dedup counter honest
+                    if self._link(node, existing):
+                        _backprop(node, self._reward(existing.time_s))
+                    continue
+            if not engine.claim_key(key):
+                # Cold runs skip duplicate structures exactly like the
+                # pre-DAG search: at cold-run collision rates an edge
+                # carries no information yet — measured A/B, linking cold
+                # was pure trajectory variance — so merging waits until the
+                # run is warm.
+                continue
+            self._pending = (node, key, path)
+            return [Proposal(config, node.number, prepped=(nest, key))]
+
+    def observe(self, exp: Experiment) -> None:
+        if self.root is None and self._pending is None:
+            # experiment 0: the baseline becomes the root
+            base_key = self.engine.canonical_key(exp.config)
+            self.engine.seed_seen(exp.config)
+            if not exp.result.ok:
+                self._finished = True
+                return
+            self._t0 = exp.result.time_s
+            self.root = _Node(config=exp.config, key=base_key,
+                              time_s=self._t0, visits=1, value=1.0, number=0)
+            self.table[base_key] = self.root
+            return
+        node, key, path = self._pending
+        self._pending = None
+        child = _Node(config=exp.config, key=key, parents=[node],
+                      time_s=exp.result.time_s if exp.result.ok else None,
+                      dead=not exp.result.ok, number=exp.number)
+        node.children.append(child)
+        node.owned += 1
+        self.table[key] = child
+        # 3. backpropagation along the selection path (plus the new child).
+        # Path backprop keeps visit counts well-founded on the DAG — the
+        # all-ancestor walk is reserved for transposition discoveries, where
+        # crediting every derivation order is the point.
+        r = self._reward(child.time_s)
+        child.visits += 1
+        child.value += r
+        for nn in path:
+            nn.visits += 1
+            nn.value += r
+
+    def finalize(self, log: TuningLog) -> None:
+        # the legacy driver's failed-baseline early return produced a plain
+        # stats dict without DAG counters — byte-identity includes that
+        if self.root is not None:
+            log.cache["transpositions"] = self.n_links
+            log.cache["dag_nodes"] = len(self.table)
+
+
+# ---------------------------------------------------------------------------
+# Beam search
+# ---------------------------------------------------------------------------
+
+
+@register_strategy("beam")
+class BeamStrategy(Strategy):
+    """Beam search over tree levels.
+
+    Each ``propose`` returns the surviving frontier's entire next level,
+    which the session dispatches as **one** batched evaluation
+    (thread-pooled on compile+measure backends).  Children proposed by
+    several beam parents are structurally duplicate: the engine's ``claim``
+    drops them (first parent wins) so they consume no budget.  An active
+    engine surrogate orders each level's children before the budget
+    truncation, so a truncated level keeps the children the model ranks
+    fastest."""
+
+    def __init__(self, width: int = 4):
+        self.width = width
+        self._frontier: list[Experiment] = []
+        self._level: list[Experiment] = []
+        self._expect = 0
+        self._started = False
+        self._observed = 0
+
+    @property
+    def finished(self) -> bool:
+        return self._started and not self._frontier and self._expect == 0
+
+    def propose(self, n: int) -> list[Proposal]:
+        if not self._started:
+            self._started = True
+            return [Proposal(Configuration(), None)]
+        dedup = self.space.dedup
+        batch: list[Proposal] = []
+        for parent in self._frontier:
+            kids = self.engine.order_children(
+                self.space.children(parent.config, dedup=False)
+            )
+            for k in kids:
+                if dedup:
+                    nest, key = self.engine.prep(k)
+                    if self.engine.claim_key(key):
+                        batch.append(
+                            Proposal(k, parent.number, prepped=(nest, key)))
+                elif self.engine.claim(k):
+                    batch.append(Proposal(k, parent.number))
+        batch = batch[:n]
+        self._frontier = []
+        self._expect = len(batch)
+        self._level = []
+        return batch
+
+    def observe(self, exp: Experiment) -> None:
+        if self._observed == 0:
+            self._observed += 1
+            self.engine.seed_seen(exp.config)
+            if exp.result.ok:
+                self._frontier = [exp]
+            return
+        self._observed += 1
+        if exp.result.ok:
+            self._level.append(exp)
+        self._expect -= 1
+        if self._expect == 0:
+            self._level.sort(key=lambda e: e.result.time_s)
+            self._frontier = self._level[:self.width]
+            self._level = []
+
+
+# ---------------------------------------------------------------------------
+# Random walks
+# ---------------------------------------------------------------------------
+
+
+@register_strategy("random")
+class RandomWalkStrategy(Strategy):
+    """Uniform random walks from the root (the control in every comparison).
+
+    Every *step* of a walk is an experiment whose parent is the previous
+    step, so the experiment tree carries the true parent chain.  A walk
+    re-entering an already-logged derivation path reuses that experiment as
+    the parent instead of re-logging it, and the engine's structural cache
+    makes the shared prefixes free to re-measure.  Walk shape depends only
+    on the RNG and the space — never on measured results — so one
+    ``propose`` returns all of a walk's unlogged steps with pre-assigned
+    experiment numbers (the session logs every proposal, in order), and the
+    session measures them as one deduped batch.
+
+    Uniform walks never *order* children by a surrogate — random is the
+    surrogate-free control — but a shared learned surrogate still receives
+    this run's measurements as training data via the engine.
+    """
+
+    def __init__(self, max_depth: int = 4, seed: int = 0):
+        self.max_depth = max_depth
+        self.rng = random.Random(seed)
+        self._logged: dict[tuple, int] = {}   # derivation path → exp number
+        self._n = 0                           # experiments proposed so far
+        self._stalls = 0
+        self._started = False
+        self._finished = False
+
+    @property
+    def finished(self) -> bool:
+        return self._finished
+
+    def propose(self, n: int) -> list[Proposal]:
+        if not self._started:
+            self._started = True
+            self._logged[self.space.path_key(Configuration())] = 0
+            self._n = 1
+            return [Proposal(Configuration(), None)]
+        batch: list[Proposal] = []
+        while not batch and self._stalls < 1000:
+            before = self._n
+            config = Configuration()
+            parent_num = 0
+            depth = self.rng.randint(1, self.max_depth)
+            for _ in range(depth):
+                kids = self.space.children(config)
+                if not kids:
+                    break
+                config = self.rng.choice(kids)
+                key = self.space.path_key(config)
+                known = self._logged.get(key)
+                if known is None:
+                    number = self._n
+                    self._n += 1
+                    self._logged[key] = number
+                    batch.append(Proposal(config, parent_num))
+                    parent_num = number
+                    if len(batch) >= n:
+                        break
+                else:
+                    parent_num = known
+            # a walk that only revisited logged paths adds nothing; bail out
+            # when the (practically infinite) space is locally exhausted
+            self._stalls = self._stalls + 1 if self._n == before else 0
+        if not batch:
+            self._finished = True
+        return batch
+
+    def observe(self, exp: Experiment) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Legacy compatibility shims — byte-identical to the pre-PR drivers
+# ---------------------------------------------------------------------------
+
+
+def run_greedy(
+    workload: Workload,
+    space: SearchSpace,
+    backend: Backend,
+    budget: int = 400,
+    cache: bool = True,
+    surrogate=None,
+    surrogate_order: bool = False,
+    store=None,
+) -> TuningLog:
+    """Greedy driver (paper §IV-C) — shim over
+    ``TuningSession.tune(strategy="greedy")`` via :class:`Autotuner`."""
+    return Autotuner(workload, space, backend, max_experiments=budget,
+                     cache=cache, surrogate=surrogate,
+                     surrogate_order=surrogate_order, store=store).run()
+
+
 def run_mcts(
     workload: Workload,
     space: SearchSpace,
@@ -155,229 +600,15 @@ def run_mcts(
     surrogate=None,
     store=None,
 ) -> TuningLog:
-    """UCT with progressive widening over the transposition DAG.
-
-    The branching factor at each node is in the hundreds (190 tilings alone for
-    a 3-loop band — paper §V), so naive UCT exhausts its budget broadening the
-    root.  Progressive widening caps the children considered at a node to
-    ``pw_c · visits^pw_alpha``, forcing depth — this is what lets the search
-    reach tile→parallelize compositions the greedy driver never sees.
-
-    Transpositions (on by default): nodes are merged by canonical structure
-    key — one node per *structure*, not per derivation path.  When a
-    duplicate structure is derived, no budget is ever spent on it.  In a
-    **warm-started** run (persistent ``store`` attached, or
-    ``CC_RESULT_STORE`` set, with records for this workload/backend) the
-    duplicate becomes a DAG edge to the existing node (unless that would
-    close a cycle): its visit counts and values are shared by every
-    derivation order that reaches it, the expanding path immediately
-    receives the known reward, and expansion is additionally *ordered by the
-    stored measurements* — known-good structures first, unknowns next,
-    known-red last — so a re-tune re-reaches the previous run's best in a
-    fraction of the experiments and then spends the remaining budget beyond
-    the old frontier (measurement-log reuse, cf. arXiv:2010.08040; gated in
-    ``benchmarks/bench_warm_start.py``).  In a **cold** run duplicates are
-    skipped exactly like the pre-DAG search: at cold-run collision rates an
-    edge carries no information yet, and measured A/B showed cold linking to
-    be pure trajectory variance — so cold results are byte-identical to
-    ``transpositions=False``.
-
-    ``surrogate`` ("analytic" | "learned" | a prefit
-    :class:`~repro.core.surrogate.Surrogate` | None) adds an **expansion
-    prior** (surrogate-informed MCTS, arXiv:2105.04555): each node's untried
-    children are ordered by the engine's surrogate score before expansion, so
-    progressive widening spends its slots on the structures the model ranks
-    fastest.  A fitted learned surrogate scores with its optimistic
-    lower-confidence bound, so high-uncertainty structures keep an
-    exploration bonus.  Exact stored measurements (warm runs) still dominate
-    the ordering; the prior only ranks the *unknown* structures between
-    them.  ``surrogate=None`` (default) keeps the search byte-identical to
-    the prior-free driver.  Note the prior derives a canonical key per
-    candidate child (like warm ordering does), trading per-node keying cost
-    for better expansion order — worth it when evaluation is expensive
-    (wallclock/Pallas), not for free cost-model sweeps.
-
-    ``log.cache`` carries the engine counters plus ``transpositions`` (edges
-    added) and ``dag_nodes`` (unique structures in the graph).
-    """
-    rng = random.Random(seed)
+    """MCTS driver — shim over ``TuningSession.tune(strategy="mcts")``;
+    see :class:`MctsStrategy` for semantics."""
     engine = EvaluationEngine(workload, space, backend, cache=cache,
                               surrogate=surrogate, store=store)
-    log = TuningLog(workload=workload.name, backend=backend.name)
-    table: dict[tuple, _Node] = {}
-    n_links = 0
-
-    def record(config: Configuration, parent_num: int | None) -> Experiment:
-        exp = Experiment(number=len(log.experiments), config=config,
-                         result=engine.evaluate(config), parent=parent_num)
-        log.experiments.append(exp)
-        return exp
-
-    baseline = Configuration()
-    base = record(baseline, None)
-    base_key = engine.canonical_key(baseline)
-    engine.seed_seen(baseline)
-    if not base.result.ok:
-        log.cache = engine.stats_dict()
-        return log
-    t0 = base.result.time_s
-    root = _Node(config=baseline, key=base_key, time_s=t0, visits=1,
-                 value=1.0, number=0)
-    table[base_key] = root
-
-    def reward(time_s: float | None) -> float:
-        if time_s is None:
-            return 0.0
-        return min(4.0, t0 / time_s)        # speedup vs baseline, capped
-
-    def link(node: _Node, existing: _Node) -> bool:
-        """Add the DAG edge node → existing unless it already exists or would
-        close a cycle (an interchange and its inverse re-deriving an
-        ancestor's structure).  Returns True iff the edge was added."""
-        nonlocal n_links
-        if (existing is node or existing.dead
-                or existing in node.children
-                or _is_ancestor(existing, node)):
-            return False
-        node.children.append(existing)
-        existing.parents.append(node)
-        n_links += 1
-        return True
-
-    # A warm-started engine (persistent store preloaded) carries measured
-    # times for structures this process never evaluated; use them to order
-    # expansion so the search re-reaches the previous run's frontier almost
-    # directly before spending budget on the unknown (the measurement-log
-    # reuse of arXiv:2010.08040).  Only warm runs key every derived child
-    # (the ordering needs the keys anyway); cold runs keep PR 1's lazy
-    # keying — one canonical key per *popped* candidate — because deep nodes
-    # derive thousands of children and progressive widening expands only a
-    # handful, so eager keying would dominate a cold run's wall time for a
-    # handful of early links.  A surrogate expansion prior opts into the
-    # same eager keying (the score needs the derived structure anyway).
-    warm_order = engine.stats.preloaded > 0
-    prior = engine.surrogate is not None
-
-    def ensure_untried(node: _Node) -> None:
-        if node.untried is not None:
-            return
-        kids = space.children(node.config, dedup=False)
-        rng.shuffle(kids)
-        if not (warm_order or prior):
-            node.untried = kids
-            return
-        # Transposition merge at derivation time: children that re-derive an
-        # already-known structure become DAG edges to the existing node —
-        # its visit counts and values (and its whole subtree) are shared
-        # with this derivation order immediately, for zero budget.  Only
-        # structures never seen before stay on the untried list.
-        fresh: list[tuple[Configuration, tuple]] = []
-        for k in kids:
-            key = engine.canonical_key(k)
-            if transpositions and warm_order:
-                existing = table.get(key)
-                if existing is not None:
-                    link(node, existing)
-                    continue
-            fresh.append((k, key))
-
-        # untried is popped from the end: sort so stored-good structures
-        # are popped first, unknowns next (best-predicted first when a
-        # surrogate prior is active), stored-red last
-        def rank(item: tuple[Configuration, tuple]):
-            res = engine.peek(item[1])
-            if res is None:
-                if prior:
-                    return (1, -engine.surrogate_score(item[0]))
-                return (1, 0.0)
-            if not res.ok:
-                return (0, 0.0)
-            return (2, -res.time_s)
-
-        fresh.sort(key=rank)
-        node.untried = [k for k, _ in fresh]
-
-    def may_widen(node: _Node) -> bool:
-        ensure_untried(node)
-        if not node.untried:
-            return False
-        limit = pw_c * (node.visits ** pw_alpha)
-        # ``owned``, not ``len(children)``: transposition links add
-        # selectable children without consuming widening slots, so a densely
-        # linked DAG keeps exploring fresh structures at the same rate as
-        # the tree would.
-        return node.owned < limit
-
-    while len(log.experiments) < budget:
-        # 1. selection: descend while widening is not indicated, recording
-        # the derivation path for backpropagation.  The graph is acyclic
-        # (links that would close a cycle are refused), so the descent
-        # terminates.
-        node = root
-        path = [root]
-        while not node.dead:
-            if may_widen(node):
-                break
-            live = [ch for ch in node.children if not ch.dead]
-            if not live:
-                node.dead = True
-                break
-            node = max(live, key=lambda ch: ch.ucb(c_explore, node.visits))
-            path.append(node)
-        if root.dead:
-            break
-        if node.dead:
-            continue
-        # 2. expansion: evaluate one untried child (evaluation = rollout)
-        config = node.untried.pop()
-        key = engine.canonical_key(config)
-        if transpositions and warm_order:
-            existing = table.get(key)
-            if existing is not None:
-                # The structure was discovered elsewhere *after* this node's
-                # untried list was built — merge instead of re-exploring.
-                # No budget is spent; if the edge is added, every node of
-                # the discovering derivation path immediately learns what
-                # the structure is worth (the existing node keeps its own
-                # statistics, credited at creation and by later selections
-                # through it).
-                engine.claim_key(key)       # keeps the dedup counter honest
-                if link(node, existing):
-                    _backprop(node, reward(existing.time_s))
-                continue
-        if not engine.claim_key(key):
-            # Cold runs skip duplicate structures exactly like the pre-DAG
-            # search: at cold-run collision rates (a handful per hundreds of
-            # experiments) an edge carries no information yet — measured
-            # A/B, linking cold was pure trajectory variance (sometimes
-            # worse), so merging waits until the run is warm.
-            continue
-        exp = record(config, node.number)
-        child = _Node(config=config, key=key, parents=[node],
-                      time_s=exp.result.time_s if exp.result.ok else None,
-                      dead=not exp.result.ok, number=exp.number)
-        node.children.append(child)
-        node.owned += 1
-        table[key] = child
-        # 3. backpropagation along the selection path (plus the new child).
-        # Path backprop keeps visit counts well-founded on the DAG — the
-        # all-ancestor walk is reserved for transposition discoveries above,
-        # where crediting every derivation order is the point.
-        r = reward(child.time_s)
-        child.visits += 1
-        child.value += r
-        for n in path:
-            n.visits += 1
-            n.value += r
-    log.cache = engine.stats_dict()
-    log.cache["transpositions"] = n_links
-    log.cache["dag_nodes"] = len(table)
-    return log
-
-
-# ---------------------------------------------------------------------------
-# Beam search
-# ---------------------------------------------------------------------------
+    return TuningSession(backend).tune(
+        workload, space, budget=budget, engine=engine,
+        strategy=MctsStrategy(c_explore=c_explore, pw_c=pw_c,
+                              pw_alpha=pw_alpha, seed=seed,
+                              transpositions=transpositions))
 
 
 def run_beam(
@@ -391,62 +622,15 @@ def run_beam(
     surrogate_order: bool = False,
     store=None,
 ) -> TuningLog:
-    """Beam search over tree levels.
-
-    Each level's surviving frontier expands all its children, which are
-    dispatched as **one** ``evaluate_many`` batch (thread-pooled on
-    compile+measure backends).  Children proposed by several beam parents
-    are structurally duplicate: the engine's ``claim`` drops them (first
-    parent wins) so they consume no budget.  ``surrogate``
-    ("analytic" | "learned" | None) orders each level's children before the
-    budget truncation, so a truncated level keeps the children the model
-    ranks fastest (``surrogate_order=True`` is the deprecated alias for
-    "analytic").
-    """
+    """Beam-search driver — shim over ``TuningSession.tune(strategy="beam")``;
+    see :class:`BeamStrategy` for semantics (``surrogate_order=True`` is the
+    deprecated alias for ``surrogate="analytic"``)."""
     engine = EvaluationEngine(workload, space, backend, cache=cache,
                               surrogate=surrogate,
                               surrogate_order=surrogate_order, store=store)
-    log = TuningLog(workload=workload.name, backend=backend.name)
-
-    def record(config: Configuration, result, parent_num: int | None) -> Experiment:
-        exp = Experiment(number=len(log.experiments), config=config,
-                         result=result, parent=parent_num)
-        log.experiments.append(exp)
-        return exp
-
-    baseline = Configuration()
-    base = record(baseline, engine.evaluate(baseline), None)
-    engine.seed_seen(baseline)
-    frontier = [base] if base.result.ok else []
-    while frontier and len(log.experiments) < budget:
-        batch: list[Configuration] = []
-        parents: list[int] = []
-        for parent in frontier:
-            kids = engine.order_children(
-                space.children(parent.config, dedup=False)
-            )
-            for k in kids:
-                if engine.claim(k):
-                    batch.append(k)
-                    parents.append(parent.number)
-        room = budget - len(log.experiments)
-        batch, parents = batch[:room], parents[:room]
-        nxt: list[Experiment] = []
-        for config, parent_num, res in zip(
-            batch, parents, engine.evaluate_many(batch)
-        ):
-            exp = record(config, res, parent_num)
-            if exp.result.ok:
-                nxt.append(exp)
-        nxt.sort(key=lambda e: e.result.time_s)
-        frontier = nxt[:width]
-    log.cache = engine.stats_dict()
-    return log
-
-
-# ---------------------------------------------------------------------------
-# Random walks
-# ---------------------------------------------------------------------------
+    return TuningSession(backend).tune(
+        workload, space, budget=budget, engine=engine,
+        strategy=BeamStrategy(width=width))
 
 
 def run_random(
@@ -460,60 +644,13 @@ def run_random(
     surrogate=None,
     store=None,
 ) -> TuningLog:
-    """Uniform random walks from the root.
-
-    Every *step* of a walk is recorded as an experiment whose parent is the
-    previous step, so the experiment tree carries the true parent chain (the
-    seed code attributed every walk endpoint to the baseline, which made the
-    tree plots wrong).  A walk re-entering an already-logged derivation path
-    reuses that experiment as the parent instead of re-logging it, and the
-    engine's structural cache makes the shared prefixes free to re-measure.
-
-    ``surrogate`` is accepted for strategy-API uniformity (and so a shared
-    learned surrogate still receives this run's measurements as training
-    data), but uniform walks never *order* children by it — random is the
-    surrogate-free control in every comparison.
-    """
-    rng = random.Random(seed)
+    """Random-walk driver — shim over ``TuningSession.tune(strategy="random")``;
+    see :class:`RandomWalkStrategy` for semantics."""
     engine = EvaluationEngine(workload, space, backend, cache=cache,
                               surrogate=surrogate, store=store)
-    log = TuningLog(workload=workload.name, backend=backend.name)
-
-    def record(config: Configuration, parent_num: int | None) -> Experiment:
-        exp = Experiment(number=len(log.experiments), config=config,
-                         result=engine.evaluate(config), parent=parent_num)
-        log.experiments.append(exp)
-        return exp
-
-    base = record(Configuration(), None)
-    # derivation path → experiment number (walks share logged prefixes)
-    logged: dict[tuple, int] = {space.path_key(Configuration()): base.number}
-    stalls = 0
-    while len(log.experiments) < budget and stalls < 1000:
-        before = len(log.experiments)
-        config = Configuration()
-        parent_num = base.number
-        depth = rng.randint(1, max_depth)
-        for _ in range(depth):
-            kids = space.children(config)
-            if not kids:
-                break
-            config = rng.choice(kids)
-            key = space.path_key(config)
-            known = logged.get(key)
-            if known is None:
-                exp = record(config, parent_num)
-                logged[key] = exp.number
-                parent_num = exp.number
-                if len(log.experiments) >= budget:
-                    break
-            else:
-                parent_num = known
-        # a walk that only revisited logged paths adds nothing; bail out when
-        # the (practically infinite) space is locally exhausted
-        stalls = stalls + 1 if len(log.experiments) == before else 0
-    log.cache = engine.stats_dict()
-    return log
+    return TuningSession(backend).tune(
+        workload, space, budget=budget, engine=engine,
+        strategy=RandomWalkStrategy(max_depth=max_depth, seed=seed))
 
 
 STRATEGIES = {

@@ -1,0 +1,362 @@
+"""Frozen copies of the pre-PR-4 monolithic drivers — the A/B reference.
+
+PR 4 inverted the tuning control flow: the four ``run_greedy/run_mcts/
+run_beam/run_random`` loop bodies became ask/tell ``Strategy`` subclasses
+driven by one :class:`~repro.core.session.TuningSession`.  The acceptance
+criterion is that the legacy shims stay **byte-identical** to the pre-PR
+drivers on deterministic backends, so this module preserves those drivers
+verbatim (modulo imports) as the ground truth the equivalence tests in
+``test_session.py`` compare against.
+
+Do not "improve" this file: its entire value is that it does not change.
+The only edits from the PR-3 originals are imports (absolute, from
+``repro.core``) and the function names (``legacy_`` prefix).
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+import random
+import time
+from dataclasses import dataclass, field
+
+from repro.core import (Configuration, EvaluationEngine, Experiment,
+                        TuningLog)
+
+
+# ---------------------------------------------------------------------------
+# Greedy (the pre-PR Autotuner.run loop)
+# ---------------------------------------------------------------------------
+
+
+def legacy_run_greedy(workload, space, backend, budget=400, cache=True,
+                      surrogate=None, surrogate_order=False, store=None,
+                      max_seconds=None, on_experiment=None, engine=None):
+    engine = engine or EvaluationEngine(
+        workload, space, backend, cache=cache, surrogate=surrogate,
+        surrogate_order=surrogate_order, store=store,
+    )
+    log = TuningLog(workload=workload.name, backend=backend.name)
+    t_start = time.perf_counter()
+
+    def record(config, result, parent):
+        exp = Experiment(number=len(log.experiments), config=config,
+                         result=result, parent=parent)
+        log.experiments.append(exp)
+        if on_experiment:
+            on_experiment(exp)
+        return exp
+
+    baseline = Configuration()
+    base = record(baseline, engine.evaluate(baseline), None)
+    engine.seed_seen(baseline)
+    heap: list[tuple[float, int]] = []
+    if base.result.ok:
+        heapq.heappush(heap, (base.result.time_s, base.number))
+
+    while heap:
+        if len(log.experiments) >= budget:
+            break
+        if (max_seconds is not None
+                and time.perf_counter() - t_start > max_seconds):
+            break
+        _, num = heapq.heappop(heap)
+        parent = log.experiments[num]
+        swept = engine.sweep(
+            space.children(parent.config, dedup=False),
+            room=budget - len(log.experiments),
+        )
+        for child, res in swept:
+            exp = record(child, res, parent.number)
+            if exp.result.ok:
+                heapq.heappush(heap, (exp.result.time_s, exp.number))
+    log.cache = engine.stats_dict()
+    return log
+
+
+# ---------------------------------------------------------------------------
+# MCTS (UCT over the transposition DAG) — pre-PR run_mcts
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Node:
+    config: Configuration
+    key: tuple | None = None
+    parents: list["_Node"] = field(default_factory=list)
+    children: list["_Node"] = field(default_factory=list)
+    untried: list[Configuration] | None = None
+    visits: int = 0
+    value: float = 0.0
+    time_s: float | None = None
+    dead: bool = False
+    number: int = -1
+    owned: int = 0
+
+    def ucb(self, c: float, parent_visits: int) -> float:
+        if self.visits == 0:
+            return float("inf")
+        mean = self.value / self.visits
+        return mean + c * math.sqrt(math.log(parent_visits + 1) / self.visits)
+
+
+def _is_ancestor(candidate: "_Node", node: "_Node") -> bool:
+    seen: set[int] = set()
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if n is candidate:
+            return True
+        if id(n) in seen:
+            continue
+        seen.add(id(n))
+        stack.extend(n.parents)
+    return False
+
+
+def _backprop(start: "_Node", r: float) -> int:
+    seen: set[int] = set()
+    frontier = [start]
+    while frontier:
+        n = frontier.pop()
+        if id(n) in seen:
+            continue
+        seen.add(id(n))
+        n.visits += 1
+        n.value += r
+        frontier.extend(n.parents)
+    return len(seen)
+
+
+def legacy_run_mcts(workload, space, backend, budget=400, c_explore=0.7,
+                    pw_c=4.0, pw_alpha=0.6, seed=0, cache=True,
+                    transpositions=True, surrogate=None, store=None):
+    rng = random.Random(seed)
+    engine = EvaluationEngine(workload, space, backend, cache=cache,
+                              surrogate=surrogate, store=store)
+    log = TuningLog(workload=workload.name, backend=backend.name)
+    table: dict[tuple, _Node] = {}
+    n_links = 0
+
+    def record(config, parent_num):
+        exp = Experiment(number=len(log.experiments), config=config,
+                         result=engine.evaluate(config), parent=parent_num)
+        log.experiments.append(exp)
+        return exp
+
+    baseline = Configuration()
+    base = record(baseline, None)
+    base_key = engine.canonical_key(baseline)
+    engine.seed_seen(baseline)
+    if not base.result.ok:
+        log.cache = engine.stats_dict()
+        return log
+    t0 = base.result.time_s
+    root = _Node(config=baseline, key=base_key, time_s=t0, visits=1,
+                 value=1.0, number=0)
+    table[base_key] = root
+
+    def reward(time_s):
+        if time_s is None:
+            return 0.0
+        return min(4.0, t0 / time_s)
+
+    def link(node, existing):
+        nonlocal n_links
+        if (existing is node or existing.dead
+                or existing in node.children
+                or _is_ancestor(existing, node)):
+            return False
+        node.children.append(existing)
+        existing.parents.append(node)
+        n_links += 1
+        return True
+
+    warm_order = engine.stats.preloaded > 0
+    prior = engine.surrogate is not None
+
+    def ensure_untried(node):
+        if node.untried is not None:
+            return
+        kids = space.children(node.config, dedup=False)
+        rng.shuffle(kids)
+        if not (warm_order or prior):
+            node.untried = kids
+            return
+        fresh = []
+        for k in kids:
+            key = engine.canonical_key(k)
+            if transpositions and warm_order:
+                existing = table.get(key)
+                if existing is not None:
+                    link(node, existing)
+                    continue
+            fresh.append((k, key))
+
+        def rank(item):
+            res = engine.peek(item[1])
+            if res is None:
+                if prior:
+                    return (1, -engine.surrogate_score(item[0]))
+                return (1, 0.0)
+            if not res.ok:
+                return (0, 0.0)
+            return (2, -res.time_s)
+
+        fresh.sort(key=rank)
+        node.untried = [k for k, _ in fresh]
+
+    def may_widen(node):
+        ensure_untried(node)
+        if not node.untried:
+            return False
+        limit = pw_c * (node.visits ** pw_alpha)
+        return node.owned < limit
+
+    while len(log.experiments) < budget:
+        node = root
+        path = [root]
+        while not node.dead:
+            if may_widen(node):
+                break
+            live = [ch for ch in node.children if not ch.dead]
+            if not live:
+                node.dead = True
+                break
+            node = max(live, key=lambda ch: ch.ucb(c_explore, node.visits))
+            path.append(node)
+        if root.dead:
+            break
+        if node.dead:
+            continue
+        config = node.untried.pop()
+        key = engine.canonical_key(config)
+        if transpositions and warm_order:
+            existing = table.get(key)
+            if existing is not None:
+                engine.claim_key(key)
+                if link(node, existing):
+                    _backprop(node, reward(existing.time_s))
+                continue
+        if not engine.claim_key(key):
+            continue
+        exp = record(config, node.number)
+        child = _Node(config=config, key=key, parents=[node],
+                      time_s=exp.result.time_s if exp.result.ok else None,
+                      dead=not exp.result.ok, number=exp.number)
+        node.children.append(child)
+        node.owned += 1
+        table[key] = child
+        r = reward(child.time_s)
+        child.visits += 1
+        child.value += r
+        for n in path:
+            n.visits += 1
+            n.value += r
+    log.cache = engine.stats_dict()
+    log.cache["transpositions"] = n_links
+    log.cache["dag_nodes"] = len(table)
+    return log
+
+
+# ---------------------------------------------------------------------------
+# Beam search — pre-PR run_beam
+# ---------------------------------------------------------------------------
+
+
+def legacy_run_beam(workload, space, backend, budget=400, width=4, cache=True,
+                    surrogate=None, surrogate_order=False, store=None):
+    engine = EvaluationEngine(workload, space, backend, cache=cache,
+                              surrogate=surrogate,
+                              surrogate_order=surrogate_order, store=store)
+    log = TuningLog(workload=workload.name, backend=backend.name)
+
+    def record(config, result, parent_num):
+        exp = Experiment(number=len(log.experiments), config=config,
+                         result=result, parent=parent_num)
+        log.experiments.append(exp)
+        return exp
+
+    baseline = Configuration()
+    base = record(baseline, engine.evaluate(baseline), None)
+    engine.seed_seen(baseline)
+    frontier = [base] if base.result.ok else []
+    while frontier and len(log.experiments) < budget:
+        batch: list[Configuration] = []
+        parents: list[int] = []
+        for parent in frontier:
+            kids = engine.order_children(
+                space.children(parent.config, dedup=False)
+            )
+            for k in kids:
+                if engine.claim(k):
+                    batch.append(k)
+                    parents.append(parent.number)
+        room = budget - len(log.experiments)
+        batch, parents = batch[:room], parents[:room]
+        nxt: list[Experiment] = []
+        for config, parent_num, res in zip(
+            batch, parents, engine.evaluate_many(batch)
+        ):
+            exp = record(config, res, parent_num)
+            if exp.result.ok:
+                nxt.append(exp)
+        nxt.sort(key=lambda e: e.result.time_s)
+        frontier = nxt[:width]
+    log.cache = engine.stats_dict()
+    return log
+
+
+# ---------------------------------------------------------------------------
+# Random walks — pre-PR run_random
+# ---------------------------------------------------------------------------
+
+
+def legacy_run_random(workload, space, backend, budget=400, max_depth=4,
+                      seed=0, cache=True, surrogate=None, store=None):
+    rng = random.Random(seed)
+    engine = EvaluationEngine(workload, space, backend, cache=cache,
+                              surrogate=surrogate, store=store)
+    log = TuningLog(workload=workload.name, backend=backend.name)
+
+    def record(config, parent_num):
+        exp = Experiment(number=len(log.experiments), config=config,
+                         result=engine.evaluate(config), parent=parent_num)
+        log.experiments.append(exp)
+        return exp
+
+    base = record(Configuration(), None)
+    logged: dict[tuple, int] = {space.path_key(Configuration()): base.number}
+    stalls = 0
+    while len(log.experiments) < budget and stalls < 1000:
+        before = len(log.experiments)
+        config = Configuration()
+        parent_num = base.number
+        depth = rng.randint(1, max_depth)
+        for _ in range(depth):
+            kids = space.children(config)
+            if not kids:
+                break
+            config = rng.choice(kids)
+            key = space.path_key(config)
+            known = logged.get(key)
+            if known is None:
+                exp = record(config, parent_num)
+                logged[key] = exp.number
+                parent_num = exp.number
+                if len(log.experiments) >= budget:
+                    break
+            else:
+                parent_num = known
+        stalls = stalls + 1 if len(log.experiments) == before else 0
+    log.cache = engine.stats_dict()
+    return log
+
+
+LEGACY_DRIVERS = {
+    "greedy": legacy_run_greedy,
+    "mcts": legacy_run_mcts,
+    "beam": legacy_run_beam,
+    "random": legacy_run_random,
+}

@@ -291,3 +291,123 @@ class TestWallclockBatchingRules:
             assert len(locks) >= 1
         assert got == want
         assert be._pool is None             # context exit released the pool
+
+
+class TestCompaction:
+    KEY_A = (("i", 8, False, False, 1, 1, False),)
+    KEY_B = (("j", 16, False, False, 1, 1, False),)
+
+    def raw_lines(self, store):
+        with open(store.path) as f:
+            return [l for l in f.read().splitlines() if l.strip()]
+
+    def test_newest_record_per_key_survives(self, tmp_path):
+        store = make_store(tmp_path)
+        store.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
+        store.append("w", SCOPE, self.KEY_B, Result("ok", time_s=2.0))
+        # simulate a concurrent first-writer that measured KEY_A differently
+        # (dedup is per-process; another process can duplicate the key)
+        dup = ResultStore(store.path)
+        dup.append("w", SCOPE, self.KEY_A, Result("ok", time_s=9.0))
+        dup.close()
+        assert len(self.raw_lines(store)) == 3
+        stats = store.compact()
+        assert stats == {"kept": 2, "dropped_duplicates": 1,
+                         "dropped_foreign": 0, "dropped_corrupt": 0}
+        lines = self.raw_lines(store)
+        assert len(lines) == 2
+        # newest wins and first-seen key order is preserved
+        loaded = ResultStore(store.path).load("w", SCOPE)
+        assert loaded[self.KEY_A].time_s == 9.0
+        assert loaded[self.KEY_B].time_s == 2.0
+
+    def test_corrupt_and_old_schema_lines_dropped(self, tmp_path):
+        store = make_store(tmp_path)
+        store.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
+        store.close()
+        with open(store.path, "a") as f:
+            f.write("{truncated garbage\n")
+            f.write(json.dumps({"v": SCHEMA_VERSION - 1, "w": "w",
+                                "s": SCOPE, "k": list(self.KEY_A),
+                                "r": {"status": "ok", "time_s": 5.0}}) + "\n")
+        stats = store.compact()
+        assert stats["kept"] == 1
+        assert stats["dropped_corrupt"] == 1
+        assert stats["dropped_foreign"] == 1
+        assert ResultStore(store.path).load("w", SCOPE)[self.KEY_A].time_s \
+            == 1.0
+
+    def test_appends_after_compaction_land_in_new_file(self, tmp_path):
+        store = make_store(tmp_path)
+        store.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
+        store.compact()
+        # the O_APPEND descriptor was reopened: this append must not vanish
+        # into the replaced inode
+        store.append("w", SCOPE, self.KEY_B, Result("ok", time_s=2.0))
+        loaded = ResultStore(store.path).load("w", SCOPE)
+        assert set(loaded) == {self.KEY_A, self.KEY_B}
+
+    def test_foreign_appender_survives_compaction(self, tmp_path):
+        """A store handle with its own open descriptor (modeling another
+        process) must detect the compaction's os.replace and append to the
+        new inode, not the unlinked old one."""
+        path = tmp_path / "shared.jsonl"
+        writer = ResultStore(path)
+        writer.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
+        other = ResultStore(path)       # separate fd, like another process
+        other.compact()
+        writer.append("w", SCOPE, self.KEY_B, Result("ok", time_s=2.0))
+        writer.close()
+        other.close()
+        loaded = ResultStore(path).load("w", SCOPE)
+        assert set(loaded) == {self.KEY_A, self.KEY_B}
+
+    def test_compact_missing_file_is_noop(self, tmp_path):
+        store = make_store(tmp_path, name="never-written.jsonl")
+        assert store.compact()["kept"] == 0
+        assert not os.path.exists(store.path)
+
+    def test_compact_preserves_engine_replay(self, tmp_path):
+        """A warm engine run replays byte-identically from a compacted
+        store."""
+        path = tmp_path / "engine.jsonl"
+        space = SearchSpace(root=GEMM.nest())
+        Autotuner(GEMM, space, CostModelBackend(), max_experiments=60,
+                  store=str(path)).run()
+        ResultStore.drop_shared(path)
+        warm_before = Autotuner(GEMM, SearchSpace(root=GEMM.nest()),
+                                CostModelBackend(), max_experiments=60,
+                                store=str(path)).run()
+        ResultStore.drop_shared(path)
+        store = ResultStore(path)
+        store.compact()
+        store.close()
+        warm_after = Autotuner(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend(), max_experiments=60,
+                               store=str(path)).run()
+        ResultStore.drop_shared(path)
+        assert warm_after.to_dict() == warm_before.to_dict()
+
+    def test_benchmarks_run_compact_store_cli(self, tmp_path):
+        import subprocess
+        import sys
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        path = tmp_path / "cli.jsonl"
+        store = ResultStore(path)
+        store.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
+        store.close()
+        dup = ResultStore(path)
+        dup.append("w", SCOPE, self.KEY_A, Result("ok", time_s=3.0))
+        dup.close()
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(repo, "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--store", str(path),
+             "--compact-store"],
+            cwd=repo, env=env, capture_output=True, text=True, timeout=600,
+        )
+        assert proc.returncode == 0, proc.stderr
+        assert "kept 1" in proc.stdout
+        loaded = ResultStore(path).load("w", SCOPE)
+        assert loaded[self.KEY_A].time_s == 3.0

@@ -1,0 +1,446 @@
+"""Ask/tell session redesign (PR 4): equivalence, registry, spec, CLI.
+
+The acceptance contract: all four legacy ``run_*`` shims are byte-identical
+to the pre-PR monolithic drivers (frozen verbatim in
+``reference_drivers.py``), and the redesign's extension point is real — the
+expected-improvement acquisition lands as a ≤80-line registry plugin.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import pytest
+
+import reference_drivers as ref
+from repro.core import (GEMM, SYR2K, Autotuner, Backend, Configuration,
+                        CostModelBackend, EvaluationEngine,
+                        NoSuccessfulExperiment, Proposal, ResultStore, Result,
+                        STRATEGY_REGISTRY, SearchSpace, Strategy,
+                        TuningSession, TuningSpec, register_strategy,
+                        resolve_strategy)
+from repro.core import acquisition as acquisition_module
+from repro.core.strategies import run_beam, run_greedy, run_mcts, run_random
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def small_space():
+    return SearchSpace(root=GEMM.nest())
+
+
+# ---------------------------------------------------------------------------
+# Byte-identical equivalence: session-backed shims vs frozen pre-PR drivers
+# ---------------------------------------------------------------------------
+
+
+class TestLegacyEquivalence:
+    """For each strategy, the shim (now TuningSession + Strategy underneath)
+    must produce byte-identical ``TuningLog.to_dict()`` output to the frozen
+    pre-PR driver on the deterministic cost-model backend."""
+
+    def ab(self, new, old, budget=120, **kw):
+        a = new(GEMM, small_space(), CostModelBackend(), budget=budget, **kw)
+        b = old(GEMM, small_space(), CostModelBackend(), budget=budget, **kw)
+        assert a.to_dict() == b.to_dict()
+        return a
+
+    def test_greedy_unseeded(self):
+        log = self.ab(run_greedy, ref.legacy_run_greedy)
+        assert len(log.experiments) == 120
+
+    def test_mcts_unseeded(self):
+        self.ab(run_mcts, ref.legacy_run_mcts)
+
+    def test_mcts_seeded(self):
+        self.ab(run_mcts, ref.legacy_run_mcts, seed=3)
+
+    def test_beam_unseeded(self):
+        self.ab(run_beam, ref.legacy_run_beam)
+
+    def test_beam_width_2(self):
+        self.ab(run_beam, ref.legacy_run_beam, width=2)
+
+    def test_random_unseeded(self):
+        self.ab(run_random, ref.legacy_run_random, budget=60)
+
+    def test_random_seeded(self):
+        self.ab(run_random, ref.legacy_run_random, budget=60, seed=7)
+
+    def test_greedy_syr2k(self):
+        a = run_greedy(SYR2K, SearchSpace(root=SYR2K.nest()),
+                       CostModelBackend(), budget=100)
+        b = ref.legacy_run_greedy(SYR2K, SearchSpace(root=SYR2K.nest()),
+                                  CostModelBackend(), budget=100)
+        assert a.to_dict() == b.to_dict()
+
+    def test_surrogate_analytic_all(self):
+        self.ab(run_greedy, ref.legacy_run_greedy, surrogate="analytic")
+        self.ab(run_beam, ref.legacy_run_beam, surrogate="analytic")
+        self.ab(run_mcts, ref.legacy_run_mcts, surrogate="analytic", seed=1)
+
+    def test_warm_store_mcts(self, tmp_path):
+        seed_store = tmp_path / "seed.jsonl"
+        run_greedy(GEMM, small_space(), CostModelBackend(), budget=100,
+                   store=str(seed_store))
+        ResultStore.drop_shared(seed_store)
+        import shutil
+        pa, pb = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+        shutil.copy(seed_store, pa)
+        shutil.copy(seed_store, pb)
+        a = run_mcts(GEMM, small_space(), CostModelBackend(), budget=150,
+                     store=str(pa))
+        b = ref.legacy_run_mcts(GEMM, small_space(), CostModelBackend(),
+                                budget=150, store=str(pb))
+        ResultStore.drop_shared(pa)
+        ResultStore.drop_shared(pb)
+        assert a.cache["preloaded"] == 100
+        assert a.to_dict() == b.to_dict()
+
+    def test_session_path_equals_shim(self):
+        """The explicit TuningSession path and the shim resolve to the same
+        run (shims are thin — there is only one loop)."""
+        log = TuningSession(CostModelBackend()).tune(
+            GEMM, small_space(), strategy="mcts", budget=120, seed=2)
+        shim = run_mcts(GEMM, small_space(), CostModelBackend(),
+                        budget=120, seed=2)
+        assert log.to_dict() == shim.to_dict()
+
+    def test_autotuner_class_unchanged(self):
+        log = Autotuner(GEMM, small_space(), CostModelBackend(),
+                        max_experiments=100).run()
+        b = ref.legacy_run_greedy(GEMM, small_space(), CostModelBackend(),
+                                  budget=100)
+        assert log.to_dict() == b.to_dict()
+
+    def test_autotuner_on_experiment_hook(self):
+        seen = []
+        Autotuner(GEMM, small_space(), CostModelBackend(), max_experiments=20,
+                  on_experiment=seen.append).run()
+        assert [e.number for e in seen] == list(range(20))
+
+    @pytest.mark.parametrize("new,old,kw", [
+        (run_greedy, ref.legacy_run_greedy, {}),
+        (run_mcts, ref.legacy_run_mcts, {"seed": 0}),
+        (run_beam, ref.legacy_run_beam, {}),
+        (run_random, ref.legacy_run_random, {"seed": 0}),
+    ])
+    def test_budget_zero_still_measures_baseline(self, new, old, kw):
+        """Every legacy driver recorded experiment 0 even under budget=0
+        ('executed too', §IV-C) — the session loop must too."""
+        a = new(GEMM, small_space(), CostModelBackend(), budget=0, **kw)
+        b = old(GEMM, small_space(), CostModelBackend(), budget=0, **kw)
+        assert len(a.experiments) == 1
+        assert a.to_dict() == b.to_dict()
+
+    def test_mcts_failed_baseline_cache_matches_legacy(self):
+        """The legacy driver's failed-baseline early return emitted no
+        transpositions/dag_nodes counters; finalize must not add them."""
+        a = run_mcts(GEMM, small_space(), FailingBackend(), budget=5, seed=0)
+        b = ref.legacy_run_mcts(GEMM, small_space(), FailingBackend(),
+                                budget=5, seed=0)
+        assert "transpositions" not in a.cache
+        assert a.to_dict() == b.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# Protocol & registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        resolve_strategy("greedy")      # forces built-in registration
+        assert {"greedy", "mcts", "beam", "random", "ei"} <= set(
+            STRATEGY_REGISTRY)
+
+    def test_unknown_strategy(self):
+        with pytest.raises(ValueError, match="unknown strategy"):
+            TuningSession(CostModelBackend()).tune(
+                GEMM, small_space(), strategy="simulated-annealing")
+
+    def test_kwargs_rejected_for_instances(self):
+        from repro.core import MctsStrategy
+        with pytest.raises(TypeError, match="already-constructed"):
+            resolve_strategy(MctsStrategy(), seed=1)
+
+    def test_custom_plugin_via_decorator(self):
+        @register_strategy("test-baseline-only")
+        class BaselineOnly(Strategy):
+            def __init__(self):
+                self._done = False
+
+            @property
+            def finished(self):
+                return self._done
+
+            def propose(self, n):
+                self._done = True
+                return [Proposal(Configuration(), None)]
+
+            def observe(self, exp):
+                pass
+
+        try:
+            log = TuningSession(CostModelBackend()).tune(
+                GEMM, small_space(), strategy="test-baseline-only",
+                budget=50)
+            assert len(log.experiments) == 1
+            assert log.baseline.result.ok
+        finally:
+            STRATEGY_REGISTRY.pop("test-baseline-only", None)
+
+    def test_strategy_class_resolution(self):
+        from repro.core import RandomWalkStrategy
+        log = TuningSession(CostModelBackend()).tune(
+            GEMM, small_space(), strategy=RandomWalkStrategy,
+            budget=30, seed=5)
+        ref_log = run_random(GEMM, small_space(), CostModelBackend(),
+                             budget=30, seed=5)
+        assert log.to_dict() == ref_log.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# EI acquisition plugin — the extension point is real
+# ---------------------------------------------------------------------------
+
+
+class TestAcquisitionPlugin:
+    def test_plugin_is_at_most_80_lines(self):
+        path = acquisition_module.__file__
+        with open(path) as f:
+            assert len(f.readlines()) <= 80, (
+                "the EI plugin must stay a small registry plugin — if it "
+                "needs more room the extension point has failed")
+
+    def test_ei_runs_and_improves_on_baseline(self):
+        log = TuningSession(CostModelBackend(), surrogate="learned").tune(
+            GEMM, small_space(), strategy="ei", budget=80)
+        assert len(log.experiments) == 80
+        assert log.best().result.time_s < log.baseline.result.time_s
+        # the learned surrogate was actually active (fit online)
+        assert log.cache["surrogate"]["model"] == "ridge"
+
+    def test_lcb_variant(self):
+        log = TuningSession(CostModelBackend(), surrogate="learned").tune(
+            GEMM, small_space(), strategy="ei", budget=40,
+            acquisition="lcb")
+        assert log.best().result.time_s < log.baseline.result.time_s
+
+    def test_invalid_acquisition(self):
+        with pytest.raises(ValueError, match="acquisition"):
+            resolve_strategy("ei", acquisition="ucb")
+
+    def test_expected_improvement_math(self):
+        from repro.core import expected_improvement
+        # zero uncertainty degenerates to plain improvement
+        assert expected_improvement(1.0, 0.0, 2.0) == pytest.approx(1.0)
+        assert expected_improvement(3.0, 0.0, 2.0) == 0.0
+        # symmetric posterior at the incumbent: EI = std/sqrt(2*pi)
+        import math
+        assert expected_improvement(2.0, 1.0, 2.0) == pytest.approx(
+            1.0 / math.sqrt(2 * math.pi))
+        # more uncertainty → more EI (exploration bonus)
+        assert (expected_improvement(2.5, 2.0, 2.0)
+                > expected_improvement(2.5, 0.5, 2.0))
+
+
+# ---------------------------------------------------------------------------
+# TuningSpec: dataclass ⇄ JSON ⇄ CLI
+# ---------------------------------------------------------------------------
+
+
+class TestTuningSpec:
+    def spec(self):
+        return TuningSpec(
+            workload="gemm", strategy="mcts", budget=60,
+            strategy_args={"seed": 4},
+            space_args={"tile_sizes": [16, 64], "max_transformations": 2},
+        )
+
+    def test_round_trip(self):
+        spec = self.spec()
+        again = TuningSpec.from_json(spec.to_json())
+        assert again == spec
+        assert again.to_dict() == spec.to_dict()
+
+    def test_unknown_field_rejected(self):
+        with pytest.raises(ValueError, match="unknown TuningSpec field"):
+            TuningSpec.from_dict({"workload": "gemm", "stratgy": "mcts"})
+
+    def test_unknown_workload_backend_rejected(self):
+        with pytest.raises(ValueError, match="unknown workload"):
+            TuningSpec(workload="fft").build_workload()
+        with pytest.raises(ValueError, match="unknown backend"):
+            TuningSpec(backend="gpu").build_backend()
+
+    def test_matmul_workload_with_scale(self):
+        spec = TuningSpec(workload="matmul",
+                          workload_args={"m": 64, "n": 64, "k": 64,
+                                         "scale": 0.5})
+        w = spec.build_workload()
+        assert w.extents == {"i": 32, "j": 32, "k": 32}
+
+    def test_run_matches_equivalent_shim(self):
+        log = self.spec().run()
+        space = SearchSpace(root=GEMM.nest(), tile_sizes=(16, 64),
+                            max_transformations=2)
+        shim = run_mcts(GEMM, space, CostModelBackend(), budget=60, seed=4)
+        assert log.to_dict() == shim.to_dict()
+
+    def test_cli_entry_point(self, tmp_path):
+        spec_path = tmp_path / "spec.json"
+        out_path = tmp_path / "log.json"
+        self.spec().save(spec_path)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        env.pop("CC_RESULT_STORE", None)
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.core.session", str(spec_path),
+             "--out", str(out_path)],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=600,
+        )
+        assert proc.returncode == 0, proc.stderr
+        assert "best time_s=" in proc.stdout
+        payload = json.loads(out_path.read_text())
+        assert payload == self.spec().run().to_dict()
+
+    def test_cli_bad_spec_exits_2(self, tmp_path):
+        bad = tmp_path / "bad.json"
+        bad.write_text('{"workload": "gemm", "no_such_field": 1}')
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.core.session", str(bad)],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=600,
+        )
+        assert proc.returncode == 2
+        assert "unknown TuningSpec field" in proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# Deprecated surrogate_order= alias now warns
+# ---------------------------------------------------------------------------
+
+
+class TestSurrogateOrderDeprecation:
+    def test_engine_warns(self):
+        with pytest.warns(DeprecationWarning, match="surrogate_order"):
+            eng = EvaluationEngine(GEMM, small_space(), CostModelBackend(),
+                                   surrogate_order=True)
+        assert eng.surrogate == "analytic"
+
+    def test_run_greedy_warns(self):
+        with pytest.warns(DeprecationWarning, match="surrogate_order"):
+            run_greedy(GEMM, small_space(), CostModelBackend(), budget=10,
+                       surrogate_order=True)
+
+    def test_run_beam_warns(self):
+        with pytest.warns(DeprecationWarning, match="surrogate_order"):
+            run_beam(GEMM, small_space(), CostModelBackend(), budget=10,
+                     surrogate_order=True)
+
+    def test_alias_still_means_analytic(self):
+        with pytest.warns(DeprecationWarning):
+            a = run_greedy(GEMM, small_space(), CostModelBackend(),
+                           budget=60, surrogate_order=True)
+        b = run_greedy(GEMM, small_space(), CostModelBackend(),
+                       budget=60, surrogate="analytic")
+        assert a.to_dict() == b.to_dict()
+
+    def test_default_does_not_warn(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            run_greedy(GEMM, small_space(), CostModelBackend(), budget=10)
+
+    def test_examples_are_clean(self):
+        """The shipped examples must not use the deprecated alias."""
+        for name in ("autotune_gemm.py", "quickstart.py"):
+            src = open(os.path.join(REPO, "examples", name)).read()
+            assert "surrogate_order=" not in src, f"{name} uses the alias"
+
+
+# ---------------------------------------------------------------------------
+# TuningLog.best() on all-red logs
+# ---------------------------------------------------------------------------
+
+
+class FailingBackend(Backend):
+    """Every measurement fails — models a broken toolchain/machine."""
+
+    name = "failing"
+
+    def _measure(self, workload, nest):
+        return Result("exec_error", note="device lost")
+
+
+class TestNoSuccessfulExperiment:
+    @pytest.mark.parametrize("runner,kw", [
+        (run_greedy, {}),
+        (run_mcts, {"seed": 0}),
+        (run_beam, {}),
+        (run_random, {"seed": 0}),
+    ])
+    def test_budget_one_failing_backend_raises_typed(self, runner, kw):
+        log = runner(GEMM, small_space(), FailingBackend(), budget=1, **kw)
+        assert len(log.experiments) == 1
+        with pytest.raises(NoSuccessfulExperiment) as exc:
+            log.best()
+        err = exc.value
+        assert isinstance(err, ValueError)          # backcompat
+        assert err.notes == {("exec_error", "device lost"): 1}
+        assert "gemm" in str(err) and "device lost" in str(err)
+
+    def test_notes_aggregate_by_status_and_note(self):
+        log = run_greedy(GEMM, small_space(), FailingBackend(), budget=5)
+        # baseline fails → greedy never expands: only 1 experiment
+        assert len(log.experiments) == 1
+        with pytest.raises(NoSuccessfulExperiment):
+            log.best()
+
+    def test_empty_log_raises_typed(self):
+        from repro.core import TuningLog
+        with pytest.raises(NoSuccessfulExperiment, match="log is empty"):
+            TuningLog(workload="w", backend="b").best()
+
+    def test_ok_log_unaffected(self):
+        log = run_greedy(GEMM, small_space(), CostModelBackend(), budget=20)
+        assert log.best().result.ok
+
+
+# ---------------------------------------------------------------------------
+# Engine select/sweep split (the ask/tell seam inside the engine)
+# ---------------------------------------------------------------------------
+
+
+class TestSelectSweepSplit:
+    def test_select_then_evaluate_equals_sweep(self):
+        space_a, space_b = small_space(), small_space()
+        be = CostModelBackend()
+        ea = EvaluationEngine(GEMM, space_a, be)
+        eb = EvaluationEngine(GEMM, space_b, be)
+        kids_a = space_a.children(Configuration(), dedup=False)
+        kids_b = space_b.children(Configuration(), dedup=False)
+        swept = ea.sweep(kids_a, room=50)
+        sel = eb.select(kids_b, room=50)
+        results = eb.evaluate_many(sel)
+        assert [c.path_key() for c, _ in swept] == [c.path_key() for c in sel]
+        assert [r for _, r in swept] == results
+        assert ea.stats_dict() == eb.stats_dict()
+
+    def test_truncated_children_stay_claimable(self):
+        space = small_space()
+        eng = EvaluationEngine(GEMM, space, CostModelBackend())
+        kids = space.children(Configuration(), dedup=False)
+        first = eng.select(kids, room=5)
+        assert len(first) == 5
+        again = eng.select(kids, room=5)
+        assert len(again) == 5
+        assert {c.path_key() for c in first}.isdisjoint(
+            {c.path_key() for c in again})
