@@ -1,0 +1,140 @@
+"""Acquisition shootout gate: EI vs LCB vs greedy on one warm store.
+
+PR 4 exposed the ask/tell registry and the first acquisition strategy
+(``strategy="ei"`` over the Bayesian-ridge posterior,
+:mod:`repro.core.acquisition`) but never *benchmarked* the acquisitions
+against each other — the "Acquisition benchmarking" ROADMAP item.  This
+suite closes it under CI-cheap conditions: a **noisy cost-model** backend
+(the noise makes the learned posterior genuinely informative — on the
+noiseless model the analytic surrogate is the data generator and there is
+nothing to learn) populating one warm store that all contenders share, each
+contender given the same fresh budget.
+
+The store is deliberately an **SQLite** target (``sqlite://``), so the
+indexed backend of the pluggable-store PR is exercised by the ``--quick``
+CI gate on every run — a warm start through the SQLite path must behave
+exactly like the JSONL path it replaced.
+
+Contenders (same workload, same space, same budget, same warm store):
+
+* ``greedy`` — the paper's exploitation-only queue, learned-surrogate
+  child ordering;
+* ``ei``    — expected improvement over the ridge posterior;
+* ``lcb``   — the fixed-κ lower-confidence-bound acquisition.
+
+Gate (``results/acquisition.json``, appended to ``BENCH_trajectory.json``
+via ``run.py --json``): every contender completes with an ``ok`` best and a
+non-zero warm preload, and the better acquisition (min of EI/LCB) is no
+worse than greedy's best within 5% — the posterior's exploration bonus must
+not *lose* to pure exploitation on a warm store; where it wins, the per-
+contender rows record by how much.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+BUDGET_WARM = 150
+BUDGET = 60
+NOISE = 0.05
+SEED = 11
+SPACE_ARGS = dict(tile_sizes=(16, 64, 256), max_transformations=3)
+
+CONTENDERS = (
+    ("greedy", "greedy", {}),
+    ("ei", "ei", {"acquisition": "ei"}),
+    ("lcb", "ei", {"acquisition": "lcb"}),
+)
+
+
+def main(emit=print):
+    from .common import first_reaching, save_result
+    from repro.core import (GEMM, CostModelBackend, ResultStore, SearchSpace,
+                            TuningSession)
+
+    w = GEMM
+
+    def space():
+        return SearchSpace(root=w.nest(), **SPACE_ARGS)
+
+    def backend():
+        return CostModelBackend(noise=NOISE, seed=SEED)
+
+    tmp = tempfile.mkdtemp(prefix="acq_shootout_")
+    warm_path = os.path.join(tmp, "warm.sqlite")
+    store_uri = "sqlite://" + warm_path
+
+    rows: list[str] = []
+    summary: dict = {"contenders": {}}
+    emit(f"\n=== acquisition shootout: EI vs LCB vs greedy "
+         f"(noisy cost model σ={NOISE}, warm budget {BUDGET_WARM}, "
+         f"shootout budget {BUDGET}, sqlite store) ===")
+    try:
+        warm_log = TuningSession(backend(), store=store_uri).tune(
+            w, space(), strategy="greedy", budget=BUDGET_WARM)
+        warm_best = warm_log.best().result.time_s
+        ResultStore.drop_shared(store_uri)      # flush before copying
+        emit(f"  warm store: {len(warm_log.experiments)} experiments, "
+             f"best {warm_best:.4f}s")
+
+        for name, strategy, kwargs in CONTENDERS:
+            # private copy per contender: each must warm-start from the
+            # *same* store, not from the previous contenders' appended
+            # measurements (which would confound the comparison)
+            import shutil
+
+            copy_uri = "sqlite://" + os.path.join(tmp, f"{name}.sqlite")
+            shutil.copyfile(warm_path, copy_uri.split("://", 1)[1])
+            session = TuningSession(backend(), store=copy_uri,
+                                    surrogate="learned")
+            log = session.tune(w, space(), strategy=strategy, budget=BUDGET,
+                               **kwargs)
+            ResultStore.drop_shared(copy_uri)
+            best = log.best()
+            reached = first_reaching(log, warm_best)
+            summary["contenders"][name] = {
+                "best_s": best.result.time_s,
+                "best_at": best.number,
+                "reached_warm_best_at": reached,
+                "experiments": len(log.experiments),
+                "preloaded": log.cache["preloaded"],
+                "backend_misses": log.cache["misses"],
+            }
+            emit(f"  {name:7s} best={best.result.time_s:.4f}s @exp "
+                 f"{best.number:3d}  reaches warm best @ {reached}  "
+                 f"preloaded={log.cache['preloaded']}  "
+                 f"misses={log.cache['misses']}")
+            rows.append(
+                f"acquisition_{name},,best={best.result.time_s:.5g};"
+                f"warm_best@{reached};misses={log.cache['misses']}")
+    finally:
+        import shutil
+
+        ResultStore.drop_shared(store_uri)
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    c = summary["contenders"]
+    all_ok = all(v["best_s"] is not None for v in c.values())
+    all_warm = all(v["preloaded"] > 0 for v in c.values())
+    acq_best = min(c["ei"]["best_s"], c["lcb"]["best_s"])
+    not_worse = acq_best <= c["greedy"]["best_s"] * 1.05
+    summary["warm_store_best_s"] = warm_best
+    summary["acceptance"] = {
+        "all_completed": all_ok,
+        "all_preloaded": all_warm,
+        "acquisition_best_s": acq_best,
+        "greedy_best_s": c["greedy"]["best_s"],
+        "acquisition_not_worse_5pct": bool(not_worse),
+        "pass": bool(all_ok and all_warm and not_worse),
+    }
+    emit(f"  acceptance: "
+         f"{'PASS' if summary['acceptance']['pass'] else 'FAIL'} "
+         f"(acq best={acq_best:.4f}s vs greedy {c['greedy']['best_s']:.4f}s, "
+         f"warm preload all={all_warm})")
+    save_result("acquisition", summary)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Pluggable-store gates: backend migration fidelity + cross-workload transfer.
+
+Two acceptance gates for the pluggable measurement-store layer
+(``results/store.json``, appended to the cumulative ``BENCH_trajectory.json``
+perf trajectory by ``run.py --json``):
+
+1. **Migration fidelity** (cost model, cheap) — a greedy run populates a
+   JSONL store; ``migrate_store`` round-trips it JSONL → SQLite → JSONL.
+   Gate: the round-tripped record set is identical, and a warm-start run
+   against the SQLite store produces a ``TuningLog`` **byte-identical** to
+   the warm run against the original JSONL store — the backend must be
+   invisible to everything above the protocol.
+
+2. **Cross-workload surrogate transfer** (real wallclock) — greedy runs on
+   gemm and covariance populate per-kernel stores which are **merged** into
+   one federated SQLite store (:meth:`ResultStore.merge`, conflict counters
+   recorded).  The target kernel (syr2k) has *zero* records in that store.
+   Two learned-surrogate greedy runs on the target, both against (a private
+   copy of) the federated store:
+
+   * ``surrogate_scope="exact"`` — finds nothing to preload, starts
+     analytic, refits online: the scope-exact cold fit;
+   * ``surrogate_scope="cross_workload"`` — pre-fits on the other kernels'
+     measured history before the first measurement (workload extents are
+     features, so the regression transfers across kernels,
+     cf. arXiv:2102.13514).
+
+   Gate: the transfer run reaches the cold run's best *discovered* time in
+   **strictly fewer** experiments.  Setup mirrors ``bench_surrogate``: the
+   tuned workload is pre-scaled (``w.scaled(0.1)``,
+   ``WallclockBackend(scale=1)``) so ordering and measurement agree on
+   applicable tile sizes, and ``parallelize`` is disabled (a near-no-op on
+   this container that both orderings rank trivially).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+BUDGET = 40
+SCALE = 0.1
+REPS = 2
+SOURCE_KERNELS = ("gemm", "covariance")
+TARGET_KERNEL = "syr2k"
+MIGRATE_BUDGET = 80
+
+
+def _tmpdir() -> str:
+    return tempfile.mkdtemp(prefix="bench_store_")
+
+
+# ---------------------------------------------------------------------------
+# Gate 1: migration round-trip + backend-invisible warm start (cost model)
+# ---------------------------------------------------------------------------
+
+
+def _migration_gate(emit, tmp: str) -> dict:
+    from repro.core import (GEMM, CostModelBackend, ResultStore, SearchSpace,
+                            TuningSession, migrate_store)
+
+    def space():
+        return SearchSpace(root=GEMM.nest(), tile_sizes=(16, 64, 256),
+                           max_transformations=3)
+
+    jsonl = os.path.join(tmp, "store.jsonl")
+    sqlite = "sqlite://" + os.path.join(tmp, "store.sqlite")
+    back = os.path.join(tmp, "roundtrip.jsonl")
+
+    be = CostModelBackend()
+    TuningSession(be, store=jsonl).tune(GEMM, space(), strategy="greedy",
+                                        budget=MIGRATE_BUDGET)
+    migrate_store(jsonl, sqlite)
+    migrate_store(sqlite, back)
+    recs_src = list(ResultStore.open(jsonl).backend.iter_records())
+    recs_rt = list(ResultStore.open(back).backend.iter_records())
+    round_trip = recs_src == recs_rt and len(recs_src) > 0
+
+    warm_jsonl = TuningSession(be, store=jsonl).tune(
+        GEMM, space(), strategy="greedy", budget=MIGRATE_BUDGET)
+    warm_sqlite = TuningSession(be, store=sqlite).tune(
+        GEMM, space(), strategy="greedy", budget=MIGRATE_BUDGET)
+    byte_identical = warm_jsonl.to_json() == warm_sqlite.to_json()
+    for target in (jsonl, sqlite, back):
+        ResultStore.drop_shared(target)
+
+    emit(f"  migration: {len(recs_src)} records jsonl->sqlite->jsonl "
+         f"round_trip={'PASS' if round_trip else 'FAIL'}  "
+         f"warm log sqlite==jsonl: "
+         f"{'PASS' if byte_identical else 'FAIL'} "
+         f"(preloaded={warm_sqlite.cache['preloaded']})")
+    return {
+        "records": len(recs_src),
+        "round_trip_identical": bool(round_trip),
+        "warm_log_byte_identical": bool(byte_identical),
+        "preloaded": warm_sqlite.cache["preloaded"],
+        "pass": bool(round_trip and byte_identical),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Gate 2: cross-workload surrogate transfer (wallclock, federated store)
+# ---------------------------------------------------------------------------
+
+
+def _transfer_gate(emit, tmp: str) -> dict:
+    from repro.core import (PAPER_WORKLOADS, ResultStore, SearchSpace,
+                            TuningSession, WallclockBackend)
+
+    def space(w):
+        return SearchSpace(root=w.nest(), enable_parallelize=False)
+
+    def backend():
+        return WallclockBackend(scale=1.0, reps=REPS)
+
+    scaled = {k: PAPER_WORKLOADS[k].scaled(SCALE)
+              for k in SOURCE_KERNELS + (TARGET_KERNEL,)}
+
+    # per-kernel source stores, then federation-merge into one sqlite store
+    sources = []
+    for k in SOURCE_KERNELS:
+        path = os.path.join(tmp, f"src_{k}.jsonl")
+        TuningSession(backend(), store=path, surrogate="analytic").tune(
+            scaled[k], space(scaled[k]), strategy="greedy", budget=BUDGET)
+        ResultStore.drop_shared(path)
+        sources.append(path)
+    fed_path = os.path.join(tmp, "federated.sqlite")
+    fed = ResultStore.open(fed_path)
+    merge_stats = fed.merge(*sources)
+    fed.close()
+    emit(f"  federated store: kept {merge_stats['kept']} from "
+         f"{merge_stats['sources']} source(s), "
+         f"{merge_stats['conflicts']} conflict(s)")
+
+    # private store copy per run: the cold run must not feed the transfer run
+    w = scaled[TARGET_KERNEL]
+    results = {}
+    for name, scope_policy in (("exact", "exact"),
+                               ("transfer", "cross_workload")):
+        copy = os.path.join(tmp, f"fed_{name}.sqlite")
+        shutil.copyfile(fed_path, copy)
+        session = TuningSession(
+            backend(), store=copy, surrogate="learned",
+            surrogate_scope=scope_policy,
+            surrogate_peers=[scaled[k] for k in SOURCE_KERNELS],
+        )
+        log = session.tune(w, space(w), strategy="greedy", budget=BUDGET)
+        ResultStore.drop_shared(copy)
+        results[name] = log
+
+    from .common import first_reaching
+
+    cold, transfer = results["exact"], results["transfer"]
+    t_best = min(e.result.time_s for e in cold.experiments
+                 if e.number > 0 and e.result.ok)
+    i_cold = first_reaching(cold, t_best, skip_baseline=True)
+    i_transfer = first_reaching(transfer, t_best, skip_baseline=True)
+    fewer = i_transfer is not None and i_cold is not None \
+        and i_transfer < i_cold
+    sur = transfer.cache.get("surrogate") or {}
+    emit(f"  {TARGET_KERNEL:8s} cold(exact) best child={t_best:.5f}s "
+         f"@exp {i_cold}  cross_workload reaches it @exp {i_transfer}  "
+         f"pooled n_samples={sur.get('n_samples')} "
+         f"n_workloads={sur.get('n_workloads')}  "
+         f"({'PASS' if fewer else 'miss'})")
+    return {
+        "target": TARGET_KERNEL,
+        "merge": merge_stats,
+        "cold_best_s": t_best,
+        "cold_reached_at": i_cold,
+        "transfer_reached_at": i_transfer,
+        "transfer_best_s": transfer.best().result.time_s,
+        "transfer_surrogate": sur,
+        "preloaded_exact_in_transfer_run": transfer.cache["preloaded"],
+        "fewer_experiments": bool(fewer),
+        "pass": bool(fewer),
+    }
+
+
+def main(emit=print):
+    from .common import save_result
+
+    rows: list[str] = []
+    tmp = _tmpdir()
+    emit(f"\n=== pluggable store: migration fidelity + cross-workload "
+         f"transfer (budget {BUDGET}, scale {SCALE}) ===")
+    try:
+        mig = _migration_gate(emit, tmp)
+        transfer = _transfer_gate(emit, tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    summary = {
+        "migration": mig,
+        "transfer": transfer,
+        "acceptance": {
+            "migration_pass": mig["pass"],
+            "transfer_pass": transfer["pass"],
+            "pass": bool(mig["pass"] and transfer["pass"]),
+        },
+    }
+    emit(f"  acceptance: "
+         f"{'PASS' if summary['acceptance']['pass'] else 'FAIL'} "
+         f"(migration={mig['pass']}, cross-workload={transfer['pass']})")
+    save_result("store", summary)
+    rows.append(f"store_migrate,,records={mig['records']};"
+                f"round_trip={mig['round_trip_identical']};"
+                f"warm_byte_identical={mig['warm_log_byte_identical']}")
+    rows.append(f"store_transfer_{TARGET_KERNEL},,"
+                f"cold@{transfer['cold_reached_at']};"
+                f"transfer@{transfer['transfer_reached_at']};"
+                f"pooled={transfer['transfer_surrogate'].get('n_samples')}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -69,13 +69,6 @@ def _drop_store(path: str) -> None:
         pass
 
 
-def _first_reaching(log, target: float) -> int | None:
-    for e in log.experiments:
-        if e.number > 0 and e.result.ok and e.result.time_s <= target:
-            return e.number
-    return None
-
-
 def _rank_correlation_gate(w, store_path: str, emit) -> dict:
     """Gate 1: learned Spearman vs analytic Spearman on held-out records."""
     from repro.core import (
@@ -113,7 +106,7 @@ def _rank_correlation_gate(w, store_path: str, emit) -> dict:
 
 
 def main(emit=print):
-    from .common import save_result
+    from .common import first_reaching, save_result
     from repro.core import PAPER_WORKLOADS, SearchSpace
     from repro.core.measure import WallclockBackend
     from repro.core.strategies import run_greedy
@@ -138,13 +131,13 @@ def main(emit=print):
                               surrogate="analytic", store=store)
             t_best = min(e.result.time_s for e in cold.experiments
                          if e.number > 0 and e.result.ok)
-            i_cold = _first_reaching(cold, t_best)
+            i_cold = first_reaching(cold, t_best, skip_baseline=True)
 
             corr = _rank_correlation_gate(w, store, emit)
 
             warm = run_greedy(w, space(), backend, budget=BUDGET,
                               surrogate="learned", store=store)
-            i_learned = _first_reaching(warm, t_best)
+            i_learned = first_reaching(warm, t_best, skip_baseline=True)
         finally:
             _drop_store(store)
 

@@ -144,16 +144,11 @@ def _wallclock_gate(emit) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _first_reaching(log, target: float) -> int | None:
-    for e in log.experiments:
-        if e.result.ok and e.result.time_s <= target:
-            return e.number
-    return None
-
-
 def _mcts_gate(emit) -> dict:
     from repro.core import PAPER_WORKLOADS, CostModelBackend, SearchSpace
     from repro.core.strategies import run_mcts
+
+    from .common import first_reaching
 
     be = CostModelBackend()
     out: dict = {}
@@ -173,8 +168,8 @@ def _mcts_gate(emit) -> dict:
                        budget=MCTS_BUDGET, seed=MCTS_SEED,
                        transpositions=False, store=False)
         t_cold = cold.best().result.time_s
-        i_cold = _first_reaching(cold, t_cold)
-        i_warm = _first_reaching(warm, t_cold)
+        i_cold = first_reaching(cold, t_cold)
+        i_warm = first_reaching(warm, t_cold)
         halved = i_warm is not None and i_cold and i_warm <= i_cold / 2
         emit(f"  {wname:11s} cold_best={t_cold:8.4f}s @exp {i_cold:4d}  "
              f"warm reaches it @exp {i_warm}  "

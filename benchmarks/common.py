@@ -26,6 +26,22 @@ def save_result(name: str, payload: dict) -> pathlib.Path:
     return path
 
 
+def first_reaching(log, target: float, *, skip_baseline: bool = False
+                   ) -> int | None:
+    """Experiment number of the first ``ok`` result at or under ``target``
+    seconds, or ``None`` — the experiments-to-best metric every warm-start/
+    surrogate/acquisition gate reports.  ``skip_baseline`` excludes
+    experiment 0 (gates comparing *transformed* children only: both runs
+    share the identical untransformed baseline)."""
+    for e in log.experiments:
+        if skip_baseline and e.number == 0:
+            continue
+        if e.result.ok and e.result.time_s is not None \
+                and e.result.time_s <= target:
+            return e.number
+    return None
+
+
 def trace_csv(log) -> str:
     """experiment,time_s,status,best_so_far — the data behind Figs 6–11."""
     lines = ["experiment,time_s,status,best_so_far"]

@@ -7,6 +7,8 @@
   bench_warm_start        persistent-store warm starts + MCTS transposition DAG
   bench_surrogate         learned surrogate vs analytic ordering (wallclock)
   bench_session           TuningSpec → CLI end-to-end vs legacy driver (PR 4)
+  bench_acquisition       EI vs LCB vs greedy shootout on one warm store (PR 5)
+  bench_store             store migration + cross-workload surrogate transfer
   bench_kernels           Pallas kernel micro-benchmarks
   bench_roofline          §Roofline table from the 80-cell dry-run records
 
@@ -17,15 +19,24 @@ Prints a final ``name,us_per_call,derived`` CSV.  Run with
 * ``--json BENCH_eval.json`` — write the rows as machine-readable JSON *and*
   append a gate row to the cumulative ``results/BENCH_trajectory.json`` (the
   perf trajectory consumed by later PRs — append, don't re-measure by hand).
-* ``--store PATH`` — set ``CC_RESULT_STORE`` for the run so every tuning
-  engine warm-starts from (and feeds) the persistent result store at PATH.
-* ``--compact-store`` — maintenance mode: compact the ``--store`` JSONL
-  (newest record per key, drop corrupt/old-schema lines) and exit without
+* ``--store TARGET`` — set ``CC_RESULT_STORE`` for the run so every tuning
+  engine warm-starts from (and feeds) the persistent result store at TARGET —
+  a path or a ``jsonl://`` / ``sqlite://`` URI; ``--store-backend sqlite``
+  forces the indexed backend for a plain path.
+* ``--compact-store`` — maintenance mode: compact the ``--store`` store
+  (newest record per key, drop corrupt/old-schema entries) and exit without
   running any suite.
+* ``--migrate-store DST`` — maintenance mode: copy every record of the
+  ``--store`` store into DST (path or URI — the JSONL ⇄ SQLite migration)
+  and exit.
+* ``--merge-stores SRC [SRC ...]`` — federation mode: merge the SRC stores
+  into the ``--store`` store (newest record per key, conflict counters
+  printed) and exit.
 * ``--quick`` — smoke mode: only the cheap cost-model gate suites
-  (``eval_cache`` + the cost-model half of ``warm_start``), and exit non-zero
-  if any acceptance gate regressed.  This is the CI regression check; it is
-  also runnable standalone: ``python -m benchmarks.run --quick --json out.json``.
+  (``eval_cache`` + the cost-model half of ``warm_start`` + ``session`` +
+  ``acquisition``), and exit non-zero if any acceptance gate regressed.  This
+  is the CI regression check; it is also runnable standalone:
+  ``python -m benchmarks.run --quick --json out.json``.
 """
 
 from __future__ import annotations
@@ -62,7 +73,8 @@ def _collect_gates(ran: set[str]) -> dict:
 
     results = os.fspath(results_dir())
     gates: dict = {}
-    for name in ("eval_cache", "warm_start", "surrogate", "session"):
+    for name in ("eval_cache", "warm_start", "surrogate", "session",
+                 "acquisition", "store"):
         if name not in ran:
             continue
         try:
@@ -77,32 +89,50 @@ def _collect_gates(ran: set[str]) -> dict:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--only", type=str, default=None,
+                    help="run one suite, or a comma-separated list of suites")
     ap.add_argument(
         "--json", type=str, default=None, metavar="BENCH_eval.json",
         help="write results as JSON: {suites: {name: {seconds, failed}}, "
              "rows: [{name, us_per_call, derived}]} and append the gate "
              "summary to results/BENCH_trajectory.json")
     ap.add_argument(
-        "--store", type=str, default=None, metavar="PATH",
+        "--store", type=str, default=None, metavar="TARGET",
         help="persistent result store: sets CC_RESULT_STORE so all tuning "
-             "engines in this run start warm from PATH and append to it")
+             "engines in this run start warm from TARGET (a path or a "
+             "jsonl:// / sqlite:// URI) and append to it")
+    ap.add_argument(
+        "--store-backend", choices=("auto", "jsonl", "sqlite"),
+        default="auto",
+        help="force the --store backend for a plain path (auto resolves by "
+             "URI scheme or path suffix; .sqlite/.sqlite3/.db → sqlite)")
     ap.add_argument(
         "--quick", action="store_true",
         help="cheap cost-model gate suites only; exit 1 on gate regression")
     ap.add_argument(
         "--compact-store", action="store_true",
-        help="compact the --store JSONL (newest record per key) and exit "
+        help="compact the --store store (newest record per key) and exit "
              "without running any suite")
+    ap.add_argument(
+        "--migrate-store", type=str, default=None, metavar="DST",
+        help="copy every record of the --store store into DST (path or URI "
+             "— the JSONL <-> SQLite migration) and exit")
+    ap.add_argument(
+        "--merge-stores", type=str, nargs="+", default=None, metavar="SRC",
+        help="merge the SRC stores into the --store store (federation: "
+             "newest record per key, conflict counters printed) and exit")
     args = ap.parse_args(argv)
 
     if args.json:
         d = os.path.dirname(args.json) or "."
         if not os.path.isdir(d):
             ap.error(f"--json: directory {d!r} does not exist")
+    if args.store and args.store_backend != "auto" \
+            and "://" not in args.store:
+        args.store = f"{args.store_backend}://{args.store}"
     if args.compact_store:
         if not args.store:
-            ap.error("--compact-store requires --store PATH")
+            ap.error("--compact-store requires --store TARGET")
         from repro.core.resultstore import ResultStore
 
         store = ResultStore.shared(args.store)
@@ -113,13 +143,36 @@ def main(argv=None) -> None:
               f"{stats['dropped_foreign']} old-schema / "
               f"{stats['dropped_corrupt']} corrupt record(s)")
         return
+    if args.migrate_store:
+        if not args.store:
+            ap.error("--migrate-store requires --store TARGET")
+        from repro.core.resultstore import migrate_store
+
+        stats = migrate_store(args.store, args.migrate_store)
+        print(f"migrated {stats['migrated']} record(s): "
+              f"{stats['source']} -> {stats['dest']}")
+        return
+    if args.merge_stores:
+        if not args.store:
+            ap.error("--merge-stores requires --store TARGET")
+        from repro.core.resultstore import ResultStore
+
+        store = ResultStore.shared(args.store)
+        stats = store.merge(*args.merge_stores)
+        ResultStore.drop_shared(args.store)
+        print(f"merged {stats['sources']} store(s) into {args.store}: "
+              f"kept {stats['kept']}, added {stats['added']}, "
+              f"{stats['conflicts']} conflict(s) "
+              f"({stats['conflicts_by_scope'] or 'none'}), "
+              f"{stats['duplicates']} duplicate(s)")
+        return
     if args.store:
         os.environ["CC_RESULT_STORE"] = args.store
 
-    from . import (bench_autotune, bench_beyond_transforms, bench_eval_cache,
-                   bench_kernels, bench_mcts_vs_greedy, bench_pragma_stacking,
-                   bench_roofline, bench_session, bench_surrogate,
-                   bench_warm_start)
+    from . import (bench_acquisition, bench_autotune, bench_beyond_transforms,
+                   bench_eval_cache, bench_kernels, bench_mcts_vs_greedy,
+                   bench_pragma_stacking, bench_roofline, bench_session,
+                   bench_store, bench_surrogate, bench_warm_start)
 
     suites = {
         "pragma_stacking": bench_pragma_stacking.main,
@@ -129,6 +182,8 @@ def main(argv=None) -> None:
         "warm_start": bench_warm_start.main,
         "surrogate": bench_surrogate.main,
         "session": bench_session.main,
+        "acquisition": bench_acquisition.main,
+        "store": bench_store.main,
         "beyond_transforms": bench_beyond_transforms.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
@@ -138,12 +193,15 @@ def main(argv=None) -> None:
             "eval_cache": bench_eval_cache.main,
             "warm_start": lambda: bench_warm_start.main(quick=True),
             "session": bench_session.main,
+            "acquisition": bench_acquisition.main,
         }
     if args.only:
-        if args.only not in suites:
-            ap.error(f"--only: unknown suite {args.only!r} "
+        picked = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in picked if s not in suites]
+        if unknown or not picked:
+            ap.error(f"--only: unknown suite(s) {unknown or [args.only]} "
                      f"(choose from {', '.join(suites)})")
-        suites = {args.only: suites[args.only]}
+        suites = {s: suites[s] for s in picked}
 
     all_rows: list[str] = []
     suite_meta: dict[str, dict] = {}

@@ -7,7 +7,18 @@ prints the pragma form + the block config you would pass to
 ``repro.kernels.ops.matmul`` on a TPU.
 
     PYTHONPATH=src python examples/autotune_gemm.py
+    PYTHONPATH=src python examples/autotune_gemm.py --store sqlite:///tmp/tune.db
+
+``--store`` attaches the persistent measurement store in its URI form —
+``jsonl://path`` (the append-only log) or ``sqlite://path`` (indexed, for
+long-lived stores); a bare path resolves by suffix.  Re-running with the
+same store replays every previously measured structure with zero wallclock
+spend.  The old spelling — constructing ``ResultStore(path)`` directly and
+assuming JSONL — still works but emits a ``DeprecationWarning``; pass the
+URI (or path) straight to ``TuningSession(store=...)`` instead.
 """
+
+import argparse
 
 import numpy as np
 
@@ -16,6 +27,12 @@ from repro.core import (GEMM, Configuration, PallasBackend, SearchSpace,
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--store", default=None, metavar="URI",
+        help="persistent result store (jsonl://... / sqlite://... / path); "
+             "re-runs warm-start from it instead of re-measuring")
+    args = ap.parse_args()
     # tile/interchange only: wallclock on one CPU core can't measure
     # thread-parallelization (the cost model handles that; see quickstart)
     space = SearchSpace(
@@ -30,8 +47,13 @@ def main():
     # surrogate="analytic": under a tight wallclock budget, spend the
     # compile+run experiments on the cost model's top-ranked children first
     # (the old boolean alias for this is deprecated)
-    session = TuningSession(be, surrogate="analytic")
+    # store=None (no flag) still defers to the CC_RESULT_STORE env default;
+    # an explicit --store always wins over it
+    session = TuningSession(be, surrogate="analytic", store=args.store)
     log = session.tune(GEMM, space, strategy="greedy", budget=60)
+    if args.store and log.cache.get("preloaded"):
+        print(f"(warm start: {log.cache['preloaded']} structures replayed "
+              f"from {args.store})")
     best = log.best()
     print(f"\nbaseline (XLA default einsum): "
           f"{log.baseline.result.time_s*1e3:.1f} ms")

@@ -46,6 +46,27 @@ def main():
     print(f"best {mb.result.time_s:.3f}s at depth {len(mb.config)}:")
     print(mb.pragmas)
 
+    # measurements persist across runs in a pluggable store — pass the URI
+    # form (jsonl://... for the append-only log, sqlite://... for the
+    # indexed backend) to TuningSession(store=...); a re-tune replays every
+    # stored structure for free, and surrogate_scope="cross_workload" lets a
+    # new kernel's learned surrogate warm-start from the other kernels'
+    # history.  (Constructing ResultStore(path) directly is the deprecated
+    # old spelling — it assumes JSONL and emits a DeprecationWarning.)
+    import tempfile
+
+    from repro.core import ResultStore
+    with tempfile.TemporaryDirectory() as tmp:
+        store_uri = f"sqlite://{tmp}/quickstart.db"
+        print(f"\n--- persistent store warm start ({store_uri}) ---")
+        warm_session = TuningSession(CostModelBackend(), store=store_uri)
+        warm_session.tune(GEMM, SearchSpace(root=nest), budget=200)
+        relog = warm_session.tune(GEMM, SearchSpace(root=nest), budget=200)
+        print(f"re-tune replayed {relog.cache['preloaded']} stored "
+              f"structures with {relog.cache['misses']} backend calls")
+        # release the shared connection before the tempdir is deleted
+        ResultStore.drop_shared(store_uri)
+
 
 if __name__ == "__main__":
     main()

@@ -34,7 +34,10 @@ from .measure import (
     Result,
     WallclockBackend,
 )
-from .resultstore import ResultStore, host_fingerprint
+from .resultstore import (SCOPE_POLICIES, ResultStore, host_fingerprint,
+                          migrate_store)
+from .storebackend import (JsonlStoreBackend, SqliteStoreBackend,
+                           StoreBackend, StoreBrokenError, StoreRecord)
 from .searchspace import DEFAULT_TILE_SIZES, Configuration, SearchSpace
 from .session import (STRATEGY_REGISTRY, Proposal, Strategy, TuningSession,
                       TuningSpec, register_strategy, resolve_strategy)
@@ -60,13 +63,16 @@ __all__ = [
     "IllegalTransform", "Interchange", "Loop", "LoopNest", "Machine",
     "MctsStrategy", "NoSuccessfulExperiment", "PAPER_WORKLOADS",
     "PallasBackend", "Parallelize", "Proposal", "RandomWalkStrategy",
-    "Result", "ResultStore", "SYR2K", "STRATEGIES", "STRATEGY_REGISTRY",
-    "SearchSpace", "Strategy", "Surrogate", "TPU_V5E", "Tile",
-    "TransformError", "Transformation", "TuningLog", "TuningSession",
-    "TuningSpec", "Unroll", "Vectorize", "WallclockBackend", "Workload",
-    "XEON_8180M", "check_legal", "estimate_time", "estimate_time_uncached",
-    "expected_improvement", "host_fingerprint", "is_legal", "make_nest",
-    "matmul_workload", "nest_from_key", "register_strategy",
+    "Result", "ResultStore", "SCOPE_POLICIES", "SYR2K", "STRATEGIES",
+    "STRATEGY_REGISTRY", "SearchSpace", "SqliteStoreBackend",
+    "JsonlStoreBackend", "StoreBackend", "StoreBrokenError", "StoreRecord",
+    "Strategy",
+    "Surrogate", "TPU_V5E", "Tile", "TransformError", "Transformation",
+    "TuningLog", "TuningSession", "TuningSpec", "Unroll", "Vectorize",
+    "WallclockBackend", "Workload", "XEON_8180M", "check_legal",
+    "estimate_time", "estimate_time_uncached", "expected_improvement",
+    "host_fingerprint", "is_legal", "make_nest", "matmul_workload",
+    "migrate_store", "nest_from_key", "register_strategy",
     "resolve_strategy", "run_beam", "run_greedy", "run_mcts", "run_random",
     "spearman", "structure_features",
 ]

@@ -83,7 +83,7 @@ from .costmodel import XEON_8180M, Machine, estimate_time
 from .legality import IllegalTransform, check_legal
 from .loopnest import LoopNest
 from .measure import Backend, Result
-from .resultstore import ResultStore
+from .resultstore import SCOPE_POLICIES, ResultStore
 from .searchspace import Configuration, SearchSpace
 from .surrogate import Surrogate
 from .transformations import TransformError
@@ -154,15 +154,33 @@ class EvaluationEngine:
     store:
         Persistent result store for cross-run warm starts.  ``None`` (the
         default) consults the ``CC_RESULT_STORE`` environment variable and
-        opens that path when set; ``False`` disables persistence outright
-        (benchmarks that must measure cold pass this); a path string or
+        opens that target when set; ``False`` — or an empty string — disables
+        persistence outright (benchmarks that must measure cold pass this),
+        and an explicit argument **always wins over the environment
+        variable**; a path / ``jsonl://`` / ``sqlite://`` URI string or
         :class:`~repro.core.resultstore.ResultStore` instance attaches that
-        store (path strings resolve through :meth:`ResultStore.shared`, so
-        every engine in a process shares one descriptor per path).  Requires
+        store (strings resolve through :meth:`ResultStore.shared`, so every
+        engine in a process shares one descriptor per store).  Requires
         ``cache=True``: an explicit store with ``cache=False`` raises
         ``ValueError`` (there is nothing to preload into, and the run would
         silently persist nothing); the ``CC_RESULT_STORE`` ambient default
         is simply ignored in cache-off mode.
+    surrogate_scope:
+        Scope-relaxation policy for the *learned surrogate's* warm-start
+        training set (see :meth:`ResultStore.query`): ``"exact"`` (default —
+        only this workload/scope's records, byte-identical to the
+        pre-pooling engine), ``"same_backend"`` (pool this workload's
+        records across hosts/scales of the same backend kind), or
+        ``"cross_workload"`` (pool every workload's records of the same
+        backend kind — a cold kernel starts with a surrogate trained on the
+        other kernels' history; workload extents are already features).
+        Replay/preload is **always** exact — relaxed records train the
+        ordering model, they are never substituted for a measurement.
+    surrogate_peers:
+        Extra :class:`Workload` candidates used to resolve the workload
+        fingerprints of pooled records (``surrogate_scope != "exact"``).
+        The paper workloads are always recognized; pass scaled/custom
+        workloads here so their stored records can be featurized.
     """
 
     def __init__(
@@ -175,6 +193,8 @@ class EvaluationEngine:
         surrogate_order: bool = False,
         surrogate_machine: Machine | None = None,
         store: "ResultStore | str | os.PathLike | bool | None" = None,
+        surrogate_scope: str = "exact",
+        surrogate_peers: "Sequence[Workload]" = (),
     ):
         self.workload = workload
         self.space = space
@@ -201,11 +221,22 @@ class EvaluationEngine:
                 f"EvaluationEngine: surrogate must be None, 'analytic', "
                 f"'learned' or a Surrogate instance, got {surrogate!r}")
         self.surrogate = surrogate
+        if surrogate_scope not in SCOPE_POLICIES:
+            raise ValueError(
+                f"EvaluationEngine: surrogate_scope must be one of "
+                f"{', '.join(SCOPE_POLICIES)}, got {surrogate_scope!r}")
+        self.surrogate_scope = surrogate_scope
+        self.surrogate_peers = tuple(surrogate_peers)
         self.stats = EvalStats()
         self._results: dict[tuple, Result] = {}
         self._seen: set[tuple] = set()
         self.store: ResultStore | None = None
         self._store_scope: tuple[str, str] | None = None
+        # An explicit empty target is an explicit opt-out, exactly like
+        # store=False — ``--store ""`` on a CLI must not fall through to the
+        # CC_RESULT_STORE ambient default (explicit always beats the env).
+        if isinstance(store, (str, os.PathLike)) and not os.fspath(store):
+            store = False
         if not cache and isinstance(store, (str, os.PathLike, ResultStore)):
             raise ValueError(
                 "EvaluationEngine: store requires cache=True — with the "
@@ -224,10 +255,37 @@ class EvaluationEngine:
                 if warm:
                     self._results.update(warm)
                     self.stats.preloaded = len(warm)
-                    if self._learned is not None:
-                        # fit from the accumulated measurement log *before*
-                        # the first measurement (warm-start training)
-                        self._learned.fit_items(warm.items())
+                if self._learned is not None:
+                    # fit from the accumulated measurement log *before* the
+                    # first measurement (warm-start training).  The exact
+                    # policy trains on the preloaded replay set; relaxed
+                    # policies pool the store across scopes/workloads for
+                    # training only — replay above stays exact.
+                    if self.surrogate_scope == "exact":
+                        if warm:
+                            self._learned.fit_items(warm.items())
+                    else:
+                        self._learned.fit_store(
+                            store, self._store_scope[1],
+                            scope_policy=self.surrogate_scope,
+                            peers=self.surrogate_peers)
+        if self.surrogate_scope != "exact":
+            # A relaxed scope that cannot pool anything is a silent no-op
+            # the caller almost certainly did not intend — same policy as
+            # the explicit-store-with-cache-off rejection above.
+            if self._learned is None:
+                raise ValueError(
+                    f"EvaluationEngine: surrogate_scope="
+                    f"{self.surrogate_scope!r} requires surrogate='learned' "
+                    f"(got surrogate={self.surrogate!r}) — only the learned "
+                    f"surrogate trains on pooled records")
+            if self.store is None:
+                raise ValueError(
+                    f"EvaluationEngine: surrogate_scope="
+                    f"{self.surrogate_scope!r} requires a result store to "
+                    f"pool from — pass store=... or set CC_RESULT_STORE, "
+                    f"and note a store also requires cache=True (the "
+                    f"ambient env default is ignored in cache-off mode)")
 
     @property
     def surrogate_order(self) -> bool:

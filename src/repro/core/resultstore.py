@@ -1,24 +1,26 @@
-"""Persistent on-disk result store — measure-once *across* runs.
+"""Persistent on-disk result store — measure-once *across* runs and machines.
 
 PR 1 made re-measuring a structurally duplicate schedule free *within* one
 process (:class:`~repro.core.evaluation.EvaluationEngine`'s structural result
-cache).  This module extends that guarantee across processes: every measured
-``(workload, backend, machine, structure) → Result`` is appended to an
-append-only JSONL log, and a later tuning run — a re-tune, a CI job, a
+cache).  This module extends that guarantee across processes and machines:
+every measured ``(workload, backend, machine, structure) → Result`` is
+appended to a persistent log, and a later tuning run — a re-tune, a CI job, a
 wallclock sweep on the same machine — preloads it and starts warm.  This is
 the accumulated measurement log that surrogate/Bayesian autotuning
 (arXiv:2010.08040) trains on, and the paper's "compile it, run it, time it"
 budget (§IV-C) is only ever spent once per structure per machine.
 
-Record format (one JSON object per line)::
+The on-disk *format* is pluggable (:mod:`repro.core.storebackend`): the
+original append-only JSONL (byte-compatible with every pre-existing store)
+and an indexed SQLite database, selected by URI scheme or path suffix::
 
-    {"v": 1, "w": "<workload fingerprint>", "s": "<backend scope>",
-     "k": <canonical key as nested arrays>,
-     "r": {"status": "ok", "time_s": 1.23, "note": ""}}
+    store = ResultStore.open("jsonl:///var/tune/store.jsonl")   # explicit
+    store = ResultStore.open("sqlite:///var/tune/store.db")     # indexed
+    store = ResultStore.open("results/store.jsonl")             # suffix → jsonl
+    store = ResultStore.open("results/store.sqlite")            # suffix → sqlite
 
-* ``v`` — schema version.  Records whose version does not match
-  :data:`SCHEMA_VERSION` are ignored on load (a version bump is a clean cold
-  start, never a crash or a misinterpreted record).
+Record identity is ``(w, s, k)`` for every backend:
+
 * ``w`` — :meth:`Workload.fingerprint`: stable hash of the workload
   definition, so renaming or resizing a kernel can never replay stale times.
 * ``s`` — :meth:`Backend.store_scope`: backend kind + everything that affects
@@ -28,37 +30,67 @@ Record format (one JSON object per line)::
   (structure key, or ``("path", ...)`` for red configurations), serialized by
   :func:`repro.core.loopnest.encode_key`.
 
-Durability properties:
+Beyond the per-scope warm start, this facade adds the fleet-scale
+operations:
 
-* **Atomic appends** — each :meth:`append_many` is a single ``os.write`` to an
-  ``O_APPEND`` descriptor, so concurrent writers (process-pool workers, two
-  tuning runs sharing a store) interleave at line granularity, never inside a
-  line.
-* **Corruption tolerance** — :meth:`load` skips lines that fail to parse
-  (e.g. a truncated final line after a crash) instead of refusing the whole
-  log; everything parseable is still replayed.
-* **Append-only** — a record, once written, is never modified; re-measuring
-  never happens (cache invariant: one sample per structure), so duplicate
-  keys can only occur from concurrent first-writers, and the first record
-  wins on load (identical content in the deterministic case).
+* :meth:`ResultStore.merge` — federation: fold other stores (other machines,
+  other runs) into this one, newest record per key, conflict counters
+  reported.  Scopes embed host fingerprints, so records from different
+  machines coexist; only same-scope disagreements count as conflicts.
+* :meth:`ResultStore.query` with a *scope policy* — ``exact`` (one workload,
+  one scope: the replay-correct set the engine preloads), ``same_backend``
+  (one workload, any scope of the same backend kind), ``cross_workload``
+  (any workload, same backend kind) — the training-set relaxation that lets
+  a :class:`~repro.core.surrogate.Surrogate` start non-cold on a kernel the
+  store has never seen (arXiv:2102.13514-style transfer; workload extents
+  are already features).
+* :func:`migrate_store` — copy every record between backends
+  (JSONL ⇄ SQLite), order and duplicates preserved.
 
-The default store path is taken from the ``CC_RESULT_STORE`` environment
-variable (see :class:`~repro.core.evaluation.EvaluationEngine`); the
-benchmark harness exposes it as ``benchmarks/run.py --store PATH``.
+The default store target is taken from the ``CC_RESULT_STORE`` environment
+variable (see :class:`~repro.core.evaluation.EvaluationEngine`) — a path or
+URI; the benchmark harness exposes it as ``benchmarks/run.py --store PATH``
+(``--store-backend sqlite`` to force the indexed backend).  Setting
+``CC_STORE_COMPACT_BYTES=N`` makes JSONL stores auto-compact (newest record
+per key) when the file exceeds ``N`` bytes — off by default.
 """
 
 from __future__ import annotations
 
-import json
+import logging
 import os
 import platform
 import threading
-from typing import Iterable
+import warnings
+from typing import Iterable, Sequence
 
-from .loopnest import encode_key, tuplize
+from .loopnest import encode_key
 from .measure import Result
+from .storebackend import (
+    SCHEMA_VERSION,
+    JsonlStoreBackend,
+    SqliteStoreBackend,
+    StoreBackend,
+    StoreBrokenError,
+    StoreRecord,
+    backend_kind_of,
+    resolve_backend,
+    split_store_target,
+)
 
-SCHEMA_VERSION = 1
+__all__ = [
+    "ResultStore",
+    "SCHEMA_VERSION",
+    "SCOPE_POLICIES",
+    "StoreBrokenError",
+    "host_fingerprint",
+    "migrate_store",
+]
+
+#: Query relaxation levels, strictest to loosest — see :meth:`ResultStore.query`.
+SCOPE_POLICIES = ("exact", "same_backend", "cross_workload")
+
+_log = logging.getLogger("repro.core.resultstore")
 
 
 def host_fingerprint() -> str:
@@ -73,46 +105,90 @@ def host_fingerprint() -> str:
 
 
 class ResultStore:
-    """Append-only JSONL store of measured results, shared across runs.
+    """Persistent store of measured results, shared across runs.
 
     One instance may serve many engines (and therefore scopes) concurrently;
-    appends are thread-safe and crash-tolerant (see module docstring).  Reads
-    are snapshot loads — an engine preloads its scope once at construction;
-    results appended later by other writers are picked up by the next run.
+    appends are thread-safe and atomic per batch.  Reads are snapshot loads —
+    an engine preloads its scope once at construction; results appended later
+    by other writers are picked up by the next run.
+
+    Everything format-independent lives here (process-wide sharing, the
+    per-process written-set dedup, scope policies, federation merge,
+    auto-compaction); the bytes live in a :class:`~repro.core.storebackend.
+    StoreBackend` selected by the target's URI scheme or suffix.  Construct
+    through :meth:`open` (fresh instance) or :meth:`shared` (process-wide
+    instance per path) — the direct ``ResultStore(path)`` spelling predates
+    the pluggable backends and is deprecated.
     """
 
-    def __init__(self, path: str | os.PathLike):
-        self.path = os.fspath(path)
+    def __init__(self, path: str | os.PathLike,
+                 backend: StoreBackend | None = None):
+        if backend is None:
+            warnings.warn(
+                "constructing ResultStore(path) directly is deprecated; use "
+                "ResultStore.open('jsonl://...' / 'sqlite://...' / path) or "
+                "ResultStore.shared(...) — they resolve the store backend "
+                "from the URI scheme or path suffix",
+                DeprecationWarning, stacklevel=2)
+            backend = resolve_backend(path)
+        self.backend = backend
+        self.path = backend.path
         self._lock = threading.Lock()
-        self._fd: int | None = None
         # (w, s, encoded key) already persisted by this process — appends are
         # dedup'd so engines sharing a store do not re-write preloaded records.
         self._written: set[tuple[str, str, str]] = set()
+        # high-water mark of the last auto-compaction (thrash guard)
+        self._autocompact_floor = 0
 
-    _shared: "dict[str, ResultStore]" = {}
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def open(cls, target: "str | os.PathLike | ResultStore") -> "ResultStore":
+        """A fresh store instance for a path or ``jsonl://``/``sqlite://``
+        URI (backend resolved by scheme, else by path suffix).  Fresh means
+        its own descriptor/connection and written-set — what a test that
+        models two processes wants; engines and benchmark harnesses should
+        normally use :meth:`shared` instead."""
+        if isinstance(target, ResultStore):
+            return target
+        return cls(target, backend=resolve_backend(target))
+
+    _shared: "dict[tuple[str, str], ResultStore]" = {}
     _shared_lock = threading.Lock()
 
     @classmethod
-    def shared(cls, path: str | os.PathLike) -> "ResultStore":
-        """Process-wide store instance for ``path``.
+    def _resolve_shared(cls, target: "str | os.PathLike"
+                        ) -> "tuple[tuple[str, str], StoreBackend]":
+        # Keyed on the *resolved* backend kind, not the target's syntax:
+        # a legacy JSONL file at a sqlite-suffixed path resolves to the
+        # JSONL backend, and "store.db" / "jsonl://store.db" must share one
+        # instance (one descriptor, one written-set), not two.  One resolve
+        # serves both the key and the cache-miss construction.
+        backend = resolve_backend(target)
+        backend.path = os.path.abspath(backend.path)
+        return (backend.kind, backend.path), backend
 
-        Engines constructed from a path string (or ``CC_RESULT_STORE``) use
-        this so a benchmark harness spawning dozens of engines shares one
-        append descriptor and one written-set instead of opening the file
-        per engine."""
-        key = os.path.abspath(os.fspath(path))
+    @classmethod
+    def shared(cls, target: str | os.PathLike) -> "ResultStore":
+        """Process-wide store instance for ``target`` (path or URI).
+
+        Engines constructed from a target string (or ``CC_RESULT_STORE``)
+        use this so a benchmark harness spawning dozens of engines shares one
+        descriptor/connection and one written-set instead of opening the
+        store per engine."""
+        key, backend = cls._resolve_shared(target)
         with cls._shared_lock:
             store = cls._shared.get(key)
             if store is None:
-                store = cls._shared[key] = cls(key)
+                store = cls._shared[key] = cls(key[1], backend=backend)
             return store
 
     @classmethod
-    def drop_shared(cls, path: str | os.PathLike) -> None:
-        """Close and evict the process-wide instance for ``path`` (used by
+    def drop_shared(cls, target: str | os.PathLike) -> None:
+        """Close and evict the process-wide instance for ``target`` (used by
         benchmarks that create short-lived stores, so the registry does not
         hold an open descriptor to an unlinked file forever)."""
-        key = os.path.abspath(os.fspath(path))
+        key, _ = cls._resolve_shared(target)
         with cls._shared_lock:
             store = cls._shared.pop(key, None)
         if store is not None:
@@ -122,41 +198,46 @@ class ResultStore:
 
     def load(self, workload_fp: str, scope: str) -> dict[tuple, Result]:
         """All stored results for one (workload, backend scope), keyed by the
-        decoded canonical key.  Unparseable lines and records of a different
-        schema version are skipped (corruption/version tolerance); the first
-        record wins on duplicate keys."""
+        decoded canonical key.  Unparseable entries and records of a
+        different schema version are skipped (corruption/version tolerance);
+        the first record wins on duplicate keys — this is the replay-correct
+        ``exact`` set the evaluation engine preloads."""
         out: dict[tuple, Result] = {}
-        try:
-            f = open(self.path, "r", encoding="utf-8")
-        except OSError:
-            return out
-        with f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = json.loads(line)
-                except (ValueError, TypeError):
-                    continue        # truncated/corrupt line — tolerate
-                if not isinstance(rec, dict) or rec.get("v") != SCHEMA_VERSION:
-                    continue        # schema mismatch — clean cold start
-                if rec.get("w") != workload_fp or rec.get("s") != scope:
-                    continue
-                try:
-                    key = tuplize(rec["k"])
-                    r = rec["r"]
-                    res = Result(
-                        status=str(r["status"]),
-                        time_s=None if r.get("time_s") is None
-                        else float(r["time_s"]),
-                        note=str(r.get("note", "")),
-                    )
-                except (KeyError, TypeError, ValueError):
-                    continue        # structurally invalid record — tolerate
-                out.setdefault(key, res)
-                self._written.add((workload_fp, scope, encode_key(key)))
+        with self._lock:
+            for rec in self.backend.query(workload_fp=workload_fp,
+                                          scope=scope):
+                out.setdefault(rec.key, rec.result)
+                self._written.add(rec.sig())
         return out
+
+    def query(self, workload_fp: str, scope: str,
+              policy: str = "exact") -> list[StoreRecord]:
+        """Stored records under a scope-relaxation *policy*, in store order:
+
+        * ``"exact"`` — this workload, this exact scope (what :meth:`load`
+          replays; safe to substitute for a measurement).
+        * ``"same_backend"`` — this workload, any scope of the same backend
+          *kind* (other hosts, scales, machine models: comparable quantity,
+          different conditions — training data, never replay data).
+        * ``"cross_workload"`` — any workload, same backend kind: the full
+          transfer-learning pool a new kernel's surrogate warm-starts from.
+
+        Relaxed records are for *training/ordering only* — the engine never
+        replays anything but ``exact`` matches.
+        """
+        if policy not in SCOPE_POLICIES:
+            raise ValueError(f"unknown scope policy {policy!r} "
+                             f"(choose from {', '.join(SCOPE_POLICIES)})")
+        kind = backend_kind_of(scope)
+        with self._lock:
+            if policy == "exact":
+                it = self.backend.query(workload_fp=workload_fp, scope=scope)
+            elif policy == "same_backend":
+                it = self.backend.query(workload_fp=workload_fp,
+                                        scope_kind=kind)
+            else:
+                it = self.backend.query(scope_kind=kind)
+            return list(it)
 
     def ok_items(self, workload_fp: str, scope: str
                  ) -> list[tuple[tuple, float]]:
@@ -174,21 +255,9 @@ class ResultStore:
         return items
 
     def count(self) -> int:
-        """Parseable current-schema records in the log (diagnostics only)."""
-        n = 0
-        try:
-            f = open(self.path, "r", encoding="utf-8")
-        except OSError:
-            return 0
-        with f:
-            for line in f:
-                try:
-                    rec = json.loads(line)
-                except (ValueError, TypeError):
-                    continue
-                if isinstance(rec, dict) and rec.get("v") == SCHEMA_VERSION:
-                    n += 1
-        return n
+        """Parseable current-schema records in the store (diagnostics only)."""
+        with self._lock:
+            return self.backend.count()
 
     # -- write ---------------------------------------------------------------
 
@@ -202,132 +271,149 @@ class ResultStore:
         scope: str,
         items: Iterable[tuple[tuple, Result]],
     ) -> int:
-        """Persist a batch of (key, result) pairs in one atomic write.
+        """Persist a batch of (key, result) pairs in one atomic append.
 
         Returns the number of records actually written (pairs already
         persisted by this process are skipped)."""
-        lines: list[str] = []
-        fresh: list[tuple[str, str, str]] = []
+        fresh: list[StoreRecord] = []
+        sigs: list[tuple[str, str, str]] = []
         for key, res in items:
-            ek = encode_key(key)
-            sig = (workload_fp, scope, ek)
+            sig = (workload_fp, scope, encode_key(key))
             if sig in self._written:
                 continue
-            fresh.append(sig)
-            lines.append(json.dumps(
-                {
-                    "v": SCHEMA_VERSION,
-                    "w": workload_fp,
-                    "s": scope,
-                    "k": key,       # nested tuples serialize as JSON arrays
-                    "r": {"status": res.status, "time_s": res.time_s,
-                          "note": res.note},
-                },
-                separators=(",", ":"),
-            ))
-        if not lines:
+            sigs.append(sig)
+            fresh.append(StoreRecord(workload_fp, scope, key, res))
+        if not fresh:
             return 0
-        data = ("\n".join(lines) + "\n").encode("utf-8")
         with self._lock:
-            if self._fd is not None:
-                # A concurrent compact() (possibly in another process)
-                # os.replace()s the file; an O_APPEND descriptor would keep
-                # writing to the unlinked old inode and every later record
-                # would silently vanish.  One fstat/stat pair per batch
-                # detects the swap and reopens the new file.
-                try:
-                    if (os.fstat(self._fd).st_ino
-                            != os.stat(self.path).st_ino):
-                        os.close(self._fd)
-                        self._fd = None
-                except OSError:
-                    os.close(self._fd)
-                    self._fd = None
-            if self._fd is None:
-                d = os.path.dirname(self.path)
-                if d:
-                    os.makedirs(d, exist_ok=True)
-                self._fd = os.open(
-                    self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644
-                )
-            os.write(self._fd, data)       # single write → line-atomic
-            self._written.update(fresh)
-        return len(lines)
+            n = self.backend.append(fresh)
+            self._written.update(sigs)
+        self._maybe_autocompact()
+        return n
 
     def compact(self) -> dict[str, int]:
-        """Rewrite the JSONL keeping the newest record per key, atomically.
+        """Rewrite the store keeping the newest record per key, atomically.
 
-        The log is append-only, so a long-lived store accumulates dead
-        weight: unparseable lines, records of older schema versions (ignored
-        by :meth:`load` anyway), and duplicate ``(workload, scope, key)``
-        records from concurrent first-writers.  Compaction rewrites the file
-        with exactly one record — the newest — per key, preserving first-seen
-        key order, via a temp file + ``os.replace`` so a crash mid-compaction
-        can never lose the log.  The append descriptor is reopened lazily
-        afterwards (the old one would point at the replaced inode), and
-        :meth:`append_many` — in this and any other process holding the
-        store open — detects the inode swap per batch and reopens, so
-        post-compaction appends are never lost.  Records another process
-        appends *during* the read→replace window can still be dropped:
-        compaction is a maintenance operation, run it when no tuning run is
-        actively writing the store.
+        A long-lived store accumulates dead weight: unparseable entries,
+        records of older schema versions (ignored on load anyway), and
+        duplicate ``(workload, scope, key)`` records from concurrent
+        first-writers.  Compaction keeps exactly one record — the newest —
+        per key, atomically (temp file + ``os.replace`` for JSONL, one
+        transaction for SQLite), so a crash mid-compaction can never lose
+        the log.  JSONL append descriptors — in this and any other process
+        holding the store open — detect the inode swap per batch and reopen,
+        so post-compaction appends are never lost; the read→replace window
+        itself is guarded by an advisory ``flock`` (appends shared,
+        compaction exclusive), so cooperating processes cannot write into
+        it either.  Only where ``flock`` is unavailable (some network
+        filesystems) does the old maintenance caveat apply: run compaction
+        when no tuning run is actively writing the store.
 
         Returns ``{"kept": n, "dropped_duplicates": n, "dropped_foreign": n,
         "dropped_corrupt": n}``.  In the deterministic case duplicate records
         are identical, so newest-wins == first-wins (what :meth:`load` does);
-        keeping the newest means a re-measured record (e.g. after a schema
-        of measurement changed enough to bump ``SCHEMA_VERSION``) survives.
+        keeping the newest means a re-measured record survives.
         """
-        stats = {"kept": 0, "dropped_duplicates": 0, "dropped_foreign": 0,
-                 "dropped_corrupt": 0}
         with self._lock:
-            try:
-                f = open(self.path, "r", encoding="utf-8")
-            except OSError:
-                return stats        # nothing on disk — nothing to compact
-            newest: dict[tuple[str, str, str], str] = {}
-            with f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        rec = json.loads(line)
-                    except (ValueError, TypeError):
-                        stats["dropped_corrupt"] += 1
-                        continue
-                    if (not isinstance(rec, dict)
-                            or rec.get("v") != SCHEMA_VERSION):
-                        stats["dropped_foreign"] += 1
-                        continue
-                    try:
-                        sig = (str(rec["w"]), str(rec["s"]),
-                               encode_key(tuplize(rec["k"])))
-                    except (KeyError, TypeError, ValueError):
-                        stats["dropped_corrupt"] += 1
-                        continue
-                    if sig in newest:
-                        stats["dropped_duplicates"] += 1
-                    newest[sig] = line      # newest record wins
-            stats["kept"] = len(newest)
-            tmp = self.path + ".compact.tmp"
-            with open(tmp, "w", encoding="utf-8") as out:
-                for line in newest.values():
-                    out.write(line + "\n")
-            os.replace(tmp, self.path)
-            if self._fd is not None:
-                # the O_APPEND descriptor points at the replaced inode;
-                # drop it so the next append reopens the compacted file
-                os.close(self._fd)
-                self._fd = None
-            self._written.update(newest)
+            # the backend feeds the surviving sigs straight into the
+            # written-set — no second full scan
+            stats = self.backend.compact(sig_sink=self._written)
         return stats
+
+    def _maybe_autocompact(self) -> None:
+        """Satellite of the pluggable-store PR: with
+        ``CC_STORE_COMPACT_BYTES=N`` set (default off), a JSONL store
+        auto-compacts once the file exceeds ``N`` bytes.  The floor guard
+        (re-arm only after the file doubles past the last compacted size)
+        keeps a store whose *unique* records already exceed the threshold
+        from recompacting on every append."""
+        if self.backend.kind != "jsonl":
+            return      # sqlite keeps one row per insert; nothing to shed
+        raw = os.environ.get("CC_STORE_COMPACT_BYTES", "")
+        try:
+            threshold = int(raw) if raw else 0
+        except ValueError:
+            return
+        if threshold <= 0:
+            return
+        size = self.backend.size_bytes()
+        if size <= threshold or size < 2 * self._autocompact_floor:
+            return
+        stats = self.compact()
+        self._autocompact_floor = self.backend.size_bytes()
+        _log.info(
+            "auto-compacted %s: kept %d, dropped %d duplicate / %d foreign / "
+            "%d corrupt record(s) (%d B > CC_STORE_COMPACT_BYTES=%d)",
+            self.path, stats["kept"], stats["dropped_duplicates"],
+            stats["dropped_foreign"], stats["dropped_corrupt"],
+            size, threshold)
+
+    # -- federation ----------------------------------------------------------
+
+    def merge(self, *sources: "ResultStore | str | os.PathLike"
+              ) -> dict[str, object]:
+        """Federate other stores into this one — newest record per key.
+
+        ``sources`` are merged in argument order, oldest first: within each
+        store the last record per key wins (append order = age order), and a
+        later source overrides an earlier one (and this store) when the same
+        ``(workload, scope, key)`` carries a *different* result — that is a
+        **conflict**, counted per scope.  Identical re-measurements are
+        counted as ``duplicates``.  Scopes embed host fingerprints, so a
+        fleet's stores merge without conflicts unless the same host
+        re-measured the same structure differently.
+
+        The merged record set replaces this store's contents atomically
+        (exactly one record per key afterwards — a merge is also a
+        compaction).  Returns ``{"kept", "added", "conflicts", "duplicates",
+        "conflicts_by_scope", "sources"}``.
+        """
+        with self._lock, self.backend.exclusive():
+            # backend.exclusive() holds the cross-process write exclusion
+            # across the whole read→rewrite unit: records another process
+            # appends after our read cannot be destroyed by the rewrite
+            # (they queue and land after it).
+            merged: dict[tuple[str, str, str], StoreRecord] = {}
+            for rec in self.backend.iter_records():
+                merged[rec.sig()] = rec     # newest-in-file wins
+            added = conflicts = duplicates = 0
+            by_scope: dict[str, int] = {}
+            for src in sources:
+                other = ResultStore.open(src)
+                try:
+                    newest: dict[tuple[str, str, str], StoreRecord] = {}
+                    for rec in other.backend.iter_records():
+                        newest[rec.sig()] = rec
+                finally:
+                    if other is not src:    # close stores we opened here
+                        other.close()
+                for sig, rec in newest.items():
+                    cur = merged.get(sig)
+                    if cur is None:
+                        merged[sig] = rec
+                        added += 1
+                    elif rec.result == cur.result:
+                        duplicates += 1
+                    else:
+                        conflicts += 1
+                        by_scope[rec.scope] = by_scope.get(rec.scope, 0) + 1
+                        merged[sig] = rec   # newest (later source) wins
+            self.backend.rewrite(list(merged.values()))
+            self._written.update(merged)
+        return {
+            "kept": len(merged),
+            "added": added,
+            "conflicts": conflicts,
+            "duplicates": duplicates,
+            "conflicts_by_scope": by_scope,
+            "sources": len(sources),
+        }
+
+    # -- lifecycle -----------------------------------------------------------
 
     def close(self) -> None:
         with self._lock:
-            if self._fd is not None:
-                os.close(self._fd)
-                self._fd = None
+            self.backend.close()
 
     def __enter__(self) -> "ResultStore":
         return self
@@ -336,3 +422,32 @@ class ResultStore:
         self.close()
 
 
+def migrate_store(src: "ResultStore | str | os.PathLike",
+                  dst: "ResultStore | str | os.PathLike") -> dict[str, object]:
+    """Copy every current-schema record from ``src`` to ``dst`` (paths, URIs
+    or open stores), preserving order and duplicates — the JSONL ⇄ SQLite
+    round-trip primitive.  ``dst`` is appended to, not truncated, so
+    migrating into a non-empty store is a (conflict-blind) union; use
+    :meth:`ResultStore.merge` when newest-per-key semantics matter.
+    Returns ``{"migrated": n, "source": path, "dest": path}``."""
+    s = ResultStore.open(src)
+    d = ResultStore.open(dst)
+    try:
+        with s._lock:
+            records = list(s.backend.iter_records())
+        with d._lock:
+            n = d.backend.append(records)
+            d._written.update(rec.sig() for rec in records)
+        if n != len(records):
+            # a best-effort backend (broken sqlite target) dropping the
+            # batch must not masquerade as a completed migration
+            raise StoreBrokenError(
+                f"migration to {d.path} persisted {n}/{len(records)} "
+                f"records — destination store is not usable")
+        return {"migrated": n, "source": s.path, "dest": d.path}
+    finally:
+        # close only the handles opened here — callers keep theirs
+        if s is not src:
+            s.close()
+        if d is not dst:
+            d.close()

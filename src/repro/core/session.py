@@ -207,10 +207,17 @@ class TuningSession:
     :class:`~repro.core.evaluation.EvaluationEngine` constructed per
     :meth:`tune` call (semantics identical to the legacy drivers' kwargs:
     ``store`` attaches the persistent :class:`~repro.core.resultstore.
-    ResultStore` for cross-run warm starts, ``surrogate`` is
-    ``"analytic" | "learned" | Surrogate | None``).  One session may run many
-    tunes (different workloads/spaces/strategies) against the same backend;
-    each tune gets a fresh engine unless one is injected.
+    ResultStore` for cross-run warm starts — a path, a ``jsonl://`` /
+    ``sqlite://`` URI, an instance, or ``False`` to opt out of the
+    ``CC_RESULT_STORE`` ambient default; ``surrogate`` is
+    ``"analytic" | "learned" | Surrogate | None``).  ``surrogate_scope``
+    relaxes the learned surrogate's warm-start training pool
+    (``"exact" | "same_backend" | "cross_workload"`` — see
+    :meth:`ResultStore.query`; replay is always exact) and
+    ``surrogate_peers`` names extra workloads whose pooled records should be
+    featurizable.  One session may run many tunes (different
+    workloads/spaces/strategies) against the same backend; each tune gets a
+    fresh engine unless one is injected.
     """
 
     def __init__(
@@ -220,11 +227,15 @@ class TuningSession:
         store=None,
         surrogate=None,
         cache: bool = True,
+        surrogate_scope: str = "exact",
+        surrogate_peers: Sequence[Workload] = (),
     ):
         self.backend = backend
         self.store = store
         self.surrogate = surrogate
         self.cache = cache
+        self.surrogate_scope = surrogate_scope
+        self.surrogate_peers = tuple(surrogate_peers)
 
     def tune(
         self,
@@ -252,6 +263,8 @@ class TuningSession:
         engine = engine or EvaluationEngine(
             workload, space, self.backend,
             cache=self.cache, surrogate=self.surrogate, store=self.store,
+            surrogate_scope=self.surrogate_scope,
+            surrogate_peers=self.surrogate_peers,
         )
         log = TuningLog(workload=workload.name, backend=self.backend.name)
         strat.bind(engine, space, workload)
@@ -314,8 +327,18 @@ class TuningSpec:
     also carry ``scale`` to pre-scale extents.  ``space_args`` are
     :class:`SearchSpace` kwargs (sans ``root``), ``backend_args`` the
     backend constructor's, ``strategy_args`` the strategy constructor's.
-    ``store`` is a result-store path (cross-run warm start).  Round-trips
-    losslessly through :meth:`to_json`/:meth:`from_json`, and
+    ``store`` is a result-store target for the cross-run warm start — a
+    path or a ``jsonl://`` / ``sqlite://`` URI (backend resolved by scheme
+    or suffix), JSON ``false`` for an explicit opt-out that beats the
+    ``CC_RESULT_STORE`` ambient default, ``null`` to defer to it.
+    ``surrogate_scope`` is the learned surrogate's training-pool relaxation
+    (``"exact"`` / ``"same_backend"`` / ``"cross_workload"``), and
+    ``surrogate_peers`` names the extra workloads whose pooled records must
+    be featurizable — each entry a ``{"workload": name, "workload_args":
+    {...}}`` object resolved exactly like the spec's own workload (paper
+    workloads are always recognized; peers matter for scaled/matmul
+    fingerprints).  Round-trips losslessly through
+    :meth:`to_json`/:meth:`from_json`, and
     ``python -m repro.core.session spec.json`` executes it.
     """
 
@@ -328,8 +351,10 @@ class TuningSpec:
     backend_args: dict = field(default_factory=dict)
     space_args: dict = field(default_factory=dict)
     surrogate: str | None = None
-    store: str | None = None
+    store: str | bool | None = None
     cache: bool = True
+    surrogate_scope: str = "exact"
+    surrogate_peers: list = field(default_factory=list)
 
     # -- serialization -------------------------------------------------------
 
@@ -367,10 +392,11 @@ class TuningSpec:
 
     # -- resolution ----------------------------------------------------------
 
-    def build_workload(self) -> Workload:
-        args = dict(self.workload_args)
+    @staticmethod
+    def _resolve_workload(name: str, workload_args: dict) -> Workload:
+        args = dict(workload_args)
         scale = args.pop("scale", None)
-        if self.workload == "matmul":
+        if name == "matmul":
             args.setdefault("name", "matmul")
             w = matmul_workload(**args)
         else:
@@ -378,12 +404,34 @@ class TuningSpec:
                 raise ValueError(
                     f"workload_args {sorted(args)} are only valid for "
                     f"workload='matmul' (besides 'scale')")
-            w = PAPER_WORKLOADS.get(self.workload)
+            w = PAPER_WORKLOADS.get(name)
             if w is None:
                 raise ValueError(
-                    f"unknown workload {self.workload!r} (known: "
+                    f"unknown workload {name!r} (known: "
                     f"{', '.join(sorted(PAPER_WORKLOADS))}, matmul)")
         return w.scaled(scale) if scale is not None else w
+
+    def build_workload(self) -> Workload:
+        return self._resolve_workload(self.workload, self.workload_args)
+
+    def build_peers(self) -> list[Workload]:
+        """The ``surrogate_peers`` entries as workloads (each resolved
+        exactly like the spec's own workload)."""
+        peers = []
+        for i, entry in enumerate(self.surrogate_peers):
+            if not isinstance(entry, dict) or "workload" not in entry:
+                raise ValueError(
+                    f"surrogate_peers[{i}] must be an object with a "
+                    f"'workload' field (and optional 'workload_args'), "
+                    f"got {entry!r}")
+            unknown = set(entry) - {"workload", "workload_args"}
+            if unknown:
+                raise ValueError(
+                    f"surrogate_peers[{i}]: unknown field(s) "
+                    f"{sorted(unknown)}")
+            peers.append(self._resolve_workload(
+                entry["workload"], entry.get("workload_args", {})))
+        return peers
 
     def build_space(self, workload: Workload) -> SearchSpace:
         args = dict(self.space_args)
@@ -406,6 +454,8 @@ class TuningSpec:
         session = TuningSession(
             self.build_backend(),
             store=self.store, surrogate=self.surrogate, cache=self.cache,
+            surrogate_scope=self.surrogate_scope,
+            surrogate_peers=self.build_peers(),
         )
         return session.tune(
             workload, self.build_space(workload),
@@ -429,7 +479,10 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--budget", type=int, default=None,
                     help="override the spec's experiment budget")
     ap.add_argument("--store", default=None,
-                    help="override the spec's result-store path")
+                    help="override the spec's result-store target (path or "
+                         "jsonl://... / sqlite://... URI; an empty string "
+                         "explicitly disables the store, beating "
+                         "CC_RESULT_STORE)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress the per-run summary line")
     args = ap.parse_args(argv)

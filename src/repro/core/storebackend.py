@@ -1,0 +1,775 @@
+"""Pluggable storage backends for the persistent measurement store.
+
+PR 2 introduced the :class:`~repro.core.resultstore.ResultStore` as a single
+hard-coded JSONL file.  That format is ideal for the append-only measurement
+log of one machine — line-atomic ``O_APPEND`` writes, corruption-tolerant
+reads — but it is a full-file scan per query, which stops scaling past ~10⁵
+records, and everything that consumed it was welded to the concrete class.
+This module splits the *format* out of the *store*:
+
+* :class:`StoreRecord` — one parsed measurement: ``(workload fingerprint,
+  backend scope, canonical key, Result)``.  The schema is the same for every
+  backend; :data:`SCHEMA_VERSION` governs all of them.
+* :class:`StoreBackend` — the protocol every on-disk format implements:
+  ``append`` (atomic batch), ``iter_records`` (tolerant, file order),
+  ``query`` (by workload/scope, indexed where the format allows),
+  ``compact`` (newest record per key), ``rewrite`` (atomic replace — the
+  federation/merge primitive), ``count``/``size_bytes``/``close``.
+* :class:`JsonlStoreBackend` — the PR 2 format, byte-for-byte: existing
+  stores load unchanged, appended lines are byte-identical to what the old
+  monolithic class wrote, and the atomic-compaction inode-swap contract
+  (``os.replace`` + per-batch ``fstat``/``stat`` descriptor revalidation) is
+  preserved verbatim.
+* :class:`SqliteStoreBackend` — an indexed ``sqlite3`` database for stores
+  that outgrow the scan: one ``records`` table with a ``(w, s)`` index, WAL
+  journaling when the filesystem supports it, batch appends in one
+  transaction.  Concurrent writers coordinate through SQLite's own locking
+  (``busy_timeout``) instead of ``O_APPEND``.
+* :func:`resolve_backend` — backend selection by URI scheme
+  (``jsonl://path``, ``sqlite://path``) or path suffix (``.sqlite`` /
+  ``.sqlite3`` / ``.db`` → SQLite, everything else JSONL).
+
+The :class:`~repro.core.resultstore.ResultStore` facade owns everything
+format-independent (process-wide sharing, the per-process written-set dedup,
+scope-relaxed queries, federation merge, auto-compaction) and delegates the
+bytes to one of these backends.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import logging
+import os
+import sqlite3
+import threading
+from dataclasses import dataclass
+from typing import Iterable, Iterator, Sequence
+
+from .loopnest import encode_key, tuplize
+from .measure import Result
+
+_log = logging.getLogger("repro.core.storebackend")
+
+SCHEMA_VERSION = 1
+
+#: Path suffixes that select the SQLite backend when no URI scheme is given.
+SQLITE_SUFFIXES = (".sqlite", ".sqlite3", ".db")
+
+
+class StoreBrokenError(RuntimeError):
+    """The store's file is not usable by its backend (e.g. a non-SQLite
+    file behind a ``sqlite://`` target).  Best-effort paths (tuning-run
+    appends, reads) tolerate this as a cold start; *maintenance* operations
+    that must not silently lose data (federation merge / rewrite) raise it
+    instead of reporting success."""
+
+
+@dataclass(frozen=True)
+class StoreRecord:
+    """One persisted measurement, independent of the on-disk format."""
+
+    workload_fp: str
+    scope: str
+    key: tuple
+    result: Result
+
+    def sig(self) -> tuple[str, str, str]:
+        """The dedup/merge identity: ``(workload, scope, encoded key)``."""
+        return (self.workload_fp, self.scope, encode_key(self.key))
+
+
+def _parse_result(r: dict) -> Result:
+    """Record payload → :class:`Result` (raises on structural garbage)."""
+    return Result(
+        status=str(r["status"]),
+        time_s=None if r.get("time_s") is None else float(r["time_s"]),
+        note=str(r.get("note", "")),
+    )
+
+
+def split_store_target(target: str | os.PathLike) -> tuple[str, str]:
+    """``(backend kind, filesystem path)`` for a store path or URI.
+
+    ``jsonl://`` / ``sqlite://`` URI schemes select explicitly
+    (``sqlite:///abs/path`` keeps the absolute path); without a scheme the
+    path suffix decides: :data:`SQLITE_SUFFIXES` → ``sqlite``, anything else
+    → ``jsonl`` (the historical default, so every pre-existing store path
+    keeps meaning what it always meant).
+    """
+    s = os.fspath(target)
+    for kind in ("jsonl", "sqlite"):
+        prefix = kind + "://"
+        if s.startswith(prefix):
+            path = s[len(prefix):]
+            if not path:
+                raise ValueError(f"store URI {s!r} has an empty path")
+            return kind, path
+    if s.lower().endswith(SQLITE_SUFFIXES):
+        return "sqlite", s
+    return "jsonl", s
+
+
+def _is_legacy_jsonl_file(path: str) -> bool:
+    """True iff ``path`` holds a non-empty file that is *not* SQLite —
+    i.e. a store written before the pluggable backends existed (every
+    pre-PR store is JSONL regardless of its suffix)."""
+    try:
+        with open(path, "rb") as f:
+            head = f.read(16)
+    except OSError:
+        return False
+    return len(head) > 0 and head != b"SQLite format 3\x00"
+
+
+def resolve_backend(target: str | os.PathLike) -> "StoreBackend":
+    """Construct the backend a store path/URI selects (file not opened yet —
+    every backend opens lazily on first use).
+
+    Backward compatibility: a *suffix*-resolved SQLite target whose file
+    already exists with non-SQLite contents is a pre-pluggable-backends
+    JSONL store (those were JSONL whatever the path was called) — it keeps
+    loading as JSONL, so existing stores never go dark behind a suffix
+    rule they predate.  An explicit ``sqlite://`` scheme is taken at its
+    word."""
+    kind, path = split_store_target(target)
+    if kind == "sqlite":
+        if ("://" not in os.fspath(target)
+                and _is_legacy_jsonl_file(path)):
+            _log.info(
+                "%s has a SQLite suffix but holds a pre-existing JSONL "
+                "store — keeping the JSONL backend (use migrate_store to "
+                "convert it)", path)
+            return JsonlStoreBackend(path)
+        return SqliteStoreBackend(path)
+    return JsonlStoreBackend(path)
+
+
+def _match(rec_w: str, rec_s: str, workload_fp: str | None,
+           scope: str | None, scope_kind: str | None) -> bool:
+    if workload_fp is not None and rec_w != workload_fp:
+        return False
+    if scope is not None and rec_s != scope:
+        return False
+    if scope_kind is not None and backend_kind_of(rec_s) != scope_kind:
+        return False
+    return True
+
+
+def backend_kind_of(scope: str) -> str:
+    """The backend *kind* of a scope string — the prefix before the first
+    ``:`` or ``@`` (``"wallclock:scale=0.1:...@host-8c"`` → ``"wallclock"``).
+    This is what the relaxed query policies match on: scopes of the same
+    kind measure comparable quantities even when host/scale/config differ.
+    """
+    for i, ch in enumerate(scope):
+        if ch in ":@":
+            return scope[:i]
+    return scope
+
+
+class StoreBackend:
+    """Protocol every on-disk store format implements.
+
+    Instances are cheap to construct and open their file lazily.  One
+    instance is *not* thread-safe on its own — the
+    :class:`~repro.core.resultstore.ResultStore` facade serializes access
+    per instance; cross-*process* coordination is each backend's own
+    business (``O_APPEND`` line atomicity for JSONL, SQLite locking for
+    SQLite).
+    """
+
+    kind: str = "abstract"
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+
+    # -- write ---------------------------------------------------------------
+
+    def append(self, records: Sequence[StoreRecord]) -> int:
+        """Persist a batch atomically (all-or-nothing per batch).  Returns
+        the number of records written.  No dedup at this layer — the facade
+        owns the per-process written-set; duplicates here are deliberate
+        (e.g. :func:`~repro.core.resultstore.migrate_store` preserving a
+        source store verbatim)."""
+        raise NotImplementedError
+
+    def rewrite(self, records: Sequence[StoreRecord]) -> None:
+        """Atomically replace the whole store with ``records`` (in order) —
+        the primitive federation merge builds on.  A crash mid-rewrite must
+        never lose the previous contents."""
+        raise NotImplementedError
+
+    def compact(self, sig_sink: "set | None" = None) -> dict[str, int]:
+        """Drop duplicate / foreign-schema / unparseable entries keeping the
+        newest record per ``(workload, scope, key)``; returns ``{"kept",
+        "dropped_duplicates", "dropped_foreign", "dropped_corrupt"}``.
+        ``sig_sink``, when given, receives the surviving records'
+        :meth:`StoreRecord.sig` identities — the facade refreshes its
+        written-set from it without a second full scan."""
+        raise NotImplementedError
+
+    # -- read ----------------------------------------------------------------
+
+    def iter_records(self) -> Iterator[StoreRecord]:
+        """Every parseable current-schema record, in on-disk order,
+        duplicates included.  Corrupt entries and other schema versions are
+        skipped silently (corruption/version tolerance)."""
+        raise NotImplementedError
+
+    def query(
+        self,
+        workload_fp: str | None = None,
+        scope: str | None = None,
+        scope_kind: str | None = None,
+    ) -> Iterator[StoreRecord]:
+        """Records matching the given filters, in on-disk order.  ``scope``
+        matches exactly; ``scope_kind`` matches :func:`backend_kind_of`.
+        Backends with an index use it (SQLite); others scan."""
+        for rec in self.iter_records():
+            if _match(rec.workload_fp, rec.scope, workload_fp, scope,
+                      scope_kind):
+                yield rec
+
+    @contextlib.contextmanager
+    def exclusive(self):
+        """Hold this backend's cross-process write exclusion across a
+        compound read→:meth:`rewrite` operation (federation merge): records
+        another process appends after the read must not be destroyed by the
+        rewrite.  JSONL holds its compaction ``flock``; SQLite holds a write
+        transaction.  Default: no coordination."""
+        yield
+
+    def count(self) -> int:
+        """Parseable current-schema entries (diagnostics only)."""
+        return sum(1 for _ in self.iter_records())
+
+    def size_bytes(self) -> int:
+        """On-disk size (0 when the store does not exist yet)."""
+        try:
+            return os.stat(self.path).st_size
+        except OSError:
+            return 0
+
+    def close(self) -> None:
+        """Release descriptors/connections; the backend reopens lazily."""
+
+
+# ---------------------------------------------------------------------------
+# JSONL — the PR 2 format, byte-compatible
+# ---------------------------------------------------------------------------
+
+
+class JsonlStoreBackend(StoreBackend):
+    """Append-only JSONL, byte-for-byte the PR 2 on-disk format.
+
+    Record format (one JSON object per line)::
+
+        {"v": 1, "w": "<workload fingerprint>", "s": "<backend scope>",
+         "k": <canonical key as nested arrays>,
+         "r": {"status": "ok", "time_s": 1.23, "note": ""}}
+
+    Durability properties (unchanged from the monolithic ``ResultStore``):
+
+    * **Atomic appends** — each batch is a single ``os.write`` to an
+      ``O_APPEND`` descriptor, so concurrent writers interleave at line
+      granularity, never inside a line.
+    * **Corruption tolerance** — iteration skips lines that fail to parse
+      (e.g. a truncated final line after a crash) and records of a different
+      schema version; everything parseable is still replayed.
+    * **Inode-swap contract** — a concurrent :meth:`compact`/:meth:`rewrite`
+      (possibly in another process) ``os.replace``\\ s the file; an
+      ``O_APPEND`` descriptor would keep writing to the unlinked old inode
+      and every later record would silently vanish.  One ``fstat``/``stat``
+      pair per batch detects the swap and reopens the new file.
+    * **Compaction/append exclusion** — records appended by another process
+      *during* a compaction's read→replace window would be lost to the
+      replace.  Writers therefore take a shared ``flock`` on a ``.lock``
+      sidecar around each batch and compaction/rewrite take it exclusive,
+      so cooperating processes never interleave a write into that window
+      (auto-compaction relies on this).  Where ``flock`` is unavailable the
+      lock degrades to a no-op and compaction falls back to the documented
+      maintenance contract: run it when nothing else is writing.
+    """
+
+    kind = "jsonl"
+
+    def __init__(self, path: str | os.PathLike):
+        super().__init__(path)
+        self._fd: int | None = None
+        self._lock_held = False
+
+    @contextlib.contextmanager
+    def _locked(self, exclusive: bool):
+        """Cross-process advisory lock on the ``.lock`` sidecar (never the
+        store file itself — that inode gets swapped by compaction; the
+        sidecar persists next to the store, ~0 bytes).  Shared for appends,
+        exclusive for compact/rewrite/merge; reentrant within one instance
+        (:meth:`exclusive` wraps :meth:`rewrite`); degrades to unlocked on
+        platforms/filesystems without ``flock``."""
+        if self._lock_held:
+            # already held by this instance (facade-serialized) — a second
+            # flock on a fresh descriptor of the same file would deadlock
+            yield
+            return
+        try:
+            import fcntl
+        except ImportError:
+            yield
+            return
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        try:
+            fd = os.open(self.path + ".lock",
+                         os.O_CREAT | os.O_RDWR, 0o644)
+        except OSError:
+            yield
+            return
+        try:
+            try:
+                fcntl.flock(fd, fcntl.LOCK_EX if exclusive
+                            else fcntl.LOCK_SH)
+            except OSError:
+                pass        # e.g. NFS without lock support — proceed unlocked
+            self._lock_held = True
+            yield
+        finally:
+            self._lock_held = False
+            os.close(fd)    # closing the descriptor releases the lock
+
+    def exclusive(self):
+        return self._locked(exclusive=True)
+
+    @staticmethod
+    def encode_line(rec: StoreRecord) -> str:
+        """The canonical (and historical) serialization of one record."""
+        return json.dumps(
+            {
+                "v": SCHEMA_VERSION,
+                "w": rec.workload_fp,
+                "s": rec.scope,
+                "k": rec.key,   # nested tuples serialize as JSON arrays
+                "r": {"status": rec.result.status,
+                      "time_s": rec.result.time_s,
+                      "note": rec.result.note},
+            },
+            separators=(",", ":"),
+        )
+
+    @staticmethod
+    def _decode_line(line: str) -> StoreRecord | None:
+        try:
+            obj = json.loads(line)
+        except (ValueError, TypeError):
+            return None         # truncated/corrupt line — tolerate
+        if not isinstance(obj, dict) or obj.get("v") != SCHEMA_VERSION:
+            return None         # schema mismatch — clean cold start
+        try:
+            return StoreRecord(
+                workload_fp=str(obj["w"]),
+                scope=str(obj["s"]),
+                key=tuplize(obj["k"]),
+                result=_parse_result(obj["r"]),
+            )
+        except (KeyError, TypeError, ValueError):
+            return None         # structurally invalid record — tolerate
+
+    # -- write ---------------------------------------------------------------
+
+    def _revalidate_fd(self) -> None:
+        if self._fd is None:
+            return
+        try:
+            if os.fstat(self._fd).st_ino != os.stat(self.path).st_ino:
+                os.close(self._fd)
+                self._fd = None
+        except OSError:
+            os.close(self._fd)
+            self._fd = None
+
+    def append(self, records: Sequence[StoreRecord]) -> int:
+        if not records:
+            return 0
+        data = ("\n".join(self.encode_line(r) for r in records) + "\n"
+                ).encode("utf-8")
+        # Shared lock: a concurrent compact/rewrite (exclusive) cannot
+        # replace the file between our inode revalidation and the write.
+        with self._locked(exclusive=False):
+            self._revalidate_fd()
+            if self._fd is None:
+                d = os.path.dirname(self.path)
+                if d:
+                    os.makedirs(d, exist_ok=True)
+                self._fd = os.open(
+                    self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644
+                )
+            os.write(self._fd, data)       # single write → line-atomic
+        return len(records)
+
+    def rewrite(self, records: Sequence[StoreRecord]) -> None:
+        with self._locked(exclusive=True):
+            self._replace_lines([self.encode_line(r) for r in records])
+
+    def _replace_lines(self, lines: Iterable[str]) -> None:
+        """Temp file + ``os.replace`` so a crash can never lose the log; the
+        stale ``O_APPEND`` descriptor is dropped (it points at the replaced
+        inode) and reopened lazily by the next append."""
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".compact.tmp"
+        with open(tmp, "w", encoding="utf-8") as out:
+            for line in lines:
+                out.write(line + "\n")
+        os.replace(tmp, self.path)
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+    def compact(self, sig_sink: "set | None" = None) -> dict[str, int]:
+        stats = {"kept": 0, "dropped_duplicates": 0, "dropped_foreign": 0,
+                 "dropped_corrupt": 0}
+        if not os.path.exists(self.path):
+            return stats    # nothing on disk — and a no-op must not leave
+                            # a .lock sidecar / parent dir behind either
+        # Exclusive lock over the whole read→replace window: concurrent
+        # appends (shared lock) wait, so their records cannot vanish.
+        with self._locked(exclusive=True):
+            try:
+                f = open(self.path, "r", encoding="utf-8")
+            except OSError:
+                return stats        # vanished between the check and here
+            # Raw lines are kept verbatim (not re-serialized), preserving the
+            # original bytes of every surviving record.
+            newest: dict[tuple[str, str, str], str] = {}
+            with f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        obj = json.loads(line)
+                    except (ValueError, TypeError):
+                        stats["dropped_corrupt"] += 1
+                        continue
+                    if (not isinstance(obj, dict)
+                            or obj.get("v") != SCHEMA_VERSION):
+                        stats["dropped_foreign"] += 1
+                        continue
+                    try:
+                        sig = (str(obj["w"]), str(obj["s"]),
+                               encode_key(tuplize(obj["k"])))
+                    except (KeyError, TypeError, ValueError):
+                        stats["dropped_corrupt"] += 1
+                        continue
+                    if sig in newest:
+                        stats["dropped_duplicates"] += 1
+                    newest[sig] = line      # newest record wins
+            stats["kept"] = len(newest)
+            self._replace_lines(newest.values())
+        if sig_sink is not None:
+            sig_sink.update(newest)
+        return stats
+
+    # -- read ----------------------------------------------------------------
+
+    def iter_records(self) -> Iterator[StoreRecord]:
+        try:
+            f = open(self.path, "r", encoding="utf-8")
+        except OSError:
+            return
+        with f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = self._decode_line(line)
+                if rec is not None:
+                    yield rec
+
+    def close(self) -> None:
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+
+# ---------------------------------------------------------------------------
+# SQLite — indexed, for stores past the full-scan regime
+# ---------------------------------------------------------------------------
+
+_SQLITE_SCHEMA = """
+CREATE TABLE IF NOT EXISTS records (
+    id     INTEGER PRIMARY KEY,
+    v      INTEGER NOT NULL,
+    w      TEXT    NOT NULL,
+    s      TEXT    NOT NULL,
+    k      TEXT    NOT NULL,
+    status TEXT    NOT NULL,
+    time_s REAL,
+    note   TEXT    NOT NULL DEFAULT ''
+);
+CREATE INDEX IF NOT EXISTS idx_records_scope ON records (w, s);
+"""
+
+
+class SqliteStoreBackend(StoreBackend):
+    """Indexed ``sqlite3`` store: one ``records`` table, ``(w, s)`` index.
+
+    Selected by a ``sqlite://`` URI or a ``.sqlite``/``.sqlite3``/``.db``
+    path suffix.  Semantics mirror the JSONL backend record-for-record —
+    same schema version, append-only rows in insertion (= rowid) order,
+    records of other schema versions ignored on read, newest-per-key
+    compaction — but queries by ``(workload, scope)`` hit the index instead
+    of scanning the file, which is the point once a store grows past ~10⁵
+    records.  Batch appends are one transaction (atomic), and concurrent
+    writers from other threads/processes coordinate through SQLite's own
+    file locking (``busy_timeout`` retries instead of failing fast).
+
+    Corruption tolerance mirrors the JSONL contract: a file that is not a
+    usable SQLite database (a mistargeted JSONL store, a truncated file)
+    means a clean cold start, never a crash — the backend logs one warning,
+    reads as empty, and drops appends until the path is fixed (the tuning
+    run always proceeds; only persistence is lost).  The file is never
+    clobbered: it may be a healthy store of another format.
+    """
+
+    kind = "sqlite"
+
+    def __init__(self, path: str | os.PathLike):
+        super().__init__(path)
+        self._conn: sqlite3.Connection | None = None
+        self._conn_lock = threading.Lock()
+        self._broken = False
+
+    def _file_is_foreign(self) -> bool:
+        """True iff the path holds a non-empty file that is definitely not
+        SQLite (wrong magic) — e.g. a mistargeted JSONL store.  Empty and
+        unreadable files are *not* foreign: they may be a database another
+        process is creating this very moment."""
+        return _is_legacy_jsonl_file(self.path)
+
+    def _connect(self) -> sqlite3.Connection | None:
+        with self._conn_lock:
+            if self._broken:
+                return None
+            if self._conn is not None:
+                return self._conn
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            # Retries cover the cross-process creation race: a connection
+            # opening the file while another process is writing the very
+            # first header/schema can transiently see "not a database" or
+            # a busy lock.  A *foreign* file (wrong magic) is permanent.
+            last: Exception | None = None
+            for attempt in range(5):
+                conn = sqlite3.connect(
+                    self.path, timeout=30.0, check_same_thread=False
+                )
+                try:
+                    conn.execute("PRAGMA busy_timeout=30000")
+                    try:
+                        # WAL lets a reader proceed under a concurrent
+                        # writer; unsupported filesystems / lock contention
+                        # on the mode switch fall back to the default
+                        # journal silently.
+                        conn.execute("PRAGMA journal_mode=WAL")
+                    except sqlite3.OperationalError:
+                        pass
+                    conn.executescript(_SQLITE_SCHEMA)
+                    conn.commit()
+                except sqlite3.Error as e:
+                    conn.close()
+                    last = e
+                    if isinstance(e, sqlite3.DatabaseError) \
+                            and not isinstance(e, sqlite3.OperationalError) \
+                            and self._file_is_foreign():
+                        break       # genuinely not a database — no retry
+                    import time
+                    time.sleep(0.05 * (attempt + 1))
+                    continue
+                self._conn = conn
+                return self._conn
+            self._broken = True
+            _log.warning(
+                "%s is not a usable SQLite database (%s) — store disabled "
+                "for this process (reads empty, appends dropped); fix or "
+                "migrate the path", self.path, last)
+            return None
+
+    @staticmethod
+    def _row_to_record(row: tuple) -> StoreRecord | None:
+        w, s, k, status, time_s, note = row
+        try:
+            return StoreRecord(
+                workload_fp=str(w),
+                scope=str(s),
+                key=tuplize(json.loads(k)),
+                result=_parse_result(
+                    {"status": status, "time_s": time_s, "note": note}),
+            )
+        except (KeyError, TypeError, ValueError):
+            return None         # structurally invalid row — tolerate
+
+    def _insert_many(self, conn: sqlite3.Connection,
+                     records: Sequence[StoreRecord]) -> None:
+        conn.executemany(
+            "INSERT INTO records (v, w, s, k, status, time_s, note) "
+            "VALUES (?, ?, ?, ?, ?, ?, ?)",
+            [(SCHEMA_VERSION, r.workload_fp, r.scope, encode_key(r.key),
+              r.result.status, r.result.time_s, r.result.note)
+             for r in records],
+        )
+
+    # -- write ---------------------------------------------------------------
+
+    def append(self, records: Sequence[StoreRecord]) -> int:
+        if not records:
+            return 0
+        conn = self._connect()
+        if conn is None:
+            return 0            # broken database — drop, never crash
+        with conn:              # one transaction → atomic batch
+            self._insert_many(conn, records)
+        return len(records)
+
+    def rewrite(self, records: Sequence[StoreRecord]) -> None:
+        conn = self._connect()
+        if conn is None:
+            # a silently dropped rewrite would let a federation merge
+            # report success while persisting nothing — fail loudly
+            raise StoreBrokenError(
+                f"{self.path} is not a usable SQLite database — rewrite "
+                f"refused (fix or migrate the path)")
+        with conn:              # delete+insert in one transaction: a crash
+            conn.execute("DELETE FROM records")     # rolls back to the old
+            self._insert_many(conn, records)        # contents, never loses
+        self._vacuum(conn)
+
+    def compact(self, sig_sink: "set | None" = None) -> dict[str, int]:
+        stats = {"kept": 0, "dropped_duplicates": 0, "dropped_foreign": 0,
+                 "dropped_corrupt": 0}
+        if not os.path.exists(self.path):
+            return stats
+        conn = self._connect()
+        if conn is None:
+            return stats
+        with conn:
+            cur = conn.execute(
+                "DELETE FROM records WHERE v != ?", (SCHEMA_VERSION,))
+            stats["dropped_foreign"] = cur.rowcount
+            # rows no reader can parse (externally corrupted columns) are
+            # dead weight too — same contract as the JSONL backend
+            bad = [
+                row_id
+                for row_id, *rest in conn.execute(
+                    "SELECT id, w, s, k, status, time_s, note FROM records")
+                if self._row_to_record(tuple(rest)) is None
+            ]
+            conn.executemany("DELETE FROM records WHERE id = ?",
+                             [(i,) for i in bad])
+            stats["dropped_corrupt"] = len(bad)
+            # newest record per (w, s, k) = the max rowid of the group
+            cur = conn.execute(
+                "DELETE FROM records WHERE id NOT IN "
+                "(SELECT MAX(id) FROM records GROUP BY w, s, k)")
+            stats["dropped_duplicates"] = cur.rowcount
+            stats["kept"] = conn.execute(
+                "SELECT COUNT(*) FROM records").fetchone()[0]
+        self._vacuum(conn)
+        if sig_sink is not None:
+            # the k column *is* the encoded key, so (w, s, k) rows are the
+            # survivors' sigs verbatim — no record reconstruction needed
+            sig_sink.update(
+                (str(w), str(s), str(k))
+                for w, s, k in conn.execute(
+                    "SELECT w, s, k FROM records WHERE v = ?",
+                    (SCHEMA_VERSION,)))
+        return stats
+
+    @contextlib.contextmanager
+    def exclusive(self):
+        """Write-transaction exclusion for the merge read→rewrite window:
+        ``BEGIN IMMEDIATE`` takes the database write lock up front, so
+        another process cannot commit appends between our read and the
+        rewrite (they queue behind ``busy_timeout`` and land afterwards).
+        The nested :meth:`rewrite` transaction commits the whole unit."""
+        conn = self._connect()
+        if conn is None:
+            yield
+            return
+        conn.execute("BEGIN IMMEDIATE")
+        try:
+            yield
+        except BaseException:
+            conn.rollback()
+            raise
+        finally:
+            if conn.in_transaction:
+                conn.commit()
+
+    @staticmethod
+    def _vacuum(conn: sqlite3.Connection) -> None:
+        """Space reclamation is an optimization: the data change already
+        committed, so a lock held by a concurrent reader must not turn a
+        successful compact/rewrite into an apparent failure."""
+        try:
+            conn.execute("VACUUM")
+        except sqlite3.OperationalError:
+            pass
+
+    # -- read ----------------------------------------------------------------
+
+    def iter_records(self) -> Iterator[StoreRecord]:
+        yield from self.query()
+
+    def query(
+        self,
+        workload_fp: str | None = None,
+        scope: str | None = None,
+        scope_kind: str | None = None,
+    ) -> Iterator[StoreRecord]:
+        if not os.path.exists(self.path):
+            return
+        where, params = ["v = ?"], [SCHEMA_VERSION]
+        if workload_fp is not None:
+            where.append("w = ?")
+            params.append(workload_fp)
+        if scope is not None:
+            where.append("s = ?")
+            params.append(scope)
+        # scope_kind has no SQL form (kind ends at the first ':' or '@');
+        # refine in Python below.
+        conn = self._connect()
+        if conn is None:
+            return              # broken database — clean cold start
+        rows = conn.execute(
+            "SELECT w, s, k, status, time_s, note FROM records "
+            f"WHERE {' AND '.join(where)} ORDER BY id",
+            params,
+        )
+        for row in rows:
+            rec = self._row_to_record(row)
+            if rec is None:
+                continue
+            if (scope_kind is not None
+                    and backend_kind_of(rec.scope) != scope_kind):
+                continue
+            yield rec
+
+    def count(self) -> int:
+        if not os.path.exists(self.path):
+            return 0
+        conn = self._connect()
+        if conn is None:
+            return 0
+        return conn.execute(
+            "SELECT COUNT(*) FROM records WHERE v = ?", (SCHEMA_VERSION,)
+        ).fetchone()[0]
+
+    def close(self) -> None:
+        with self._conn_lock:
+            if self._conn is not None:
+                self._conn.close()
+                self._conn = None

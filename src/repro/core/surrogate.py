@@ -323,10 +323,17 @@ class Surrogate:
         self.refit_every = int(refit_every)
         self.n_rounds = int(n_rounds)
         self.learning_rate = float(learning_rate)
-        # encoded key → (key, log_time); encoded-key dict gives O(1) dedup
-        # and a canonical (sorted) fit order independent of insertion order.
-        self._samples: dict[str, tuple[tuple, float]] = {}
-        self._feat_cache: dict[tuple, np.ndarray] = {}
+        # (workload fingerprint, encoded key) → (key, log_time, workload);
+        # the id dict gives O(1) dedup and a canonical (sorted) fit order
+        # independent of insertion order.  The workload travels with each
+        # sample because the training set may pool records across workloads
+        # (cross-workload transfer, arXiv:2102.13514): every sample is
+        # featurized against the workload it was measured on, while
+        # prediction always targets ``self.workload``.
+        self._samples: dict[tuple[str, str], tuple[tuple, float, Workload]] = {}
+        self._feat_cache: dict[tuple[str, tuple], np.ndarray] = {}
+        self._skipped_foreign = 0   # pooled records with unknown fingerprints
+        self._pooled: set[tuple[str, str]] = set()  # relaxed-scope samples
         self._pending = 0           # observations since the last fit
         self._fitted = False
         self._version = 0
@@ -346,20 +353,56 @@ class Surrogate:
 
     @classmethod
     def fit(cls, store, workload: Workload, scope: str,
-            machine: Machine | None = None, **kwargs) -> "Surrogate":
-        """Fit a surrogate from every stored ``ok`` record of one
-        (workload, backend scope) — the measurement log the
+            machine: Machine | None = None, scope_policy: str = "exact",
+            peers: Sequence[Workload] = (), **kwargs) -> "Surrogate":
+        """Fit a surrogate from the stored ``ok`` records the
         :class:`~repro.core.resultstore.ResultStore` accumulates across runs.
 
-        ``store`` is a :class:`ResultStore` or a path to one.
+        ``store`` is a :class:`ResultStore` or a path/URI to one.
+        ``scope_policy`` relaxes the training set (see
+        :meth:`ResultStore.query`): ``"exact"`` trains on this
+        (workload, scope) only — the historical behavior; ``"same_backend"``
+        pools this workload's records across scopes of the same backend
+        kind; ``"cross_workload"`` pools *every* workload's records of the
+        same backend kind, so a kernel the store has never measured starts
+        with a non-cold surrogate (workload extents are features).  Pooled
+        records are featurized against their own workload, resolved from the
+        paper workloads plus ``peers``; unresolvable fingerprints are
+        skipped (counted in :meth:`stats`).
         """
+        s = cls(workload, machine=machine, **kwargs)
+        s.fit_store(store, scope, scope_policy=scope_policy, peers=peers)
+        return s
+
+    def fit_store(self, store, scope: str, scope_policy: str = "exact",
+                  peers: Sequence[Workload] = ()) -> "Surrogate":
+        """Ingest a store's records under ``scope_policy`` (see :meth:`fit`)
+        and fit immediately.  Returns self for chaining."""
         from .resultstore import ResultStore
+        from .workloads import PAPER_WORKLOADS
 
         if not isinstance(store, ResultStore):
             store = ResultStore.shared(store)
-        s = cls(workload, machine=machine, **kwargs)
-        s.fit_items(store.load(workload.fingerprint(), scope).items())
-        return s
+        by_fp = {self.workload.fingerprint(): self.workload}
+        for p in peers:
+            by_fp.setdefault(p.fingerprint(), p)
+        for w in PAPER_WORKLOADS.values():
+            by_fp.setdefault(w.fingerprint(), w)
+        target_fp = self.workload.fingerprint()
+        for rec in store.query(target_fp, scope, policy=scope_policy):
+            w = by_fp.get(rec.workload_fp)
+            if w is None:
+                # a fingerprint no candidate workload matches cannot be
+                # featurized (no extents/accesses to reconstruct a nest)
+                self._skipped_foreign += 1
+                continue
+            # records outside this exact (workload, scope) are relaxed-scope
+            # training data — they must not shadow later local measurements
+            self.observe(rec.key, rec.result, workload=w,
+                         pooled=(rec.workload_fp != target_fp
+                                 or rec.scope != scope))
+        self._refit(force=True)
+        return self
 
     def fit_items(
         self, items: Iterable[tuple[tuple, "Result | float"]]
@@ -373,9 +416,21 @@ class Surrogate:
 
     # -- online accumulation ---------------------------------------------------
 
-    def observe(self, key: tuple, result: "Result | float") -> None:
+    def observe(self, key: tuple, result: "Result | float",
+                workload: Workload | None = None,
+                pooled: bool = False) -> None:
         """Record one measured structure.  Non-ok results, path keys (red
-        nodes have no structure) and duplicates are ignored."""
+        nodes have no structure) and duplicates are ignored.  ``workload``
+        is the workload the record was measured on — defaults to the
+        surrogate's own; pooled (cross-workload) training passes the source
+        workload so the sample's features reflect its true extents.
+
+        ``pooled`` marks a relaxed-scope training sample (another host,
+        scale, or backend config of the same structure).  Pooled samples
+        seed the model but never shadow local evidence: a later *local*
+        observation of the same structure **replaces** a pooled one — on a
+        host measuring 2× slower than the store's origin, the surrogate
+        must adapt to what this machine actually measures."""
         if isinstance(result, Result):
             if not result.ok or result.time_s is None:
                 return
@@ -384,10 +439,15 @@ class Surrogate:
             t = float(result)
         if t <= 0.0 or not isinstance(key, tuple) or (key and key[0] == "path"):
             return
-        ek = encode_key(key)
-        if ek in self._samples:
-            return
-        self._samples[ek] = (key, math.log(t))
+        w = workload if workload is not None else self.workload
+        sid = (w.fingerprint(), encode_key(key))
+        if sid in self._samples:
+            if pooled or sid not in self._pooled:
+                return          # first record wins within its class
+            self._pooled.discard(sid)   # local evidence displaces pooled
+        elif pooled:
+            self._pooled.add(sid)
+        self._samples[sid] = (key, math.log(t), w)
         self._pending += 1
 
     @property
@@ -403,11 +463,14 @@ class Surrogate:
 
     # -- fitting ---------------------------------------------------------------
 
-    def _features(self, key: tuple, nest: LoopNest | None = None) -> np.ndarray:
-        f = self._feat_cache.get(key)
+    def _features(self, key: tuple, nest: LoopNest | None = None,
+                  workload: Workload | None = None) -> np.ndarray:
+        w = workload if workload is not None else self.workload
+        cid = (w.fingerprint(), key)
+        f = self._feat_cache.get(cid)
         if f is None:
-            f = structure_features(key, self.workload, self.machine, nest=nest)
-            self._feat_cache[key] = f
+            f = structure_features(key, w, self.machine, nest=nest)
+            self._feat_cache[cid] = f
         return f
 
     def _refit(self, force: bool = False) -> None:
@@ -417,8 +480,9 @@ class Surrogate:
             return
         # canonical order: byte-identical fits regardless of insertion order
         ordered = sorted(self._samples.items())
-        X = np.stack([self._features(key) for _, (key, _) in ordered])
-        y = np.array([lt for _, (_, lt) in ordered])
+        X = np.stack([self._features(key, workload=w)
+                      for _, (key, _, w) in ordered])
+        y = np.array([lt for _, (_, lt, _) in ordered])
         if self.model == "ridge":
             self._fit_ridge(X, y)
         else:
@@ -556,6 +620,9 @@ class Surrogate:
         return {
             "model": self.model,
             "n_samples": len(self._samples),
+            "n_workloads": len({fp for fp, _ in self._samples}),
+            "n_pooled": len(self._pooled),
+            "skipped_foreign": self._skipped_foreign,
             "fitted": self._fitted,
             "version": self._version,
             "resid_std": (math.sqrt(self._s2) if self.model == "ridge"

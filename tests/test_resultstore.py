@@ -1,8 +1,11 @@
 """Persistent result store: round-trips, corruption/version tolerance,
-concurrent appends, engine warm starts, and the measurement-subsystem
-plumbing (stable fingerprints, backend scopes, wallclock batching rules)."""
+concurrent appends (both backends), engine warm starts, store-target
+precedence, auto-compaction, the committed pre-refactor fixture A/B, and
+the measurement-subsystem plumbing (stable fingerprints, backend scopes,
+wallclock batching rules)."""
 
 import json
+import logging
 import os
 import threading
 
@@ -19,18 +22,32 @@ from repro.core import (
     ResultStore,
     SearchSpace,
     Tile,
+    TuningSession,
     WallclockBackend,
 )
 from repro.core.evaluation import EvaluationEngine
 from repro.core.loopnest import decode_key, encode_key
 from repro.core.resultstore import SCHEMA_VERSION
 
-
-def make_store(tmp_path, name="store.jsonl"):
-    return ResultStore(tmp_path / name)
-
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures")
 
 SCOPE = "costmodel:test"
+
+STORE_KINDS = ("jsonl", "sqlite")
+
+
+def make_store(tmp_path, name="store.jsonl"):
+    return ResultStore.open(tmp_path / name)
+
+
+@pytest.fixture(params=STORE_KINDS)
+def store_kind(request):
+    return request.param
+
+
+def kind_store(tmp_path, kind, stem="store"):
+    return ResultStore.open(tmp_path / f"{stem}.{kind}")
 
 
 class TestKeyCodec:
@@ -65,29 +82,46 @@ class TestWorkloadFingerprint:
         assert GEMM.scaled(0.5).fingerprint() != GEMM.fingerprint()
 
 
+class TestDeprecatedSpelling:
+    def test_direct_constructor_warns(self, tmp_path):
+        with pytest.warns(DeprecationWarning, match="ResultStore.open"):
+            store = ResultStore(tmp_path / "old.jsonl")
+        # ... but keeps working (and resolves URIs like the new spelling)
+        store.append("w", SCOPE, (("i", 8, False, False, 1, 1, False),),
+                     Result("ok", time_s=1.0))
+        assert store.count() == 1
+
+    def test_open_and_shared_do_not_warn(self, tmp_path, recwarn):
+        ResultStore.open(tmp_path / "a.jsonl")
+        ResultStore.shared(tmp_path / "b.jsonl")
+        ResultStore.drop_shared(tmp_path / "b.jsonl")
+        assert not [w for w in recwarn.list
+                    if issubclass(w.category, DeprecationWarning)]
+
+
 class TestRoundTrip:
-    def test_append_load(self, tmp_path):
-        store = make_store(tmp_path)
+    def test_append_load(self, tmp_path, store_kind):
+        store = kind_store(tmp_path, store_kind)
         key = (("i", 2000, False, False, 1, 1, False),)
         store.append("wfp", SCOPE, key, Result("ok", time_s=1.25))
         store.append("wfp", SCOPE, ("path", ("Tile", ("i",), (4096,))),
                      Result("compile_error", note="tile too big"))
-        loaded = ResultStore(store.path).load("wfp", SCOPE)
+        loaded = ResultStore.open(store.path).load("wfp", SCOPE)
         assert loaded[key] == Result("ok", time_s=1.25)
         assert loaded[("path", ("Tile", ("i",), (4096,)))].status == \
             "compile_error"
 
-    def test_scope_isolation(self, tmp_path):
-        store = make_store(tmp_path)
+    def test_scope_isolation(self, tmp_path, store_kind):
+        store = kind_store(tmp_path, store_kind)
         key = (("i", 8, False, False, 1, 1, False),)
         store.append("w1", SCOPE, key, Result("ok", time_s=1.0))
-        fresh = ResultStore(store.path)
+        fresh = ResultStore.open(store.path)
         assert fresh.load("w2", SCOPE) == {}
         assert fresh.load("w1", "otherscope") == {}
         assert len(fresh.load("w1", SCOPE)) == 1
 
-    def test_duplicate_append_skipped(self, tmp_path):
-        store = make_store(tmp_path)
+    def test_duplicate_append_skipped(self, tmp_path, store_kind):
+        store = kind_store(tmp_path, store_kind)
         key = (("i", 8, False, False, 1, 1, False),)
         assert store.append_many("w", SCOPE,
                                  [(key, Result("ok", time_s=1.0))]) == 1
@@ -109,29 +143,75 @@ class TestCorruptionTolerance:
     def test_truncated_last_line_tolerated(self, tmp_path):
         p = tmp_path / "store.jsonl"
         p.write_text(self._good_line() + "\n" + self._good_line()[: 25])
-        loaded = ResultStore(p).load("w", SCOPE)
+        loaded = ResultStore.open(p).load("w", SCOPE)
         assert loaded == {self.KEY: Result("ok", time_s=2.0)}
 
     def test_garbage_lines_tolerated(self, tmp_path):
         p = tmp_path / "store.jsonl"
         p.write_text("\x00\x01 not json\n" + self._good_line() + "\n"
                      "{\"v\": 1, \"half\": \n")
-        assert len(ResultStore(p).load("w", SCOPE)) == 1
+        assert len(ResultStore.open(p).load("w", SCOPE)) == 1
 
     def test_schema_version_mismatch_is_cold_start(self, tmp_path):
         p = tmp_path / "store.jsonl"
         rec = json.loads(self._good_line())
         rec["v"] = SCHEMA_VERSION + 1
         p.write_text(json.dumps(rec) + "\n")
-        assert ResultStore(p).load("w", SCOPE) == {}
+        assert ResultStore.open(p).load("w", SCOPE) == {}
 
     def test_missing_file_is_cold_start(self, tmp_path):
-        assert ResultStore(tmp_path / "absent.jsonl").load("w", SCOPE) == {}
+        assert ResultStore.open(tmp_path / "absent.jsonl").load("w", SCOPE) \
+            == {}
+
+
+class TestPreRefactorFixture:
+    """Acceptance: a store file written by the pre-refactor monolithic
+    ``ResultStore`` (committed as a fixture) loads unchanged, and a warm
+    tuning run against it replays **byte-identically** to the TuningLog the
+    pre-refactor code produced (also committed)."""
+
+    STORE = os.path.join(FIXTURES, "pr2_store_gemm.jsonl")
+    LOG = os.path.join(FIXTURES, "pr2_warm_log_gemm.json")
+
+    def space(self):
+        return SearchSpace(root=GEMM.nest(), tile_sizes=(16, 64, 256),
+                           max_transformations=3)
+
+    def test_fixture_loads_unchanged(self):
+        store = ResultStore.open(self.STORE)
+        assert store.count() == 80
+        warm = store.load(GEMM.fingerprint(),
+                          CostModelBackend().store_scope())
+        assert len(warm) == 80
+
+    def test_warm_replay_byte_identical_to_pre_refactor(self, tmp_path):
+        import shutil
+
+        # replay from a copy: the test must never append to the fixture
+        copy = tmp_path / "fixture_copy.jsonl"
+        shutil.copyfile(self.STORE, copy)
+        warm = Autotuner(GEMM, self.space(), CostModelBackend(),
+                         max_experiments=80,
+                         store=ResultStore.open(copy)).run()
+        with open(self.LOG) as f:
+            assert warm.to_json() + "\n" == f.read()
+        assert warm.cache["preloaded"] == 80
+
+    def test_migrated_fixture_replays_identically_from_sqlite(self, tmp_path):
+        from repro.core import migrate_store
+
+        sql = f"sqlite://{tmp_path / 'fixture.sqlite'}"
+        migrate_store(self.STORE, sql)
+        warm = Autotuner(GEMM, self.space(), CostModelBackend(),
+                         max_experiments=80, store=sql).run()
+        ResultStore.drop_shared(sql)
+        with open(self.LOG) as f:
+            assert warm.to_json() + "\n" == f.read()
 
 
 class TestConcurrentAppends:
-    def test_threaded_appends_all_survive(self, tmp_path):
-        store = make_store(tmp_path)
+    def test_threaded_appends_all_survive(self, tmp_path, store_kind):
+        store = kind_store(tmp_path, store_kind)
         n_threads, per_thread = 8, 50
 
         def writer(t):
@@ -146,29 +226,124 @@ class TestConcurrentAppends:
         for th in threads:
             th.join()
         store.close()
-        loaded = ResultStore(store.path).load("w", SCOPE)
+        loaded = ResultStore.open(store.path).load("w", SCOPE)
         assert len(loaded) == n_threads * per_thread
-        # every line parseable — no interleaved partial writes
-        with open(store.path) as f:
-            for line in f:
-                json.loads(line)
+        if store_kind == "jsonl":
+            # every line parseable — no interleaved partial writes
+            with open(store.path) as f:
+                for line in f:
+                    json.loads(line)
 
-    def test_two_store_instances_same_file(self, tmp_path):
-        """Two processes sharing one path: O_APPEND keeps lines whole and
-        loads see the union (modelled here with two instances)."""
-        a = make_store(tmp_path)
-        b = ResultStore(a.path)
+    def test_two_store_instances_same_file(self, tmp_path, store_kind):
+        """Two processes sharing one store: O_APPEND (jsonl) / file locking
+        (sqlite) keep records whole and loads see the union (modelled here
+        with two instances)."""
+        a = kind_store(tmp_path, store_kind)
+        b = ResultStore.open(a.path)
         k1 = (("i", 1, False, False, 1, 1, False),)
         k2 = (("i", 2, False, False, 1, 1, False),)
         a.append("w", SCOPE, k1, Result("ok", time_s=1.0))
         b.append("w", SCOPE, k2, Result("ok", time_s=2.0))
-        loaded = ResultStore(a.path).load("w", SCOPE)
+        loaded = ResultStore.open(a.path).load("w", SCOPE)
         assert set(loaded) == {k1, k2}
+
+    def test_reader_sees_writer_appends_interleaved(self, tmp_path,
+                                                    store_kind):
+        """Reader/writer interleaving on one file: a reader instance loads a
+        consistent snapshot between a writer's batches, and the next load
+        picks up later appends (the cross-process warm-start pattern)."""
+        writer = kind_store(tmp_path, store_kind)
+        reader = ResultStore.open(writer.path)
+        k1 = (("i", 1, False, False, 1, 1, False),)
+        k2 = (("i", 2, False, False, 1, 1, False),)
+        writer.append("w", SCOPE, k1, Result("ok", time_s=1.0))
+        assert set(reader.load("w", SCOPE)) == {k1}
+        writer.append("w", SCOPE, k2, Result("ok", time_s=2.0))
+        assert set(reader.load("w", SCOPE)) == {k1, k2}
+
+    def test_sqlite_concurrent_instances_threaded(self, tmp_path):
+        """The SQLite mirror of the jsonl concurrency guarantee: multiple
+        *instances* (separate connections, like separate processes) writing
+        concurrently — SQLite's locking serializes them, nothing is lost."""
+        path = tmp_path / "conc.sqlite"
+        n_threads, per_thread = 4, 25
+
+        def writer(t):
+            store = ResultStore.open(path)     # own connection per "process"
+            for i in range(per_thread):
+                key = (("i", t * per_thread + i, False, False, 1, 1, False),)
+                store.append("w", SCOPE, key, Result("ok", time_s=float(i)))
+            store.close()
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert len(ResultStore.open(path).load("w", SCOPE)) == \
+            n_threads * per_thread
+
+
+class TestStorePrecedence:
+    """Regression: the explicit ``store=`` argument must always win over the
+    ``CC_RESULT_STORE`` environment variable — all three combinations."""
+
+    def setup_env(self, tmp_path, monkeypatch):
+        env_path = tmp_path / "env.jsonl"
+        monkeypatch.setenv("CC_RESULT_STORE", str(env_path))
+        return env_path
+
+    def test_default_none_falls_back_to_env(self, tmp_path, monkeypatch):
+        env_path = self.setup_env(tmp_path, monkeypatch)
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend())
+        assert eng.store is not None and eng.store.path == str(env_path)
+
+    def test_explicit_path_beats_env(self, tmp_path, monkeypatch):
+        self.setup_env(tmp_path, monkeypatch)
+        mine = tmp_path / "mine.sqlite"
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend(), store=str(mine))
+        assert eng.store.path == str(mine)
+        assert eng.store.backend.kind == "sqlite"
+
+    def test_explicit_false_beats_env(self, tmp_path, monkeypatch):
+        env_path = self.setup_env(tmp_path, monkeypatch)
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend(), store=False)
+        assert eng.store is None
+        eng.evaluate(Configuration())
+        assert not os.path.exists(env_path)     # nothing leaked to the env store
+
+    def test_explicit_empty_string_beats_env(self, tmp_path, monkeypatch):
+        """An empty target (e.g. ``--store ""`` on a CLI) is an explicit
+        opt-out, not a fall-through to the env var."""
+        env_path = self.setup_env(tmp_path, monkeypatch)
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend(), store="")
+        assert eng.store is None
+        eng.evaluate(Configuration())
+        assert not os.path.exists(env_path)
+
+    def test_session_layer_honors_all_three(self, tmp_path, monkeypatch):
+        env_path = self.setup_env(tmp_path, monkeypatch)
+        mine = tmp_path / "mine.jsonl"
+        w, sp = GEMM, lambda: SearchSpace(root=GEMM.nest())
+        TuningSession(CostModelBackend(), store=str(mine)).tune(
+            w, sp(), budget=3)
+        assert os.path.exists(mine) and not os.path.exists(env_path)
+        TuningSession(CostModelBackend(), store=False).tune(w, sp(), budget=3)
+        assert not os.path.exists(env_path)
+        TuningSession(CostModelBackend()).tune(w, sp(), budget=3)
+        assert os.path.exists(env_path)         # default defers to the env
+        ResultStore.drop_shared(mine)
+        ResultStore.drop_shared(env_path)
 
 
 class TestEngineIntegration:
-    def test_second_engine_starts_warm(self, tmp_path):
-        path = tmp_path / "store.jsonl"
+    def test_second_engine_starts_warm(self, tmp_path, store_kind):
+        path = tmp_path / f"store.{store_kind}"
 
         class Counting(CostModelBackend):
             calls = 0
@@ -193,6 +368,7 @@ class TestEngineIntegration:
         a, b = json.loads(log1.to_json()), json.loads(log2.to_json())
         a.pop("cache"), b.pop("cache")
         assert a == b                       # warm replay is byte-identical
+        ResultStore.drop_shared(path)
 
     def test_env_var_attaches_store(self, tmp_path, monkeypatch):
         path = tmp_path / "envstore.jsonl"
@@ -201,7 +377,16 @@ class TestEngineIntegration:
         eng = EvaluationEngine(GEMM, s, CostModelBackend())
         assert eng.store is not None
         eng.evaluate(Configuration())
-        assert ResultStore(path).count() == 1
+        assert ResultStore.open(path).count() == 1
+
+    def test_env_var_accepts_sqlite_uri(self, tmp_path, monkeypatch):
+        path = tmp_path / "envstore.db"
+        monkeypatch.setenv("CC_RESULT_STORE", f"sqlite://{path}")
+        eng = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                               CostModelBackend())
+        assert eng.store.backend.kind == "sqlite"
+        eng.evaluate(Configuration())
+        assert ResultStore.open(path).count() == 1
 
     def test_store_false_disables_env(self, tmp_path, monkeypatch):
         monkeypatch.setenv("CC_RESULT_STORE",
@@ -229,6 +414,11 @@ class TestEngineIntegration:
         e2 = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
                               CostModelBackend(), store=str(p))
         assert e1.store is e2.store
+        # the URI spelling of the same path shares the same instance too
+        e3 = EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                              CostModelBackend(), store=f"jsonl://{p}")
+        assert e3.store is e1.store
+        ResultStore.drop_shared(p)
 
     def test_engine_side_red_nodes_not_persisted(self, tmp_path):
         path = tmp_path / "store.jsonl"
@@ -236,7 +426,7 @@ class TestEngineIntegration:
                                CostModelBackend(), store=path)
         broken = Configuration().child(Tile(loops=("i",), sizes=(4096,)))
         assert eng.evaluate(broken).status == "compile_error"
-        assert ResultStore(path).count() == 0
+        assert ResultStore.open(path).count() == 0
 
 
 class TestBackendScopes:
@@ -301,23 +491,22 @@ class TestCompaction:
         with open(store.path) as f:
             return [l for l in f.read().splitlines() if l.strip()]
 
-    def test_newest_record_per_key_survives(self, tmp_path):
-        store = make_store(tmp_path)
+    def test_newest_record_per_key_survives(self, tmp_path, store_kind):
+        store = kind_store(tmp_path, store_kind)
         store.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
         store.append("w", SCOPE, self.KEY_B, Result("ok", time_s=2.0))
         # simulate a concurrent first-writer that measured KEY_A differently
         # (dedup is per-process; another process can duplicate the key)
-        dup = ResultStore(store.path)
+        dup = ResultStore.open(store.path)
         dup.append("w", SCOPE, self.KEY_A, Result("ok", time_s=9.0))
         dup.close()
-        assert len(self.raw_lines(store)) == 3
+        assert store.count() == 3
         stats = store.compact()
         assert stats == {"kept": 2, "dropped_duplicates": 1,
                          "dropped_foreign": 0, "dropped_corrupt": 0}
-        lines = self.raw_lines(store)
-        assert len(lines) == 2
-        # newest wins and first-seen key order is preserved
-        loaded = ResultStore(store.path).load("w", SCOPE)
+        assert store.count() == 2
+        # newest wins
+        loaded = ResultStore.open(store.path).load("w", SCOPE)
         assert loaded[self.KEY_A].time_s == 9.0
         assert loaded[self.KEY_B].time_s == 2.0
 
@@ -334,43 +523,44 @@ class TestCompaction:
         assert stats["kept"] == 1
         assert stats["dropped_corrupt"] == 1
         assert stats["dropped_foreign"] == 1
-        assert ResultStore(store.path).load("w", SCOPE)[self.KEY_A].time_s \
-            == 1.0
+        assert ResultStore.open(store.path).load("w", SCOPE)[
+            self.KEY_A].time_s == 1.0
 
-    def test_appends_after_compaction_land_in_new_file(self, tmp_path):
-        store = make_store(tmp_path)
+    def test_appends_after_compaction_land_in_new_file(self, tmp_path,
+                                                       store_kind):
+        store = kind_store(tmp_path, store_kind)
         store.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
         store.compact()
-        # the O_APPEND descriptor was reopened: this append must not vanish
-        # into the replaced inode
+        # jsonl: the O_APPEND descriptor was reopened — this append must not
+        # vanish into the replaced inode
         store.append("w", SCOPE, self.KEY_B, Result("ok", time_s=2.0))
-        loaded = ResultStore(store.path).load("w", SCOPE)
+        loaded = ResultStore.open(store.path).load("w", SCOPE)
         assert set(loaded) == {self.KEY_A, self.KEY_B}
 
-    def test_foreign_appender_survives_compaction(self, tmp_path):
+    def test_foreign_appender_survives_compaction(self, tmp_path, store_kind):
         """A store handle with its own open descriptor (modeling another
         process) must detect the compaction's os.replace and append to the
         new inode, not the unlinked old one."""
-        path = tmp_path / "shared.jsonl"
-        writer = ResultStore(path)
+        path = tmp_path / f"shared.{store_kind}"
+        writer = ResultStore.open(path)
         writer.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
-        other = ResultStore(path)       # separate fd, like another process
+        other = ResultStore.open(path)  # separate fd, like another process
         other.compact()
         writer.append("w", SCOPE, self.KEY_B, Result("ok", time_s=2.0))
         writer.close()
         other.close()
-        loaded = ResultStore(path).load("w", SCOPE)
+        loaded = ResultStore.open(path).load("w", SCOPE)
         assert set(loaded) == {self.KEY_A, self.KEY_B}
 
-    def test_compact_missing_file_is_noop(self, tmp_path):
-        store = make_store(tmp_path, name="never-written.jsonl")
+    def test_compact_missing_file_is_noop(self, tmp_path, store_kind):
+        store = kind_store(tmp_path, store_kind, stem="never-written")
         assert store.compact()["kept"] == 0
         assert not os.path.exists(store.path)
 
-    def test_compact_preserves_engine_replay(self, tmp_path):
+    def test_compact_preserves_engine_replay(self, tmp_path, store_kind):
         """A warm engine run replays byte-identically from a compacted
         store."""
-        path = tmp_path / "engine.jsonl"
+        path = tmp_path / f"engine.{store_kind}"
         space = SearchSpace(root=GEMM.nest())
         Autotuner(GEMM, space, CostModelBackend(), max_experiments=60,
                   store=str(path)).run()
@@ -379,7 +569,7 @@ class TestCompaction:
                                 CostModelBackend(), max_experiments=60,
                                 store=str(path)).run()
         ResultStore.drop_shared(path)
-        store = ResultStore(path)
+        store = ResultStore.open(path)
         store.compact()
         store.close()
         warm_after = Autotuner(GEMM, SearchSpace(root=GEMM.nest()),
@@ -388,26 +578,132 @@ class TestCompaction:
         ResultStore.drop_shared(path)
         assert warm_after.to_dict() == warm_before.to_dict()
 
-    def test_benchmarks_run_compact_store_cli(self, tmp_path):
+
+class TestAutoCompaction:
+    KEY_A = (("i", 8, False, False, 1, 1, False),)
+    KEY_B = (("j", 16, False, False, 1, 1, False),)
+
+    def _grow(self, path, n=20):
+        """n duplicate records for the same key from separate instances
+        (per-process dedup cannot see each other)."""
+        for i in range(n):
+            st = ResultStore.open(path)
+            st.append("w", SCOPE, self.KEY_A, Result("ok", time_s=float(i)))
+            st.close()
+
+    def test_default_off(self, tmp_path, monkeypatch):
+        monkeypatch.delenv("CC_STORE_COMPACT_BYTES", raising=False)
+        path = tmp_path / "auto.jsonl"
+        self._grow(path)
+        st = ResultStore.open(path)
+        st.append("w", SCOPE, self.KEY_B, Result("ok", time_s=1.0))
+        assert st.count() == 21         # nothing compacted
+
+    def test_threshold_triggers_compaction_and_notice(
+            self, tmp_path, monkeypatch, caplog):
+        path = tmp_path / "auto.jsonl"
+        self._grow(path)
+        monkeypatch.setenv("CC_STORE_COMPACT_BYTES", "200")
+        st = ResultStore.open(path)
+        with caplog.at_level(logging.INFO, logger="repro.core.resultstore"):
+            st.append("w", SCOPE, self.KEY_B, Result("ok", time_s=1.0))
+        assert st.count() == 2          # newest per key survived
+        assert ResultStore.open(path).load("w", SCOPE)[
+            self.KEY_A].time_s == 19.0
+        notices = [r for r in caplog.records if "auto-compacted" in r.message]
+        assert len(notices) == 1        # exactly one one-line notice
+
+    def test_no_thrash_when_unique_records_exceed_threshold(
+            self, tmp_path, monkeypatch, caplog):
+        """A store whose *unique* records already exceed the threshold must
+        not recompact on every append."""
+        path = tmp_path / "auto.jsonl"
+        monkeypatch.setenv("CC_STORE_COMPACT_BYTES", "64")
+        st = ResultStore.open(path)
+        with caplog.at_level(logging.INFO, logger="repro.core.resultstore"):
+            for i in range(30):
+                key = (("i", 100 + i, False, False, 1, 1, False),)
+                st.append("w", SCOPE, key, Result("ok", time_s=1.0))
+        notices = [r for r in caplog.records if "auto-compacted" in r.message]
+        # re-arming only after the file doubles past the last compacted size
+        # bounds compactions at O(log n) per n appends — not one per append
+        assert len(notices) <= 6
+        assert st.count() == 30
+
+    def test_invalid_threshold_ignored(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("CC_STORE_COMPACT_BYTES", "a-lot")
+        path = tmp_path / "auto.jsonl"
+        self._grow(path, n=5)
+        st = ResultStore.open(path)
+        st.append("w", SCOPE, self.KEY_B, Result("ok", time_s=1.0))
+        assert st.count() == 6
+
+    def test_sqlite_unaffected(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("CC_STORE_COMPACT_BYTES", "1")
+        st = ResultStore.open(tmp_path / "auto.sqlite")
+        st.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
+        st.append("w", SCOPE, self.KEY_B, Result("ok", time_s=2.0))
+        assert st.count() == 2
+
+
+class TestHarnessCli:
+    KEY_A = (("i", 8, False, False, 1, 1, False),)
+
+    def _run(self, tmp_path, *argv):
         import subprocess
         import sys
         repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-        path = tmp_path / "cli.jsonl"
-        store = ResultStore(path)
-        store.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
-        store.close()
-        dup = ResultStore(path)
-        dup.append("w", SCOPE, self.KEY_A, Result("ok", time_s=3.0))
-        dup.close()
         env = dict(os.environ)
         env["PYTHONPATH"] = os.path.join(repo, "src") + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-        proc = subprocess.run(
-            [sys.executable, "-m", "benchmarks.run", "--store", str(path),
-             "--compact-store"],
+        return subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", *argv],
             cwd=repo, env=env, capture_output=True, text=True, timeout=600,
         )
+
+    def test_compact_store_cli(self, tmp_path):
+        path = tmp_path / "cli.jsonl"
+        store = ResultStore.open(path)
+        store.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
+        store.close()
+        dup = ResultStore.open(path)
+        dup.append("w", SCOPE, self.KEY_A, Result("ok", time_s=3.0))
+        dup.close()
+        proc = self._run(tmp_path, "--store", str(path), "--compact-store")
         assert proc.returncode == 0, proc.stderr
         assert "kept 1" in proc.stdout
-        loaded = ResultStore(path).load("w", SCOPE)
+        loaded = ResultStore.open(path).load("w", SCOPE)
         assert loaded[self.KEY_A].time_s == 3.0
+
+    def test_migrate_and_merge_cli(self, tmp_path):
+        src = tmp_path / "cli_src.jsonl"
+        store = ResultStore.open(src)
+        store.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
+        store.close()
+        other = tmp_path / "cli_other.jsonl"
+        store = ResultStore.open(other)
+        store.append("w2", SCOPE, self.KEY_A, Result("ok", time_s=2.0))
+        store.close()
+        dst = tmp_path / "cli_dst.sqlite"
+
+        proc = self._run(tmp_path, "--store", str(src),
+                         "--migrate-store", str(dst))
+        assert proc.returncode == 0, proc.stderr
+        assert "migrated 1 record(s)" in proc.stdout
+        assert ResultStore.open(dst).count() == 1
+
+        proc = self._run(tmp_path, "--store", str(dst),
+                         "--merge-stores", str(other))
+        assert proc.returncode == 0, proc.stderr
+        assert "added 1" in proc.stdout
+        assert ResultStore.open(dst).count() == 2
+
+    def test_store_backend_flag_forces_sqlite(self, tmp_path):
+        path = tmp_path / "forced.log"       # suffix would say jsonl
+        store = ResultStore.open(f"sqlite://{path}")
+        store.append("w", SCOPE, self.KEY_A, Result("ok", time_s=1.0))
+        store.close()
+        proc = self._run(tmp_path, "--store", str(path),
+                         "--store-backend", "sqlite", "--compact-store")
+        assert proc.returncode == 0, proc.stderr
+        assert "kept 1" in proc.stdout

@@ -310,6 +310,63 @@ class TestTuningSpec:
         payload = json.loads(out_path.read_text())
         assert payload == self.spec().run().to_dict()
 
+    def test_store_uri_and_scope_fields_round_trip(self, tmp_path):
+        """The spec carries a store URI and the cross-workload surrogate
+        knob; ``store: false`` is an explicit opt-out that beats the
+        CC_RESULT_STORE ambient default when the spec runs."""
+        spec = TuningSpec(
+            workload="gemm", budget=8,
+            store=f"sqlite://{tmp_path / 'spec.db'}",
+            surrogate="learned", surrogate_scope="cross_workload",
+        )
+        again = TuningSpec.from_json(spec.to_json())
+        assert again == spec
+        log = again.run()
+        assert len(log.experiments) == 8
+        from repro.core import ResultStore
+        assert ResultStore.open(tmp_path / "spec.db").count() > 0
+        ResultStore.drop_shared(spec.store)
+
+    def test_surrogate_peers_resolve_like_workloads(self, tmp_path):
+        """Spec-driven cross-workload transfer over scaled/custom-workload
+        stores: peers resolve through the same workload machinery."""
+        from repro.core import (COVARIANCE, CostModelBackend, ResultStore,
+                                SearchSpace)
+        from repro.core.strategies import run_greedy
+
+        store = str(tmp_path / "peers.jsonl")
+        scaled = COVARIANCE.scaled(0.5)     # not a paper fingerprint
+        run_greedy(scaled, SearchSpace(root=scaled.nest()),
+                   CostModelBackend(), budget=30, store=store)
+        ResultStore.drop_shared(store)
+        spec = TuningSpec(
+            workload="syr2k", budget=4, store=store, surrogate="learned",
+            surrogate_scope="cross_workload",
+            surrogate_peers=[{"workload": "covariance",
+                              "workload_args": {"scale": 0.5}}],
+        )
+        assert TuningSpec.from_json(spec.to_json()) == spec
+        assert [w.extents for w in spec.build_peers()] == [scaled.extents]
+        log = spec.run()
+        sur = log.cache["surrogate"]
+        assert sur["n_samples"] > 0 and sur["skipped_foreign"] == 0
+        ResultStore.drop_shared(store)
+
+    def test_surrogate_peers_malformed_rejected(self):
+        with pytest.raises(ValueError, match="surrogate_peers"):
+            TuningSpec(surrogate_peers=["gemm"]).build_peers()
+        with pytest.raises(ValueError, match="unknown field"):
+            TuningSpec(surrogate_peers=[{"workload": "gemm",
+                                         "scale": 2}]).build_peers()
+
+    def test_store_false_in_spec_beats_env(self, tmp_path, monkeypatch):
+        env_path = tmp_path / "env.jsonl"
+        monkeypatch.setenv("CC_RESULT_STORE", str(env_path))
+        spec = TuningSpec(workload="gemm", budget=4, store=False)
+        assert TuningSpec.from_json(spec.to_json()) == spec
+        spec.run()
+        assert not env_path.exists()
+
     def test_cli_bad_spec_exits_2(self, tmp_path):
         bad = tmp_path / "bad.json"
         bad.write_text('{"workload": "gemm", "no_such_field": 1}')

@@ -1,0 +1,492 @@
+"""Store-backend protocol layer: URI/suffix resolution, record codec,
+SQLite backend semantics (schema tolerance, indexed queries, atomic
+rewrite), federation merge, migration round-trips, and the scope-relaxing
+query policies."""
+
+import json
+import os
+import sqlite3
+
+import pytest
+
+from repro.core import (
+    COVARIANCE,
+    GEMM,
+    Result,
+    ResultStore,
+    SYR2K,
+    Surrogate,
+    migrate_store,
+)
+from repro.core.storebackend import (
+    SCHEMA_VERSION,
+    JsonlStoreBackend,
+    SqliteStoreBackend,
+    StoreRecord,
+    backend_kind_of,
+    resolve_backend,
+    split_store_target,
+)
+
+KEY_A = (("i", 8, False, False, 1, 1, False),)
+KEY_B = (("j", 16, False, False, 1, 1, False),)
+KEY_C = (("k", 32, False, False, 1, 1, False),)
+
+
+class TestTargetResolution:
+    def test_uri_schemes(self):
+        assert split_store_target("jsonl:///a/b.log") == ("jsonl", "/a/b.log")
+        assert split_store_target("sqlite:///a/b.db") == ("sqlite", "/a/b.db")
+        assert split_store_target("sqlite://rel/x") == ("sqlite", "rel/x")
+
+    def test_suffix_fallback(self):
+        assert split_store_target("store.jsonl")[0] == "jsonl"
+        assert split_store_target("store.txt")[0] == "jsonl"   # historical
+        for suffix in (".sqlite", ".sqlite3", ".db", ".DB"):
+            assert split_store_target(f"s{suffix}")[0] == "sqlite"
+
+    def test_scheme_beats_suffix(self):
+        assert split_store_target("jsonl://weird.db") == ("jsonl", "weird.db")
+
+    def test_empty_uri_path_rejected(self):
+        with pytest.raises(ValueError, match="empty path"):
+            split_store_target("sqlite://")
+
+    def test_resolve_backend_kinds(self, tmp_path):
+        assert isinstance(resolve_backend(tmp_path / "a.jsonl"),
+                          JsonlStoreBackend)
+        assert isinstance(resolve_backend(tmp_path / "a.sqlite"),
+                          SqliteStoreBackend)
+
+    def test_legacy_jsonl_store_at_sqlite_suffix_keeps_loading(self,
+                                                               tmp_path):
+        """A pre-pluggable-backends store was JSONL whatever its path was
+        called; the suffix rule must not make an existing one go dark."""
+        path = tmp_path / "legacy.db"
+        line = ('{"v":1,"w":"w","s":"costmodel:test",'
+                '"k":[["i",8,false,false,1,1,false]],'
+                '"r":{"status":"ok","time_s":1.5,"note":""}}')
+        path.write_text(line + "\n")
+        store = ResultStore.open(path)
+        assert store.backend.kind == "jsonl"
+        assert store.load("w", "costmodel:test")[KEY_A].time_s == 1.5
+        store.append("w", "costmodel:test", KEY_B, Result("ok", time_s=2.0))
+        assert store.count() == 2
+        # ... while the explicit scheme is taken at its word
+        assert resolve_backend(f"sqlite://{path}").kind == "sqlite"
+        # the shared registry keys on the *resolved* kind, so the bare path
+        # and the jsonl:// spelling share one instance (one descriptor)
+        a = ResultStore.shared(path)
+        b = ResultStore.shared(f"jsonl://{path}")
+        assert a is b
+        ResultStore.drop_shared(path)
+
+    def test_backend_kind_of(self):
+        assert backend_kind_of("costmodel:XEON:noise=0") == "costmodel"
+        assert backend_kind_of("wallclock:scale=0.1@host-8c") == "wallclock"
+        assert backend_kind_of("pallas@host-8c") == "pallas"
+        assert backend_kind_of("bare") == "bare"
+
+
+class TestRecordCodec:
+    def test_jsonl_line_is_byte_compatible(self):
+        """The JSONL backend must write exactly the PR 2 line format."""
+        rec = StoreRecord("wfp", "costmodel:test", KEY_A,
+                          Result("ok", time_s=1.25))
+        line = JsonlStoreBackend.encode_line(rec)
+        assert line == (
+            '{"v":1,"w":"wfp","s":"costmodel:test",'
+            '"k":[["i",8,false,false,1,1,false]],'
+            '"r":{"status":"ok","time_s":1.25,"note":""}}')
+        assert JsonlStoreBackend._decode_line(line) == rec
+
+    def test_sig_identity(self):
+        a = StoreRecord("w", "s", KEY_A, Result("ok", time_s=1.0))
+        b = StoreRecord("w", "s", KEY_A, Result("ok", time_s=9.0))
+        assert a.sig() == b.sig()
+        assert a.sig() != StoreRecord("w", "s", KEY_B, a.result).sig()
+
+
+class TestSqliteBackend:
+    def make(self, tmp_path) -> SqliteStoreBackend:
+        return SqliteStoreBackend(tmp_path / "s.sqlite")
+
+    def recs(self, *pairs):
+        return [StoreRecord("w", "costmodel:test", k, Result("ok", time_s=t))
+                for k, t in pairs]
+
+    def test_append_iter_round_trip(self, tmp_path):
+        be = self.make(tmp_path)
+        recs = self.recs((KEY_A, 1.0), (KEY_B, 2.0))
+        assert be.append(recs) == 2
+        assert list(be.iter_records()) == recs
+        assert be.count() == 2
+
+    def test_missing_file_reads_empty(self, tmp_path):
+        be = self.make(tmp_path)
+        assert list(be.iter_records()) == []
+        assert be.count() == 0
+        assert be.size_bytes() == 0
+        assert not os.path.exists(be.path)   # reads never create the file
+
+    def test_schema_version_mismatch_rows_ignored(self, tmp_path):
+        """Rows of another schema version are invisible on read — the same
+        clean-cold-start contract the JSONL backend has."""
+        be = self.make(tmp_path)
+        be.append(self.recs((KEY_A, 1.0)))
+        conn = sqlite3.connect(be.path)
+        with conn:
+            conn.execute(
+                "INSERT INTO records (v, w, s, k, status, time_s, note) "
+                "VALUES (?, 'w', 'costmodel:test', '[]', 'ok', 5.0, '')",
+                (SCHEMA_VERSION + 1,))
+        conn.close()
+        assert be.count() == 1
+        assert len(list(be.iter_records())) == 1
+
+    def test_compact_newest_wins_and_drops_foreign(self, tmp_path):
+        be = self.make(tmp_path)
+        be.append(self.recs((KEY_A, 1.0), (KEY_B, 2.0), (KEY_A, 9.0)))
+        conn = sqlite3.connect(be.path)
+        with conn:
+            conn.execute(
+                "INSERT INTO records (v, w, s, k, status, time_s, note) "
+                "VALUES (?, 'w', 'costmodel:test', '[]', 'ok', 5.0, '')",
+                (SCHEMA_VERSION + 1,))
+        conn.close()
+        stats = be.compact()
+        assert stats == {"kept": 2, "dropped_duplicates": 1,
+                         "dropped_foreign": 1, "dropped_corrupt": 0}
+        by_key = {r.key: r.result.time_s for r in be.iter_records()}
+        assert by_key == {KEY_A: 9.0, KEY_B: 2.0}
+
+    def test_compact_drops_unparseable_rows(self, tmp_path):
+        """Rows no reader can parse are dead weight — compact removes and
+        counts them, keeping count() consistent with what readers see."""
+        be = self.make(tmp_path)
+        be.append(self.recs((KEY_A, 1.0)))
+        conn = sqlite3.connect(be.path)
+        with conn:
+            conn.execute(
+                "INSERT INTO records (v, w, s, k, status, time_s, note) "
+                "VALUES (?, 'w', 'costmodel:test', 'not json', 'ok', 1.0, "
+                "'')", (SCHEMA_VERSION,))
+        conn.close()
+        stats = be.compact()
+        assert stats["dropped_corrupt"] == 1
+        assert stats["kept"] == 1
+        assert be.count() == len(list(be.iter_records())) == 1
+
+    def test_not_a_database_is_clean_cold_start(self, tmp_path, caplog):
+        """A JSONL (or otherwise corrupt) file at a sqlite path must mean a
+        cold start — reads empty, appends dropped with one warning, never a
+        crash, and the mistargeted file is never clobbered."""
+        import logging
+
+        path = tmp_path / "mistargeted.sqlite"
+        original = '{"v":1,"w":"w","s":"s","k":[],"r":{"status":"ok"}}\n'
+        path.write_text(original)
+        be = SqliteStoreBackend(path)
+        with caplog.at_level(logging.WARNING,
+                             logger="repro.core.storebackend"):
+            assert list(be.iter_records()) == []
+            assert be.count() == 0
+            assert be.append(self.recs((KEY_A, 1.0))) == 0
+            assert be.compact()["kept"] == 0
+        assert any("not a usable SQLite database" in r.message
+                   for r in caplog.records)
+        assert path.read_text() == original      # untouched
+
+    def test_engine_survives_corrupt_sqlite_store(self, tmp_path):
+        """The full warm-start path on a corrupt store: cold start, run
+        completes, nothing persisted, no crash."""
+        from repro.core import Autotuner, CostModelBackend, SearchSpace
+
+        path = tmp_path / "corrupt.sqlite"
+        path.write_text("this is not a database")
+        log = Autotuner(GEMM, SearchSpace(root=GEMM.nest()),
+                        CostModelBackend(), max_experiments=10,
+                        store=str(path)).run()
+        ResultStore.drop_shared(path)
+        assert len(log.experiments) == 10
+        assert log.cache["preloaded"] == 0
+
+    def test_rewrite_replaces_contents(self, tmp_path):
+        be = self.make(tmp_path)
+        be.append(self.recs((KEY_A, 1.0), (KEY_B, 2.0)))
+        be.rewrite(self.recs((KEY_C, 3.0)))
+        assert [r.key for r in be.iter_records()] == [KEY_C]
+
+    def test_query_uses_filters(self, tmp_path):
+        be = self.make(tmp_path)
+        be.append([
+            StoreRecord("w1", "costmodel:a", KEY_A, Result("ok", time_s=1.0)),
+            StoreRecord("w1", "wallclock:x@h", KEY_A,
+                        Result("ok", time_s=2.0)),
+            StoreRecord("w2", "costmodel:a", KEY_B, Result("ok", time_s=3.0)),
+        ])
+        assert len(list(be.query(workload_fp="w1"))) == 2
+        assert len(list(be.query(workload_fp="w1",
+                                 scope="costmodel:a"))) == 1
+        assert len(list(be.query(scope_kind="costmodel"))) == 2
+        assert len(list(be.query(workload_fp="w2",
+                                 scope_kind="wallclock"))) == 0
+
+
+class TestScopePolicies:
+    W1, W2 = "wfp-one", "wfp-two"
+    S_EXACT = "wallclock:scale=0.1:reps=2@host-a-8c"
+    S_OTHER_HOST = "wallclock:scale=0.1:reps=2@host-b-16c"
+    S_OTHER_KIND = "costmodel:XEON"
+
+    def store(self, tmp_path, kind) -> ResultStore:
+        ext = "jsonl" if kind == "jsonl" else "sqlite"
+        st = ResultStore.open(tmp_path / f"pol.{ext}")
+        st.append(self.W1, self.S_EXACT, KEY_A, Result("ok", time_s=1.0))
+        st.append(self.W1, self.S_OTHER_HOST, KEY_B, Result("ok", time_s=2.0))
+        st.append(self.W2, self.S_EXACT, KEY_C, Result("ok", time_s=3.0))
+        st.append(self.W2, self.S_OTHER_KIND, KEY_A, Result("ok", time_s=4.0))
+        return st
+
+    @pytest.mark.parametrize("kind", ["jsonl", "sqlite"])
+    def test_relaxation_levels_nest(self, tmp_path, kind):
+        st = self.store(tmp_path, kind)
+        exact = st.query(self.W1, self.S_EXACT, policy="exact")
+        same_be = st.query(self.W1, self.S_EXACT, policy="same_backend")
+        cross = st.query(self.W1, self.S_EXACT, policy="cross_workload")
+        assert [r.key for r in exact] == [KEY_A]
+        assert {r.key for r in same_be} == {KEY_A, KEY_B}
+        assert {(r.workload_fp, r.key) for r in cross} == {
+            (self.W1, KEY_A), (self.W1, KEY_B), (self.W2, KEY_C)}
+        # the costmodel-scoped record never leaks into a wallclock pool
+        assert all(r.scope != self.S_OTHER_KIND for r in cross)
+
+    def test_unknown_policy_rejected(self, tmp_path):
+        st = self.store(tmp_path, "jsonl")
+        with pytest.raises(ValueError, match="scope policy"):
+            st.query(self.W1, self.S_EXACT, policy="everything")
+
+
+class TestMigration:
+    def seed(self, store: ResultStore) -> None:
+        store.append("w", "costmodel:test", KEY_A, Result("ok", time_s=1.0))
+        store.append("w", "costmodel:test", KEY_B,
+                     Result("illegal", note="dep"))
+        store.append("w2", "wallclock:x@h", KEY_A, Result("ok", time_s=2.5))
+
+    def test_jsonl_sqlite_jsonl_round_trip(self, tmp_path):
+        src = ResultStore.open(tmp_path / "src.jsonl")
+        self.seed(src)
+        mid = tmp_path / "mid.sqlite"
+        back = tmp_path / "back.jsonl"
+        assert migrate_store(src, mid)["migrated"] == 3
+        assert migrate_store(mid, back)["migrated"] == 3
+        a = list(src.backend.iter_records())
+        b = list(ResultStore.open(mid).backend.iter_records())
+        c = list(ResultStore.open(back).backend.iter_records())
+        assert a == b == c
+
+    def test_migrate_preserves_duplicates_and_order(self, tmp_path):
+        src = ResultStore.open(tmp_path / "src.jsonl")
+        src.append("w", "s", KEY_A, Result("ok", time_s=1.0))
+        dup = ResultStore.open(tmp_path / "src.jsonl")   # separate instance
+        dup.append("w", "s", KEY_A, Result("ok", time_s=9.0))
+        dst = tmp_path / "dst.sqlite"
+        assert migrate_store(src, dst)["migrated"] == 2
+        times = [r.result.time_s
+                 for r in ResultStore.open(dst).backend.iter_records()]
+        assert times == [1.0, 9.0]
+
+    def test_migrated_sqlite_serves_engine_warm_start(self, tmp_path):
+        from repro.core import Autotuner, CostModelBackend, SearchSpace
+
+        jsonl = tmp_path / "engine.jsonl"
+        space = lambda: SearchSpace(root=GEMM.nest())    # noqa: E731
+        cold = Autotuner(GEMM, space(), CostModelBackend(),
+                         max_experiments=60, store=str(jsonl)).run()
+        ResultStore.drop_shared(jsonl)
+        sql = f"sqlite://{tmp_path / 'engine.sqlite'}"
+        migrate_store(jsonl, sql)
+        warm = Autotuner(GEMM, space(), CostModelBackend(),
+                         max_experiments=60, store=sql).run()
+        ResultStore.drop_shared(sql)
+        a, b = json.loads(cold.to_json()), json.loads(warm.to_json())
+        a.pop("cache"), b.pop("cache")
+        assert a == b
+        assert warm.cache["preloaded"] > 0
+
+
+class TestMerge:
+    S_HOST_A = "wallclock:scale=0.1@host-a-8c"
+    S_HOST_B = "wallclock:scale=0.1@host-b-8c"
+
+    def test_fleet_merge_across_hosts_no_conflicts(self, tmp_path):
+        a = ResultStore.open(tmp_path / "host_a.jsonl")
+        a.append("w", self.S_HOST_A, KEY_A, Result("ok", time_s=1.0))
+        b = ResultStore.open(tmp_path / "host_b.jsonl")
+        b.append("w", self.S_HOST_B, KEY_A, Result("ok", time_s=3.0))
+        fed = ResultStore.open(tmp_path / "fed.sqlite")
+        stats = fed.merge(a, b)
+        assert stats["kept"] == 2 and stats["added"] == 2
+        assert stats["conflicts"] == 0 and stats["duplicates"] == 0
+        # host-scoped records coexist — scopes embed the host fingerprint
+        assert fed.load("w", self.S_HOST_A)[KEY_A].time_s == 1.0
+        assert fed.load("w", self.S_HOST_B)[KEY_A].time_s == 3.0
+
+    def test_conflicts_counted_and_newest_source_wins(self, tmp_path):
+        a = ResultStore.open(tmp_path / "a.jsonl")
+        a.append("w", self.S_HOST_A, KEY_A, Result("ok", time_s=1.0))
+        a.append("w", self.S_HOST_A, KEY_B, Result("ok", time_s=2.0))
+        b = ResultStore.open(tmp_path / "b.jsonl")
+        b.append("w", self.S_HOST_A, KEY_A, Result("ok", time_s=7.0))  # differs
+        b.append("w", self.S_HOST_A, KEY_B, Result("ok", time_s=2.0))  # same
+        fed = ResultStore.open(tmp_path / "fed.jsonl")
+        stats = fed.merge(a, b)
+        assert stats["conflicts"] == 1
+        assert stats["duplicates"] == 1
+        assert stats["conflicts_by_scope"] == {self.S_HOST_A: 1}
+        assert fed.load("w", self.S_HOST_A)[KEY_A].time_s == 7.0
+
+    def test_merge_into_nonempty_is_compaction(self, tmp_path):
+        fed = ResultStore.open(tmp_path / "fed.jsonl")
+        fed.append("w", self.S_HOST_A, KEY_A, Result("ok", time_s=1.0))
+        dup = ResultStore.open(tmp_path / "fed.jsonl")
+        dup.append("w", self.S_HOST_A, KEY_A, Result("ok", time_s=1.0))
+        src = ResultStore.open(tmp_path / "src.jsonl")
+        src.append("w", self.S_HOST_A, KEY_B, Result("ok", time_s=2.0))
+        stats = fed.merge(src)
+        assert stats["kept"] == 2       # self-duplicates collapsed
+        with open(fed.path) as f:
+            assert len(f.read().splitlines()) == 2
+
+    def test_merge_and_migrate_refuse_broken_destination(self, tmp_path):
+        """Maintenance operations must not report success while persisting
+        nothing: a non-SQLite file behind a sqlite:// target raises."""
+        from repro.core import StoreBrokenError, migrate_store
+
+        src = ResultStore.open(tmp_path / "src.jsonl")
+        src.append("w", self.S_HOST_A, KEY_A, Result("ok", time_s=1.0))
+        broken = tmp_path / "broken.db"
+        broken.write_text("not a database")
+        dst = ResultStore.open(f"sqlite://{broken}")
+        with pytest.raises(StoreBrokenError):
+            dst.merge(src)
+        with pytest.raises(StoreBrokenError):
+            migrate_store(src, f"sqlite://{broken}")
+        assert broken.read_text() == "not a database"   # never clobbered
+
+    def test_merge_paths_and_uris(self, tmp_path):
+        src = ResultStore.open(tmp_path / "src.sqlite")
+        src.append("w", self.S_HOST_A, KEY_A, Result("ok", time_s=1.0))
+        src.close()
+        fed = ResultStore.open(tmp_path / "fed.jsonl")
+        stats = fed.merge(f"sqlite://{tmp_path / 'src.sqlite'}")
+        assert stats["added"] == 1
+
+
+class TestCrossWorkloadSurrogate:
+    def _populate(self, store, workload, scope, n=24):
+        from repro.core import CostModelBackend, SearchSpace
+        from repro.core.strategies import run_greedy
+
+        run_greedy(workload, SearchSpace(root=workload.nest()),
+                   CostModelBackend(), budget=n, store=store)
+
+    def test_pooled_fit_is_non_cold_on_unseen_workload(self, tmp_path):
+        from repro.core import CostModelBackend
+
+        store = ResultStore.open(tmp_path / "pool.sqlite")
+        scope = CostModelBackend().store_scope()
+        self._populate(store, GEMM, scope)
+        self._populate(store, COVARIANCE, scope)
+        assert store.load(SYR2K.fingerprint(), scope) == {}   # truly unseen
+
+        exact = Surrogate.fit(store, SYR2K, scope)            # scope-exact
+        pooled = Surrogate.fit(store, SYR2K, scope,
+                               scope_policy="cross_workload")
+        assert not exact.ready
+        assert pooled.ready
+        assert pooled.stats()["n_workloads"] == 2
+        # the pooled model can score the unseen workload's structures
+        assert pooled.predict_one(SYR2K.nest().structure_key()) > 0
+
+    def test_unresolvable_fingerprints_skipped(self, tmp_path):
+        from repro.core import CostModelBackend
+
+        store = ResultStore.open(tmp_path / "pool.jsonl")
+        scope = CostModelBackend().store_scope()
+        self._populate(store, GEMM, scope)
+        scaled = COVARIANCE.scaled(0.5)       # not a paper fingerprint
+        self._populate(store, scaled, scope)
+        sur = Surrogate.fit(store, SYR2K, scope,
+                            scope_policy="cross_workload")
+        assert sur.stats()["skipped_foreign"] > 0
+        # ... unless the caller names the peer explicitly
+        sur2 = Surrogate.fit(store, SYR2K, scope,
+                             scope_policy="cross_workload", peers=[scaled])
+        assert sur2.stats()["skipped_foreign"] == 0
+        assert sur2.stats()["n_samples"] > sur.stats()["n_samples"]
+
+    def test_local_observation_displaces_pooled_sample(self):
+        """A relaxed-scope (pooled) training sample must yield to a later
+        local measurement of the same structure — the surrogate has to
+        adapt to what this machine actually measures."""
+        key = GEMM.nest().structure_key()
+        sur = Surrogate(GEMM, min_fit=1)
+        sur.observe(key, 8.0, pooled=True)      # foreign-host history
+        assert sur.stats()["n_pooled"] == 1
+        sur.observe(key, 2.0)                    # local measurement wins
+        assert sur.stats()["n_pooled"] == 0
+        import math
+
+        from repro.core.loopnest import encode_key
+        sid = (GEMM.fingerprint(), encode_key(key))
+        assert sur._samples[sid][1] == pytest.approx(math.log(2.0))
+        # ... but pooled never displaces local, and local stays first-wins
+        sur.observe(key, 9.0, pooled=True)
+        sur.observe(key, 9.0)
+        assert sur.stats()["n_samples"] == 1
+        assert sur.stats()["n_pooled"] == 0
+
+    def test_engine_cross_workload_warm_fit(self, tmp_path):
+        """An engine on an unseen workload with surrogate_scope=
+        'cross_workload' starts with a fitted surrogate but zero preloaded
+        replays (pooled records train, never replay)."""
+        from repro.core import CostModelBackend, SearchSpace
+        from repro.core.evaluation import EvaluationEngine
+
+        store = ResultStore.open(tmp_path / "pool.sqlite")
+        scope = CostModelBackend().store_scope()
+        self._populate(store, GEMM, scope, n=30)
+        eng = EvaluationEngine(
+            SYR2K, SearchSpace(root=SYR2K.nest()), CostModelBackend(),
+            surrogate="learned", store=store,
+            surrogate_scope="cross_workload")
+        assert eng.stats.preloaded == 0
+        assert eng._learned is not None and eng._learned.ready
+
+    def test_engine_rejects_unknown_scope_policy(self):
+        from repro.core import CostModelBackend, SearchSpace
+        from repro.core.evaluation import EvaluationEngine
+
+        with pytest.raises(ValueError, match="surrogate_scope"):
+            EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                             CostModelBackend(), surrogate_scope="nearby")
+
+    def test_engine_rejects_inert_scope_combinations(self, tmp_path,
+                                                     monkeypatch):
+        """A relaxed scope without a learned surrogate, or without a store
+        to pool from, would be a silent no-op — the engine refuses."""
+        from repro.core import CostModelBackend, SearchSpace
+        from repro.core.evaluation import EvaluationEngine
+
+        monkeypatch.delenv("CC_RESULT_STORE", raising=False)
+        with pytest.raises(ValueError, match="surrogate='learned'"):
+            EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                             CostModelBackend(),
+                             store=tmp_path / "s.jsonl",
+                             surrogate_scope="cross_workload")
+        with pytest.raises(ValueError, match="requires a result store"):
+            EvaluationEngine(GEMM, SearchSpace(root=GEMM.nest()),
+                             CostModelBackend(), surrogate="learned",
+                             surrogate_scope="cross_workload")

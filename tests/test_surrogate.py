@@ -158,7 +158,7 @@ store_path = sys.argv[1]
 scope = CostModelBackend().store_scope()
 sur = Surrogate.fit(store_path, GEMM, scope)
 keys = sorted(sur._samples)
-order = sur.rank([key for key, _ in (sur._samples[e] for e in keys)])
+order = sur.rank([key for key, _, _ in (sur._samples[e] for e in keys)])
 print(json.dumps({
     "order": order,
     "preds": [round(p, 15) for p in
