@@ -9,6 +9,7 @@
   bench_session           TuningSpec → CLI end-to-end vs legacy driver (PR 4)
   bench_acquisition       EI vs LCB vs greedy shootout on one warm store (PR 5)
   bench_store             store migration + cross-workload surrogate transfer
+  bench_faults            fault injection: retry/quarantine + kill-9 resume (PR 6)
   bench_kernels           Pallas kernel micro-benchmarks
   bench_roofline          §Roofline table from the 80-cell dry-run records
 
@@ -34,7 +35,8 @@ Prints a final ``name,us_per_call,derived`` CSV.  Run with
   printed) and exit.
 * ``--quick`` — smoke mode: only the cheap cost-model gate suites
   (``eval_cache`` + the cost-model half of ``warm_start`` + ``session`` +
-  ``acquisition``), and exit non-zero if any acceptance gate regressed.  This
+  ``acquisition`` + ``faults``), and exit non-zero if any acceptance gate
+  regressed.  This
   is the CI regression check; it is also runnable standalone:
   ``python -m benchmarks.run --quick --json out.json``.
 """
@@ -74,7 +76,7 @@ def _collect_gates(ran: set[str]) -> dict:
     results = os.fspath(results_dir())
     gates: dict = {}
     for name in ("eval_cache", "warm_start", "surrogate", "session",
-                 "acquisition", "store"):
+                 "acquisition", "store", "faults"):
         if name not in ran:
             continue
         try:
@@ -170,9 +172,10 @@ def main(argv=None) -> None:
         os.environ["CC_RESULT_STORE"] = args.store
 
     from . import (bench_acquisition, bench_autotune, bench_beyond_transforms,
-                   bench_eval_cache, bench_kernels, bench_mcts_vs_greedy,
-                   bench_pragma_stacking, bench_roofline, bench_session,
-                   bench_store, bench_surrogate, bench_warm_start)
+                   bench_eval_cache, bench_faults, bench_kernels,
+                   bench_mcts_vs_greedy, bench_pragma_stacking,
+                   bench_roofline, bench_session, bench_store,
+                   bench_surrogate, bench_warm_start)
 
     suites = {
         "pragma_stacking": bench_pragma_stacking.main,
@@ -184,6 +187,7 @@ def main(argv=None) -> None:
         "session": bench_session.main,
         "acquisition": bench_acquisition.main,
         "store": bench_store.main,
+        "faults": bench_faults.main,
         "beyond_transforms": bench_beyond_transforms.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
@@ -194,6 +198,7 @@ def main(argv=None) -> None:
             "warm_start": lambda: bench_warm_start.main(quick=True),
             "session": bench_session.main,
             "acquisition": bench_acquisition.main,
+            "faults": bench_faults.main,
         }
     if args.only:
         picked = [s.strip() for s in args.only.split(",") if s.strip()]

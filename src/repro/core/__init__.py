@@ -25,6 +25,8 @@ from .costmodel import (
     estimate_time_uncached,
 )
 from .evaluation import EvalStats, EvaluationEngine
+from .faults import (FaultInjectingBackend, FlakyStoreBackend, InjectedCrash,
+                     RetryPolicy)
 from .legality import IllegalTransform, check_legal, is_legal
 from .loopnest import Access, Loop, LoopNest, make_nest
 from .measure import (
@@ -32,12 +34,14 @@ from .measure import (
     CostModelBackend,
     PallasBackend,
     Result,
+    SupervisedPool,
     WallclockBackend,
 )
 from .resultstore import (SCOPE_POLICIES, ResultStore, host_fingerprint,
                           migrate_store)
-from .storebackend import (JsonlStoreBackend, SqliteStoreBackend,
-                           StoreBackend, StoreBrokenError, StoreRecord)
+from .storebackend import (DelegatingStoreBackend, JsonlStoreBackend,
+                           SqliteStoreBackend, StoreBackend,
+                           StoreBrokenError, StoreRecord)
 from .searchspace import DEFAULT_TILE_SIZES, Configuration, SearchSpace
 from .session import (STRATEGY_REGISTRY, Proposal, Strategy, TuningSession,
                       TuningSpec, register_strategy, resolve_strategy)
@@ -59,12 +63,17 @@ from .workloads import COVARIANCE, GEMM, PAPER_WORKLOADS, SYR2K, Workload, matmu
 __all__ = [
     "Access", "AcquisitionStrategy", "Autotuner", "Backend", "BeamStrategy",
     "COVARIANCE", "Configuration", "CostModelBackend", "DEFAULT_TILE_SIZES",
-    "EvalStats", "EvaluationEngine", "Experiment", "GEMM", "GreedyStrategy",
-    "IllegalTransform", "Interchange", "Loop", "LoopNest", "Machine",
+    "DelegatingStoreBackend",
+    "EvalStats", "EvaluationEngine", "Experiment", "FaultInjectingBackend",
+    "FlakyStoreBackend", "GEMM", "GreedyStrategy",
+    "IllegalTransform", "InjectedCrash", "Interchange", "Loop", "LoopNest",
+    "Machine",
     "MctsStrategy", "NoSuccessfulExperiment", "PAPER_WORKLOADS",
     "PallasBackend", "Parallelize", "Proposal", "RandomWalkStrategy",
-    "Result", "ResultStore", "SCOPE_POLICIES", "SYR2K", "STRATEGIES",
+    "Result", "ResultStore", "RetryPolicy", "SCOPE_POLICIES", "SYR2K",
+    "STRATEGIES",
     "STRATEGY_REGISTRY", "SearchSpace", "SqliteStoreBackend",
+    "SupervisedPool",
     "JsonlStoreBackend", "StoreBackend", "StoreBrokenError", "StoreRecord",
     "Strategy",
     "Surrogate", "TPU_V5E", "Tile", "TransformError", "Transformation",

@@ -74,20 +74,26 @@ Cache invariants
 
 from __future__ import annotations
 
+import logging
 import os
+import random
 import warnings
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 from typing import Sequence
 
 from .costmodel import XEON_8180M, Machine, estimate_time
+from .faults import RetryPolicy
 from .legality import IllegalTransform, check_legal
 from .loopnest import LoopNest
 from .measure import Backend, Result
 from .resultstore import SCOPE_POLICIES, ResultStore
 from .searchspace import Configuration, SearchSpace
+from .storebackend import StoreBrokenError
 from .surrogate import Surrogate
 from .transformations import TransformError
 from .workloads import Workload
+
+_log = logging.getLogger("repro.core.evaluation")
 
 
 @dataclass
@@ -103,12 +109,24 @@ class EvalStats:
     ``preloaded`` counts results replayed from the persistent store at
     engine construction — a warm-started run serves those as ordinary
     ``hits`` without ever reaching the backend.
+
+    The fault counters are zero on every healthy run (and only then absent
+    from :meth:`EvaluationEngine.stats_dict` — byte-identity): ``retries``
+    counts re-measurements under the :class:`~repro.core.faults.
+    RetryPolicy`, ``quarantined`` the keys declared durably bad,
+    ``backend_crashes`` the exceptions that escaped the backend and were
+    isolated per-item, and ``store_errors`` the persist failures survived
+    in-memory.
     """
 
     hits: int = 0
     misses: int = 0
     deduped: int = 0
     preloaded: int = 0
+    retries: int = 0
+    quarantined: int = 0
+    backend_crashes: int = 0
+    store_errors: int = 0
 
     @property
     def total(self) -> int:
@@ -181,6 +199,14 @@ class EvaluationEngine:
         fingerprints of pooled records (``surrogate_scope != "exact"``).
         The paper workloads are always recognized; pass scaled/custom
         workloads here so their stored records can be featurized.
+    retry:
+        A :class:`~repro.core.faults.RetryPolicy` (or its kwargs as a
+        dict) enabling bounded retries with backoff on transient
+        ``exec_error`` failures and on exceptions escaping the backend,
+        plus per-key failure counting: keys failing ``quarantine_after``
+        times are quarantined — their red result is persisted durably so
+        warm runs skip them.  ``None`` (default) keeps the fault-free
+        paths byte-identical: no retry, exceptions propagate.
     """
 
     def __init__(
@@ -195,11 +221,20 @@ class EvaluationEngine:
         store: "ResultStore | str | os.PathLike | bool | None" = None,
         surrogate_scope: str = "exact",
         surrogate_peers: "Sequence[Workload]" = (),
+        retry: "RetryPolicy | dict | None" = None,
     ):
         self.workload = workload
         self.space = space
         self.backend = backend
         self.cache = cache
+        if isinstance(retry, dict):
+            retry = RetryPolicy(**retry)
+        self.retry = retry
+        self._retry_rng = (random.Random(retry.seed)
+                           if retry is not None else None)
+        self._fail_counts: dict[tuple, int] = {}
+        self._quarantined: set[tuple] = set()
+        self._warned_store_error = False
         self.surrogate_machine = surrogate_machine or getattr(
             backend, "machine", XEON_8180M
         )
@@ -440,7 +475,7 @@ class EvaluationEngine:
         ``Backend.evaluate_many`` together with their pre-derived nests.
         """
         results: list[Result | None] = [None] * len(items)
-        pending: list[tuple[int, Configuration, LoopNest]] = []
+        pending: list[tuple[int, Configuration, LoopNest, tuple]] = []
         pending_key_of: dict[tuple, int] = {}
         aliases: list[tuple[int, tuple]] = []
         cache = self._results if self.cache else None
@@ -471,15 +506,11 @@ class EvaluationEngine:
                     continue
                 pending_key_of[key] = i
             self.stats.misses += 1
-            pending.append((i, config, nest))
+            pending.append((i, config, nest, key))
 
         if pending:
-            backend_results = self.backend.evaluate_many(
-                self.workload,
-                [c for _, c, _ in pending],
-                nests=[n for _, _, n in pending],
-            )
-            for (i, _, nest), res in zip(pending, backend_results):
+            backend_results = self._measure_pending(pending)
+            for (i, _, nest, _), res in zip(pending, backend_results):
                 results[i] = res
                 if cache is not None:
                     cache[nest.structure_key()] = res
@@ -488,25 +519,131 @@ class EvaluationEngine:
                     # every ``refit_every`` fresh measurements
                     self._learned.observe(nest.structure_key(), res)
             if self.store is not None:
-                # Persist the batch in one atomic append — a re-tune (or a
-                # concurrent run on another machine slot) starts warm from
-                # it.  ``exec_error`` results (timeouts, one-off runtime
-                # failures) are deliberately *not* persisted: the store is
-                # append-only and replays skip the backend, so a transient
-                # flake would red the structure forever; a re-tune should
-                # re-measure it instead.  ``ok``/``illegal``/``compile_error``
-                # are deterministic properties of the structure.
-                self.store.append_many(
-                    self._store_scope[0],
-                    self._store_scope[1],
-                    [(nest.structure_key(), res)
-                     for (_, _, nest), res in zip(pending, backend_results)
-                     if res.status != "exec_error"],
-                )
+                self._persist(pending, backend_results)
         if cache is not None:
             for i, key in aliases:
                 results[i] = cache[key]
         return results  # type: ignore[return-value]
+
+    # -- fault tolerance (retry / quarantine / store degradation) --------------
+
+    def _dispatch(
+        self,
+        pend: "Sequence[tuple[int, Configuration, LoopNest, tuple]]",
+    ) -> list[Result]:
+        """One backend round-trip for a pending slice.  Without a retry
+        policy this is exactly the old uncaught ``evaluate_many`` call
+        (exceptions propagate — byte-identical fault-free path); with one,
+        an exception escaping the whole batch (pool death, injected crash)
+        is isolated per item so one poisoned config cannot take down the
+        batch's other measurements."""
+        configs = [c for _, c, _, _ in pend]
+        nests = [n for _, _, n, _ in pend]
+        try:
+            return self.backend.evaluate_many(self.workload, configs,
+                                              nests=nests)
+        except Exception:       # noqa: BLE001
+            if self.retry is None:
+                raise
+            self.stats.backend_crashes += 1
+            out: list[Result] = []
+            for c, n in zip(configs, nests):
+                try:
+                    out.append(self.backend.evaluate(self.workload, c,
+                                                     nest=n))
+                except Exception as e2:     # noqa: BLE001
+                    out.append(Result(
+                        "exec_error",
+                        note=f"backend crash: {type(e2).__name__}: {e2}"))
+            return out
+
+    def _measure_pending(
+        self,
+        pending: "Sequence[tuple[int, Configuration, LoopNest, tuple]]",
+    ) -> list[Result]:
+        """Measure the cache-missing slice, applying the
+        :class:`~repro.core.faults.RetryPolicy` when one is configured:
+        ``exec_error`` results are retried with backoff up to
+        ``max_attempts``, per-key failures are counted across the whole
+        run, and keys at ``quarantine_after`` failures are quarantined —
+        rewritten as a durable red node that :meth:`_persist` records."""
+        results = self._dispatch(pending)
+        rp = self.retry
+        if rp is None:
+            return results
+
+        def note_failures(idxs) -> None:
+            for j in idxs:
+                if results[j].status == "exec_error":
+                    k = pending[j][3]
+                    self._fail_counts[k] = self._fail_counts.get(k, 0) + 1
+
+        note_failures(range(len(pending)))
+        for attempt in range(1, rp.max_attempts):
+            redo = [j for j in range(len(pending))
+                    if results[j].status == "exec_error"
+                    and pending[j][3] not in self._quarantined
+                    and self._fail_counts.get(pending[j][3], 0)
+                    < rp.quarantine_after]
+            if not redo:
+                break
+            rp.pause(attempt, self._retry_rng)
+            self.stats.retries += len(redo)
+            retried = self._dispatch([pending[j] for j in redo])
+            for j, res in zip(redo, retried):
+                results[j] = res
+            note_failures(redo)
+        for j in range(len(pending)):
+            res = results[j]
+            if res.status != "exec_error":
+                continue
+            k = pending[j][3]
+            if (self._fail_counts.get(k, 0) >= rp.quarantine_after
+                    and k not in self._quarantined):
+                self._quarantined.add(k)
+                self.stats.quarantined += 1
+                results[j] = Result(
+                    "exec_error",
+                    note=f"quarantined after {self._fail_counts[k]} "
+                         f"failures: {res.note}")
+        return results
+
+    def _persist(
+        self,
+        pending: "Sequence[tuple[int, Configuration, LoopNest, tuple]]",
+        backend_results: Sequence[Result],
+    ) -> None:
+        """Persist the batch in one atomic append — a re-tune (or a
+        concurrent run on another machine slot) starts warm from it.
+        ``exec_error`` results (timeouts, one-off runtime failures) are
+        deliberately *not* persisted: the store is append-only and replays
+        skip the backend, so a transient flake would red the structure
+        forever; a re-tune should re-measure it instead.
+        ``ok``/``illegal``/``compile_error`` are deterministic properties
+        of the structure.  The one exception is a *quarantined* key — its
+        failure is proven persistent, so its red node is stored durably and
+        warm runs never re-measure it.
+
+        A failing store must not kill the session: ``OSError`` /
+        :class:`~repro.core.storebackend.StoreBrokenError` are survived
+        in-memory, counted in ``stats.store_errors`` and warned once."""
+        rows = [(key, res)
+                for (_, _, _, key), res in zip(pending, backend_results)
+                if res.status != "exec_error" or key in self._quarantined]
+        if not rows:
+            return
+        try:
+            self.store.append_many(
+                self._store_scope[0], self._store_scope[1], rows)
+        except (OSError, StoreBrokenError) as e:
+            self.stats.store_errors += 1
+            if not self._warned_store_error:
+                self._warned_store_error = True
+                _log.warning(
+                    "result-store append failed (%s: %s) — tuning continues "
+                    "in-memory; further failures are counted in "
+                    "stats.store_errors without repeating this warning",
+                    type(e).__name__, e)
 
     def evaluate_many(self, configs: Sequence[Configuration]) -> list[Result]:
         """Evaluate a batch, order-preserving (no dedup, no reordering)."""
@@ -615,4 +752,49 @@ class EvaluationEngine:
             out["surrogate"] = (self._learned.stats()
                                 if self._learned is not None
                                 else {"model": "analytic"})
+        # only when something actually faulted: a healthy run's log must
+        # stay byte-identical to the pre-fault-tolerance drivers
+        faults = {k: v for k, v in (("retries", self.stats.retries),
+                                    ("quarantined", self.stats.quarantined),
+                                    ("backend_crashes",
+                                     self.stats.backend_crashes),
+                                    ("store_errors", self.stats.store_errors))
+                  if v}
+        for k, v in (getattr(self.backend, "faults", None) or {}).items():
+            if v:
+                faults[k] = faults.get(k, 0) + v
+        if faults:
+            out["faults"] = faults
         return out
+
+    # -- checkpointing ---------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Picklable engine state for :class:`~repro.core.session.
+        TuningSession` checkpoints: the result cache, dedup set, counters,
+        fault-tolerance state, and the live learned surrogate (if any).
+        Restoring into a fresh engine reproduces byte-identical decisions."""
+        return {
+            "results": dict(self._results),
+            "seen": set(self._seen),
+            "stats": asdict(self.stats),
+            "fail_counts": dict(self._fail_counts),
+            "quarantined": set(self._quarantined),
+            "retry_rng": (self._retry_rng.getstate()
+                          if self._retry_rng is not None else None),
+            "learned": self._learned,
+        }
+
+    def restore(self, state: dict) -> None:
+        """Inverse of :meth:`snapshot` — call on a freshly constructed
+        engine (same workload/backend/space/surrogate arguments) before
+        resuming the strategy loop."""
+        self._results.update(state["results"])
+        self._seen.update(state["seen"])
+        self.stats = EvalStats(**state["stats"])
+        self._fail_counts.update(state["fail_counts"])
+        self._quarantined.update(state["quarantined"])
+        if self._retry_rng is not None and state["retry_rng"] is not None:
+            self._retry_rng.setstate(state["retry_rng"])
+        if self._learned is not None and state["learned"] is not None:
+            self._learned = state["learned"]

@@ -1,0 +1,251 @@
+"""Fault-tolerance primitives: retry policy and fault injection.
+
+Long wallclock/Pallas sessions run thousands of compile-and-run trials
+through worker processes and a persistent store, and any of those trials can
+crash a worker, hang a kernel, or flake transiently — the Bayesian-
+optimization autotuners over Polly pragmas survive exactly this regime by
+bounding, retrying, and resuming measurements (arXiv:2010.08040,
+arXiv:2104.13242).  This module holds the two fault-tolerance pieces that
+are policy, not plumbing:
+
+* :class:`RetryPolicy` — bounded retries with exponential backoff + jitter
+  for transient measurement failures, plus the *quarantine* threshold: a
+  canonical key that keeps failing is recorded as a durable red result in
+  the :class:`~repro.core.resultstore.ResultStore` so warm runs never
+  re-measure a known-bad config.  Consumed by the
+  :class:`~repro.core.evaluation.EvaluationEngine` (``retry=`` parameter).
+* :class:`FaultInjectingBackend` — a seeded, composable backend wrapper
+  that injects crashes / hangs / slowdowns / wrong results with per-mode
+  probabilities.  It drives ``benchmarks/bench_faults.py`` (the
+  fault-tolerance gate) and the worker-kill tests; registered as worker
+  kind ``"fault"`` so a :class:`~repro.core.measure.SupervisedPool` can
+  inject *real* worker deaths and hangs inside spawned processes.
+* :class:`FlakyStoreBackend` — the store-IO fault injector: a delegating
+  :class:`~repro.core.storebackend.StoreBackend` whose ``append`` raises
+  ``OSError`` with a seeded probability, used to prove a failing store
+  degrades the session gracefully instead of killing it.
+
+The kill/respawn mechanics live in :class:`~repro.core.measure.
+SupervisedPool`; checkpoint/resume lives in :class:`~repro.core.session.
+TuningSession`.  Everything here is deterministic under a fixed seed.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .loopnest import LoopNest
+from .measure import Backend, Result, register_worker_backend, \
+    build_worker_backend
+from .searchspace import Configuration
+from .storebackend import DelegatingStoreBackend, StoreRecord
+from .workloads import Workload
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by :class:`FaultInjectingBackend`'s crash mode
+    (``crash_mode="raise"``) — a stand-in for a worker process dying."""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded-retry/quarantine policy for transient measurement failures.
+
+    ``max_attempts`` caps the total tries per configuration within one
+    batch (1 = no retries).  Between attempts the engine sleeps
+    ``backoff_s * backoff_factor**(attempt-1)``, jittered by ``±jitter``
+    (relative, seeded — deterministic under a fixed engine seed).  A
+    canonical key that has failed ``quarantine_after`` times total (across
+    batches and retries) is *quarantined*: its red result is persisted to
+    the :class:`~repro.core.resultstore.ResultStore` — the one case where
+    an ``exec_error`` is stored durably — so warm runs never re-measure it.
+
+    ``sleep`` is injectable for tests (fake clock — CI never really
+    sleeps); it is excluded from equality/serialization.
+    """
+
+    max_attempts: int = 3
+    backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+    jitter: float = 0.1
+    quarantine_after: int = 3
+    seed: int = 0
+    sleep: Callable[[float], None] = field(
+        default=time.sleep, compare=False, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError("RetryPolicy: max_attempts must be >= 1")
+        if self.quarantine_after < 1:
+            raise ValueError("RetryPolicy: quarantine_after must be >= 1")
+        if self.backoff_s < 0 or self.backoff_factor < 1 or self.jitter < 0:
+            raise ValueError(
+                "RetryPolicy: backoff_s/jitter must be >= 0 and "
+                "backoff_factor >= 1")
+
+    def delay(self, attempt: int,
+              rng: "random.Random | None" = None) -> float:
+        """Backoff before retry ``attempt`` (1-based): exponential in the
+        attempt, multiplied by a seeded relative jitter in ``[1-jitter,
+        1+jitter]`` when an ``rng`` is supplied."""
+        d = self.backoff_s * (self.backoff_factor ** (attempt - 1))
+        if self.jitter > 0 and rng is not None:
+            d *= 1.0 + self.jitter * (2.0 * rng.random() - 1.0)
+        return max(0.0, d)
+
+    def pause(self, attempt: int,
+              rng: "random.Random | None" = None) -> None:
+        """Sleep the backoff for retry ``attempt`` via the injectable
+        ``sleep`` (no-op for a zero delay)."""
+        d = self.delay(attempt, rng)
+        if d > 0:
+            self.sleep(d)
+
+
+@dataclass
+class FaultInjectingBackend(Backend):
+    """Seeded fault-injection wrapper around a real backend.
+
+    Each ``evaluate`` draws once from a private ``random.Random(seed)`` and
+    picks a fault mode by stacked probability thresholds (``crash``, then
+    ``hang``, then ``slow``, then ``wrong_result``; the remainder delegates
+    cleanly), so a fixed seed yields a fixed fault schedule — benchmarks and
+    tests are reproducible.
+
+    Modes:
+
+    * **crash** — ``crash_mode="raise"`` raises :class:`InjectedCrash`
+      (exercises the engine's dispatch-crash isolation + retry);
+      ``crash_mode="exit"`` calls ``os._exit(17)`` — a *real* worker death,
+      only meaningful inside a :class:`~repro.core.measure.SupervisedPool`
+      worker (kind ``"fault"``).
+    * **hang** — sleeps ``min(hang_s, deadline_s)``.  Inside a supervised
+      worker leave ``deadline_s=None`` and ``hang_s`` large: the sleep is a
+      genuine hang and the supervisor's kill deadline must fire.  In-process
+      (engine-level injection) set ``deadline_s`` to a small value: the hang
+      is simulated as bounded and returns the ``exec_error("timeout ...")``
+      red node a supervisor would have produced.
+    * **slow** — sleeps ``slow_s`` then delegates (checkpoint/kill-window
+      testing: stretches a run without changing its results).
+    * **wrong_result** — delegates, then inflates an ``ok`` time by
+      ``wrong_factor`` (never fabricates a fake *best* — an inflated sample
+      can cost experiments but cannot corrupt the reported optimum).
+
+    ``store_scope`` is namespaced under ``fault:...`` + the inner scope so
+    injected measurements can never pollute the real backend's store records.
+    """
+
+    inner: Backend | None = None
+    crash: float = 0.0
+    hang: float = 0.0
+    slow: float = 0.0
+    wrong_result: float = 0.0
+    seed: int = 0
+    crash_mode: str = "raise"           # "raise" | "exit"
+    hang_s: float = 3600.0
+    slow_s: float = 0.05
+    deadline_s: float | None = None     # bounds simulated (in-process) hangs
+    wrong_factor: float = 7.0
+    name: str = "fault"
+    faults: dict = field(default_factory=dict, init=False, repr=False,
+                         compare=False)
+    _rng: random.Random = field(default=None, init=False, repr=False,
+                                compare=False)
+
+    def __post_init__(self) -> None:
+        if self.inner is None:
+            raise ValueError("FaultInjectingBackend requires inner=<Backend>")
+        probs = (self.crash, self.hang, self.slow, self.wrong_result)
+        if any(p < 0 or p > 1 for p in probs) or sum(probs) > 1.0 + 1e-9:
+            raise ValueError(
+                "FaultInjectingBackend: per-mode probabilities must be in "
+                "[0, 1] and sum to <= 1")
+        if self.crash_mode not in ("raise", "exit"):
+            raise ValueError(
+                f"FaultInjectingBackend: crash_mode must be 'raise' or "
+                f"'exit', got {self.crash_mode!r}")
+        self._rng = random.Random(self.seed)
+
+    def _count(self, key: str) -> None:
+        self.faults[key] = self.faults.get(key, 0) + 1
+
+    def store_scope(self) -> str:
+        # never equal to the inner scope: injected results (inflated times,
+        # simulated timeouts) must not be replayed as real measurements
+        return (f"fault:crash={self.crash}:hang={self.hang}"
+                f":slow={self.slow}:wrong={self.wrong_result}"
+                f":seed={self.seed}+{self.inner.store_scope()}")
+
+    def evaluate(
+        self,
+        workload: Workload,
+        config: Configuration,
+        nest: LoopNest | None = None,
+    ) -> Result:
+        r = self._rng.random()
+        p = self.crash
+        if r < p:
+            self._count("injected_crashes")
+            if self.crash_mode == "exit":
+                os._exit(17)        # real worker death — no cleanup, no GIL
+            raise InjectedCrash(
+                f"injected worker crash (p={self.crash}, seed={self.seed})")
+        p += self.hang
+        if r < p:
+            self._count("injected_hangs")
+            limit = (self.hang_s if self.deadline_s is None
+                     else min(self.hang_s, self.deadline_s))
+            time.sleep(limit)
+            # only reachable when the hang is bounded (simulated supervisor
+            # verdict); a real in-worker hang dies to the pool's SIGKILL
+            return Result("exec_error",
+                          note=f"timeout (injected hang, {limit:.3g}s)")
+        p += self.slow
+        if r < p:
+            self._count("injected_slow")
+            time.sleep(self.slow_s)
+            return self.inner.evaluate(workload, config, nest=nest)
+        res = self.inner.evaluate(workload, config, nest=nest)
+        if r < p + self.wrong_result and res.ok:
+            self._count("injected_wrong_results")
+            return Result("ok", time_s=res.time_s * self.wrong_factor,
+                          note="injected wrong result")
+        return res
+
+    # evaluate_many: the sequential Backend default — injection draws are
+    # consumed one per evaluate, in order, keeping the schedule seeded.
+
+
+def _build_fault_worker(inner=None, **kwargs) -> FaultInjectingBackend:
+    """Worker-side builder for the ``"fault"`` kind: ``inner`` may itself be
+    a recursive ``{"kind": ..., **spec}`` worker spec (picklable), so a
+    supervised worker can rebuild e.g. fault-wrapped costmodel/pallas."""
+    if isinstance(inner, dict):
+        spec = dict(inner)
+        inner = build_worker_backend(spec.pop("kind"), spec)
+    return FaultInjectingBackend(inner=inner, **kwargs)
+
+
+register_worker_backend("fault", _build_fault_worker)
+
+
+class FlakyStoreBackend(DelegatingStoreBackend):
+    """Store-IO fault injection: ``append`` raises ``OSError`` with a seeded
+    probability (1.0 = every append fails).  Reads and maintenance delegate
+    untouched — this models a disk that fails writes, not a corrupt store."""
+
+    def __init__(self, inner, p_fail: float = 1.0, seed: int = 0):
+        super().__init__(inner)
+        self.p_fail = p_fail
+        self.failures = 0
+        self._rng = random.Random(seed)
+
+    def append(self, records: "list[StoreRecord]") -> int:
+        if self._rng.random() < self.p_fail:
+            self.failures += 1
+            raise OSError("injected store append failure")
+        return self.inner.append(records)

@@ -32,14 +32,22 @@ Batching model
   verifies concurrently).  :class:`WallclockBackend` **rejects**
   ``max_workers > 1`` outright: concurrent timed runs in one process contend
   for cores and skew every sample;
-* **process pool** (``WallclockBackend(process_workers=N)``) — each worker is
-  a separate process pinned to its own CPU core via ``os.sched_setaffinity``,
-  so timed runs proceed in parallel without sharing a core.  Workers rebuild
-  the backend from a small picklable spec (:meth:`WallclockBackend.worker_spec`);
-  workloads/configurations are plain frozen dataclasses and pickle as-is.
-  When pinning is impossible (no ``sched_setaffinity``, fewer than two
-  usable cores, pool startup failure) the call silently falls back to the
-  sequential path — results are identical, only slower.
+* **supervised process pool** (:class:`SupervisedPool`, engaged by
+  ``process_workers=N``) — each worker is a separate process pinned to its
+  own CPU core via ``os.sched_setaffinity``, so timed runs proceed in
+  parallel without sharing a core.  Workers rebuild the backend from a small
+  picklable spec (:meth:`WallclockBackend.worker_spec`); workloads/
+  configurations are plain frozen dataclasses and pickle as-is.  Unlike a
+  plain executor, the supervisor enforces a **hard per-task deadline**: a
+  worker that overruns it is SIGKILLed and respawned (re-claiming its freed
+  core), and the overrun becomes an ``exec_error("timeout ...")`` red node —
+  a hung kernel can no longer block the run.  Repeated worker deaths trip a
+  circuit breaker that degrades to serial measurement with an explicit
+  ``faults["degraded"]`` marker.  When pinning is impossible (no
+  ``sched_setaffinity``, pool startup failure) the call falls back to the
+  sequential path — results are identical, only slower — and the fallback
+  is *counted* (``faults["serial_fallbacks"]``) and warned once, never
+  silent.
 
 Persistence: every backend also exposes :meth:`Backend.store_scope`, the
 identity string under which its measurements are recorded in the on-disk
@@ -49,15 +57,16 @@ host-independent; wallclock scopes embed the host fingerprint and scale).
 
 from __future__ import annotations
 
+import logging
 import multiprocessing
 import os
 import shutil
 import tempfile
+import threading
 import time
-from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
-from concurrent.futures.process import BrokenProcessPool
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -68,6 +77,8 @@ from .loopnest import LoopNest
 from .searchspace import Configuration
 from .transformations import TransformError
 from .workloads import Workload
+
+_log = logging.getLogger("repro.core.measure")
 
 
 @dataclass(frozen=True)
@@ -139,7 +150,7 @@ class Backend:
 
 
 # ---------------------------------------------------------------------------
-# Process-parallel evaluation (wallclock): one worker process per CPU core.
+# Supervised process-parallel evaluation: one killable worker per CPU core.
 # ---------------------------------------------------------------------------
 
 
@@ -151,22 +162,46 @@ def _usable_cores() -> list[int]:
         return list(range(os.cpu_count() or 1))
 
 
-# Per-worker-process backend, built once by the pool initializer.
-_WORKER_BACKEND = None
+#: Builders from which a supervised worker process reconstructs its backend:
+#: ``kind -> callable(**spec)``.  Extend via :func:`register_worker_backend`
+#: (:mod:`repro.core.faults` registers the ``"fault"`` injection wrapper).
+_WORKER_BACKEND_BUILDERS: dict[str, Callable[..., "Backend"]] = {}
 
 
-def _wallclock_worker_init(
-    spec: dict, lockdir: str, cores: tuple[int, ...]
-) -> None:
-    """Pool initializer: claim a dedicated CPU core and build the backend.
+def register_worker_backend(kind: str,
+                            builder: Callable[..., "Backend"]) -> None:
+    """Register a builder a :class:`SupervisedPool` worker uses to rebuild a
+    backend from its picklable ``(kind, spec)`` pair."""
+    _WORKER_BACKEND_BUILDERS[kind] = builder
+
+
+def build_worker_backend(kind: str, spec: dict) -> "Backend":
+    """Construct a backend from its picklable worker spec (worker side)."""
+    builder = _WORKER_BACKEND_BUILDERS.get(kind)
+    if builder is None and kind == "fault":
+        from . import faults  # noqa: F401 — importing registers "fault"
+
+        builder = _WORKER_BACKEND_BUILDERS.get(kind)
+    if builder is None:
+        raise ValueError(
+            f"unknown worker backend kind {kind!r} "
+            f"(registered: {', '.join(sorted(_WORKER_BACKEND_BUILDERS))})")
+    return builder(**spec)
+
+
+def _claim_core(lockdir: str | None, cores: Sequence[int]) -> int | None:
+    """Claim a dedicated CPU core and pin the calling process to it.
 
     Core claiming uses ``O_CREAT|O_EXCL`` lock files in a pool-private
     directory — the only cross-process primitive that survives the ``spawn``
-    start method without inheriting handles.  Each worker pins itself to the
-    first unclaimed core, so no two timed runs ever share one.  If claiming
-    or pinning fails the worker still evaluates correctly, just unpinned.
+    start method without inheriting handles.  The process pins itself to the
+    first unclaimed core, so no two timed runs ever share one; when a hung
+    worker is killed, the supervisor deletes its lock file so the respawned
+    worker re-claims the freed core.  If claiming or pinning fails the
+    worker still evaluates correctly, just unpinned (returns ``None``).
     """
-    global _WORKER_BACKEND
+    if lockdir is None:
+        return None
     pinned = None
     for c in cores:
         try:
@@ -185,13 +220,325 @@ def _wallclock_worker_init(
         try:
             os.sched_setaffinity(0, {pinned})
         except (AttributeError, OSError):
+            pinned = None
+    return pinned
+
+
+def _supervised_worker_main(conn, kind: str, spec: dict,
+                            lockdir: str | None,
+                            cores: tuple[int, ...]) -> None:
+    """Worker loop: claim a core, rebuild the backend, answer tasks.
+
+    Protocol (one request, one response, over the duplex pipe): the worker
+    first sends ``("ready", pinned_core, pid)`` (or ``("init_error", msg,
+    pid)``), then answers each ``(workload, config)`` task with a
+    :class:`Result`.  ``None`` or a closed pipe ends the loop.  Exceptions
+    raised by the backend become ``exec_error`` results — a worker answers,
+    it never dies of a task (dying is reserved for real crashes, which the
+    supervisor detects as an EOF)."""
+    pinned = _claim_core(lockdir, cores)
+    try:
+        backend = build_worker_backend(kind, spec)
+    except Exception as e:  # noqa: BLE001 — report, don't traceback-spam
+        try:
+            conn.send(("init_error", f"{type(e).__name__}: {e}", os.getpid()))
+        except (OSError, BrokenPipeError):
             pass
-    _WORKER_BACKEND = WallclockBackend(**spec)
+        return
+    try:
+        conn.send(("ready", pinned, os.getpid()))
+    except (OSError, BrokenPipeError):
+        return
+    while True:
+        try:
+            task = conn.recv()
+        except (EOFError, OSError):
+            return
+        if task is None:
+            return
+        workload, config = task
+        try:
+            res = backend.evaluate(workload, config)
+        except Exception as e:  # noqa: BLE001
+            res = Result("exec_error",
+                         note=f"worker exception: {type(e).__name__}: {e}")
+        try:
+            conn.send(res)
+        except (EOFError, OSError, BrokenPipeError):
+            return
 
 
-def _process_evaluate(workload: Workload, config: Configuration) -> Result:
-    """Task body executed in a pinned worker process."""
-    return _WORKER_BACKEND.evaluate(workload, config)
+class _SupervisedWorker:
+    """One spawned measurement process plus its supervisor-side pipe end."""
+
+    def __init__(self, ctx, kind: str, spec: dict, lockdir: str | None,
+                 cores: Sequence[int]):
+        self.conn, child = ctx.Pipe(duplex=True)
+        self.proc = ctx.Process(
+            target=_supervised_worker_main,
+            args=(child, kind, spec, lockdir, tuple(cores)),
+            daemon=True,
+        )
+        self.proc.start()
+        child.close()
+        self.core: int | None = None
+        self.ready = False
+
+    def ensure_ready(self, timeout: float) -> bool:
+        """Wait for the startup handshake (backend built, core claimed).
+        False → the worker is unusable and must be retired."""
+        if self.ready:
+            return True
+        try:
+            if not self.conn.poll(timeout):
+                return False
+            msg = self.conn.recv()
+        except (EOFError, OSError):
+            return False
+        if not (isinstance(msg, tuple) and msg and msg[0] == "ready"):
+            return False
+        self.core = msg[1]
+        self.ready = True
+        return True
+
+    def kill(self, lockdir: str | None) -> None:
+        """Hard-kill the process and release its claimed core's lock file so
+        a respawned worker can re-claim the core."""
+        try:
+            self.proc.kill()
+        except Exception:  # noqa: BLE001
+            pass
+        self.proc.join(timeout=10.0)
+        try:
+            self.conn.close()
+        except Exception:  # noqa: BLE001
+            pass
+        if lockdir is not None and self.core is not None:
+            try:
+                os.unlink(os.path.join(lockdir, f"cpu{self.core}.lock"))
+            except OSError:
+                pass
+
+
+class SupervisedPool:
+    """Kill-capable measurement pool: core-pinned worker processes driven
+    over pipes, with a hard per-task deadline.
+
+    The old executor-based path could not preempt a hung measurement —
+    ``timeout_s`` was only checked *after* the first rep returned, so a
+    genuinely hung kernel blocked the run forever.  Here the supervisor
+    waits ``deadline_s`` per task and, on overrun, SIGKILLs the worker,
+    releases its CPU-core lock file, and lazily respawns a replacement
+    (which re-claims the freed core); the overrun becomes an
+    ``exec_error("timeout ...")`` red node.  A worker that *dies* mid-task
+    is respawned and the task retried once at this layer (transient-failure
+    policy beyond that lives in the engine's ``RetryPolicy``).
+
+    Fault accounting lands in the shared ``faults`` dict
+    (``deadline_kills`` / ``pool_deaths`` / ``serial_fallbacks`` /
+    ``deadline_skips`` / ``degraded``) — the engine surfaces it in
+    ``TuningLog.cache["faults"]``.  ``breaker`` worker deaths trip a circuit
+    breaker: the pool marks itself ``broken``, sets ``faults["degraded"]``,
+    and remaining tasks go through ``serial_fallback`` (in-process
+    evaluation) when one is provided, else become red nodes — degraded, but
+    loudly.
+    """
+
+    def __init__(
+        self,
+        kind: str,
+        spec: dict,
+        workers: int = 1,
+        *,
+        deadline_s: float | None = None,
+        mp_start_method: str = "spawn",
+        breaker: int = 3,
+        faults: dict | None = None,
+        serial_fallback: Callable[["Workload", "Configuration"],
+                                  "Result"] | None = None,
+        startup_timeout: float = 180.0,
+    ):
+        self.kind = kind
+        self.spec = dict(spec)
+        self.deadline_s = deadline_s
+        self.breaker = breaker
+        self.faults = faults if faults is not None else {}
+        self.serial_fallback = serial_fallback
+        self.startup_timeout = startup_timeout
+        self.broken = False
+        self.lockdir = tempfile.mkdtemp(prefix="repro-cpupin-")
+        self._cores = tuple(_usable_cores())
+        self._ctx = multiprocessing.get_context(mp_start_method)
+        self._lock = threading.Lock()
+        self._workers: list[_SupervisedWorker | None] = [
+            self._spawn() for _ in range(max(1, workers))]
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def _spawn(self) -> _SupervisedWorker | None:
+        try:
+            return _SupervisedWorker(
+                self._ctx, self.kind, self.spec, self.lockdir, self._cores)
+        except Exception:  # noqa: BLE001 — spawn failure handled as a death
+            return None
+
+    def _worker(self, slot: int) -> _SupervisedWorker | None:
+        if self._workers[slot] is None:
+            self._workers[slot] = self._spawn()
+        return self._workers[slot]
+
+    def _retire(self, slot: int) -> None:
+        w = self._workers[slot]
+        if w is not None:
+            w.kill(self.lockdir)
+        self._workers[slot] = None
+
+    def _count(self, key: str, n: int = 1) -> None:
+        with self._lock:
+            self.faults[key] = self.faults.get(key, 0) + n
+
+    def _note_death(self) -> None:
+        with self._lock:
+            self.faults["pool_deaths"] = self.faults.get("pool_deaths", 0) + 1
+            if (not self.broken
+                    and self.faults["pool_deaths"] >= self.breaker):
+                self.broken = True
+                self.faults["degraded"] = 1
+                _log.warning(
+                    "supervised pool (%s): %d worker death(s) — circuit "
+                    "breaker tripped, degrading to %s", self.kind,
+                    self.faults["pool_deaths"],
+                    "serial in-process measurement"
+                    if self.serial_fallback is not None
+                    else "red nodes (no serial fallback)")
+
+    def close(self) -> None:
+        """Kill every worker and release the core-claim directory."""
+        for slot in range(len(self._workers)):
+            self._retire(slot)
+        shutil.rmtree(self.lockdir, ignore_errors=True)
+
+    # -- dispatch ------------------------------------------------------------
+
+    def run(
+        self,
+        workload: "Workload",
+        configs: "Sequence[Configuration]",
+        batch_deadline_s: float | None = None,
+    ) -> "list[Result]":
+        """Evaluate a batch, order-preserving.  ``batch_deadline_s`` bounds
+        the *whole batch* (the session's remaining ``max_seconds`` is passed
+        down here): tasks that cannot start before it expires become
+        ``exec_error`` red nodes instead of overshooting the budget."""
+        results: list[Result | None] = [None] * len(configs)
+        batch_end = (time.monotonic() + batch_deadline_s
+                     if batch_deadline_s is not None else None)
+        pending = list(range(len(configs)))
+        qlock = threading.Lock()
+
+        def next_index() -> int | None:
+            with qlock:
+                return pending.pop(0) if pending else None
+
+        def serial(i: int) -> Result:
+            self._count("serial_fallbacks")
+            if self.serial_fallback is None:
+                return Result(
+                    "exec_error",
+                    note="worker died (supervised pool broken, "
+                         "no serial fallback)")
+            try:
+                return self.serial_fallback(workload, configs[i])
+            except Exception as e:  # noqa: BLE001
+                return Result(
+                    "exec_error",
+                    note=f"serial fallback failed: {type(e).__name__}: {e}")
+
+        def drive(slot: int) -> None:
+            while True:
+                i = next_index()
+                if i is None:
+                    return
+                if batch_end is not None and time.monotonic() >= batch_end:
+                    self._count("deadline_skips")
+                    results[i] = Result(
+                        "exec_error", note="timeout (batch deadline)")
+                    continue
+                if self.broken:
+                    results[i] = serial(i)
+                    continue
+                res = self._run_one(slot, workload, configs[i], batch_end)
+                results[i] = res if res is not None else serial(i)
+
+        if len(self._workers) == 1:
+            drive(0)
+        else:
+            threads = [threading.Thread(target=drive, args=(s,), daemon=True)
+                       for s in range(len(self._workers))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        return results  # type: ignore[return-value]
+
+    def _run_one(self, slot: int, workload: "Workload",
+                 config: "Configuration",
+                 batch_end: float | None) -> "Result | None":
+        # one respawn retry per task: a worker death mid-task is retried on
+        # a fresh worker once before giving up (None → caller falls back)
+        for _attempt in range(2):
+            if self.broken:
+                return None
+            w = self._worker(slot)
+            if w is None or not w.ensure_ready(self.startup_timeout):
+                self._retire(slot)
+                self._note_death()
+                continue
+            try:
+                w.conn.send((workload, config))
+            except (OSError, BrokenPipeError, ValueError):
+                self._retire(slot)
+                self._note_death()
+                continue
+            wait = self.deadline_s
+            if batch_end is not None:
+                remaining = batch_end - time.monotonic()
+                wait = remaining if wait is None else min(wait, remaining)
+            if wait is not None:
+                wait = max(wait, 0.001)
+            try:
+                arrived = w.conn.poll(wait)
+            except (OSError, EOFError):
+                arrived = False
+            if not arrived:
+                if w.proc.is_alive():
+                    # hard overrun: kill, release the core, respawn lazily
+                    self._retire(slot)
+                    self._count("deadline_kills")
+                    return Result(
+                        "exec_error",
+                        note=f"timeout (worker killed after {wait:.1f}s "
+                             f"hard deadline)")
+                self._retire(slot)
+                self._note_death()
+                continue
+            try:
+                msg = w.conn.recv()
+            except (EOFError, OSError):
+                self._retire(slot)
+                self._note_death()
+                continue
+            if isinstance(msg, Result):
+                return msg
+            self._retire(slot)      # protocol garbage — treat as a death
+            self._note_death()
+        return None
+
+    def __enter__(self) -> "SupervisedPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class _ThreadedEvalMixin:
@@ -233,6 +580,113 @@ class _ThreadedEvalMixin:
             return [f.result() for f in futs]
 
 
+class _SupervisedMeasureMixin:
+    """Shared :class:`SupervisedPool` plumbing for measurement backends.
+
+    Hosts the batch-deadline hand-off (the session's remaining
+    ``max_seconds`` becomes a per-batch measurement deadline), the pool
+    lifecycle (``_pool`` / ``_pool_lockdir`` / ``_pool_broken``), and the
+    loud serial-fallback accounting.  The concrete backend declares the
+    dataclass fields (``process_workers``, ``faults``, ...) and supplies
+    :meth:`worker_spec` / :meth:`_pool_deadline`.
+    """
+
+    def worker_spec(self) -> dict:
+        """Picklable constructor kwargs from which a pool worker rebuilds
+        this backend (pool fields intentionally excluded — workers evaluate
+        sequentially on their pinned core)."""
+        raise NotImplementedError
+
+    def _pool_deadline(self) -> float | None:
+        """Per-task hard kill deadline for supervised workers."""
+        return None
+
+    def _pool_requires_pinning(self) -> bool:
+        """True when the pool is pointless without core pinning (honest
+        wall-clock timing); deterministic backends run unpinned fine."""
+        return False
+
+    def set_batch_deadline(self, seconds: float | None) -> None:
+        """Arm a deadline for the *next* ``evaluate_many`` batch only — the
+        session passes its remaining ``max_seconds`` here so one slow batch
+        cannot blow through the wall-clock budget."""
+        self._batch_deadline = seconds
+
+    def _take_batch_deadline(self) -> float | None:
+        bd = self._batch_deadline
+        self._batch_deadline = None
+        return bd
+
+    def _serial_with_deadline(self, workload, configs, batch_deadline):
+        """Sequential evaluation honoring an armed batch deadline: configs
+        that cannot start in time become red nodes, never silent skips.  At
+        least one config is always evaluated so a batch makes progress."""
+        if batch_deadline is None:
+            return [self.evaluate(workload, c) for c in configs]
+        end = time.monotonic() + batch_deadline
+        out: list[Result] = []
+        for c in configs:
+            if out and time.monotonic() >= end:
+                out.append(Result("exec_error",
+                                  note="timeout (batch deadline)"))
+                continue
+            out.append(self.evaluate(workload, c))
+        return out
+
+    def _note_serial_fallback(self) -> None:
+        self.faults["serial_fallbacks"] = (
+            self.faults.get("serial_fallbacks", 0) + 1)
+        if not self._warned_fallback:
+            self._warned_fallback = True
+            _log.warning(
+                "%s: process pool unavailable/broken — measuring serially "
+                "in-process (counted in faults['serial_fallbacks'])",
+                self.name)
+
+    def _ensure_pool(self) -> "SupervisedPool | None":
+        """Create (once) the supervised worker pool, or ``None`` when it is
+        impossible on this host (then the caller degrades to serial)."""
+        if self._pool is not None:
+            return self._pool
+        if self._pool_broken:
+            return None
+        if (self._pool_requires_pinning()
+                and not hasattr(os, "sched_setaffinity")):
+            return None
+        workers = min(self.process_workers, len(_usable_cores()))
+        if workers < 1:
+            return None
+        try:
+            self._pool = SupervisedPool(
+                self.name, self.worker_spec(), workers,
+                deadline_s=self._pool_deadline(),
+                mp_start_method=self.mp_start_method,
+                breaker=self.breaker,
+                faults=self.faults,
+                serial_fallback=self.evaluate,
+            )
+            self._pool_lockdir = self._pool.lockdir
+        except Exception:   # noqa: BLE001 — any startup failure → serial
+            self.close()
+            self._pool_broken = True
+        return self._pool
+
+    def close(self) -> None:
+        """Shut down the worker pool and release the core-claim directory."""
+        if self._pool is not None:
+            self._pool.close()
+            self._pool = None
+        if self._pool_lockdir is not None:
+            shutil.rmtree(self._pool_lockdir, ignore_errors=True)
+            self._pool_lockdir = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
 @dataclass
 class CostModelBackend(Backend):
     machine: Machine = XEON_8180M
@@ -258,7 +712,7 @@ class CostModelBackend(Backend):
 
 
 @dataclass
-class WallclockBackend(_ThreadedEvalMixin, Backend):
+class WallclockBackend(_SupervisedMeasureMixin, _ThreadedEvalMixin, Backend):
     """Real XLA:CPU execution at ``scale`` of the PolyBench extents.
 
     ``nest`` hints from the engine are ignored: the measured nest must be
@@ -268,10 +722,13 @@ class WallclockBackend(_ThreadedEvalMixin, Backend):
     Timing honesty: the in-process thread pool is **forbidden** here
     (``max_workers > 1`` raises at construction) because concurrent timed
     runs share cores and skew each other.  Honest batching uses
-    ``process_workers=N`` instead: a persistent ``ProcessPoolExecutor``
-    (``spawn`` start method — safe with an initialized JAX in the parent)
-    whose workers are each pinned to a dedicated CPU core.  Falls back to
-    sequential evaluation when pinning is unavailable.  Call :meth:`close`
+    ``process_workers=N`` instead: a :class:`SupervisedPool` of ``spawn``
+    workers (safe with an initialized JAX in the parent), each pinned to a
+    dedicated CPU core, each supervised under a hard kill deadline
+    (:meth:`hard_deadline` — ``deadline_s`` or a generous multiple of
+    ``timeout_s``) so a hung measurement becomes a red node instead of
+    blocking the run.  Falls back to sequential evaluation when pinning is
+    unavailable (counted in ``faults``, warned once).  Call :meth:`close`
     (or use the backend as a context manager) to release the pool.
     """
 
@@ -280,12 +737,20 @@ class WallclockBackend(_ThreadedEvalMixin, Backend):
     timeout_s: float = 20.0
     name: str = "wallclock"
     max_workers: int = 1        # thread path forbidden — see __post_init__
-    process_workers: int = 0    # >1 → core-pinned process-pool batching
+    process_workers: int = 0    # >=1 → supervised core-pinned worker pool
     mp_start_method: str = "spawn"
+    deadline_s: float | None = None     # hard kill deadline override
+    breaker: int = 3            # worker deaths before degrading to serial
+    faults: dict = field(default_factory=dict, init=False, repr=False,
+                         compare=False)
     _pool: object = field(default=None, init=False, repr=False, compare=False)
     _pool_lockdir: str | None = field(
         default=None, init=False, repr=False, compare=False)
     _pool_broken: bool = field(
+        default=False, init=False, repr=False, compare=False)
+    _batch_deadline: float | None = field(
+        default=None, init=False, repr=False, compare=False)
+    _warned_fallback: bool = field(
         default=False, init=False, repr=False, compare=False)
 
     def __post_init__(self) -> None:
@@ -297,7 +762,7 @@ class WallclockBackend(_ThreadedEvalMixin, Backend):
                 "path (honest parallel timing), or keep max_workers=1."
             )
 
-    # -- process-pool batching ------------------------------------------------
+    # -- supervised process-pool batching -------------------------------------
 
     def worker_spec(self) -> dict:
         """Picklable constructor kwargs from which a pool worker rebuilds
@@ -306,31 +771,20 @@ class WallclockBackend(_ThreadedEvalMixin, Backend):
         return {"scale": self.scale, "reps": self.reps,
                 "timeout_s": self.timeout_s}
 
-    def _ensure_pool(self):
-        """Create (once) the core-pinned worker pool, or return ``None`` when
-        honest process-parallel timing is impossible on this host."""
-        if self._pool is not None:
-            return self._pool
-        if self._pool_broken or not hasattr(os, "sched_setaffinity"):
-            return None
-        cores = _usable_cores()
-        workers = min(self.process_workers, len(cores))
-        if workers < 2:
-            return None         # a 1-core host cannot batch honestly
-        try:
-            self._pool_lockdir = tempfile.mkdtemp(prefix="repro-cpupin-")
-            ctx = multiprocessing.get_context(self.mp_start_method)
-            self._pool = ProcessPoolExecutor(
-                max_workers=workers,
-                mp_context=ctx,
-                initializer=_wallclock_worker_init,
-                initargs=(self.worker_spec(), self._pool_lockdir,
-                          tuple(cores)),
-            )
-        except Exception:       # noqa: BLE001 — any startup failure → serial
-            self.close()
-            self._pool_broken = True
-        return self._pool
+    def hard_deadline(self) -> float:
+        """Per-task supervised kill deadline.  Defaults to a generous
+        multiple of the post-hoc ``timeout_s`` policy so the worker's own
+        (byte-identical) timeout decision fires first and the SIGKILL only
+        catches genuine hangs."""
+        if self.deadline_s is not None:
+            return self.deadline_s
+        return self.timeout_s * (self.reps + 1) + 10.0
+
+    def _pool_deadline(self) -> float:
+        return self.hard_deadline()
+
+    def _pool_requires_pinning(self) -> bool:
+        return True             # unpinned parallel timing would be dishonest
 
     def evaluate_many(
         self,
@@ -340,50 +794,20 @@ class WallclockBackend(_ThreadedEvalMixin, Backend):
     ) -> list[Result]:
         # nest hints are ignored (re-derived against scaled extents; see
         # ``evaluate``), so they are simply not forwarded.
-        if len(configs) > 1 and self.process_workers > 1:
+        batch_deadline = self._take_batch_deadline()
+        if configs and self.process_workers >= 1:
             pool = self._ensure_pool()
             if pool is not None:
-                try:
-                    futs = [pool.submit(_process_evaluate, workload, c)
-                            for c in configs]
-                except Exception:   # noqa: BLE001 — pool died → serial
+                out = pool.run(workload, list(configs),
+                               batch_deadline_s=batch_deadline)
+                if pool.broken:
+                    # circuit breaker tripped: later batches run serially
+                    # (recorded in faults["degraded"], never silent)
                     self.close()
                     self._pool_broken = True
-                else:
-                    # Collect per future: one failed task must not discard
-                    # the batch's completed timed runs.  A task-level
-                    # failure is re-measured serially; only a broken pool
-                    # (worker process died) poisons the pool itself.
-                    out: list[Result] = []
-                    for f, c in zip(futs, configs):
-                        if self._pool_broken:
-                            out.append(self.evaluate(workload, c))
-                            continue
-                        try:
-                            out.append(f.result())
-                        except BrokenProcessPool:
-                            self.close()
-                            self._pool_broken = True
-                            out.append(self.evaluate(workload, c))
-                        except Exception:   # noqa: BLE001 — task-level only
-                            out.append(self.evaluate(workload, c))
-                    return out
-        return [self.evaluate(workload, c) for c in configs]
-
-    def close(self) -> None:
-        """Shut down the worker pool and release the core-claim directory."""
-        if self._pool is not None:
-            self._pool.shutdown(wait=True, cancel_futures=True)
-            self._pool = None
-        if self._pool_lockdir is not None:
-            shutil.rmtree(self._pool_lockdir, ignore_errors=True)
-            self._pool_lockdir = None
-
-    def __enter__(self) -> "WallclockBackend":
-        return self
-
-    def __exit__(self, *exc) -> None:
-        self.close()
+                return out
+            self._note_serial_fallback()
+        return self._serial_with_deadline(workload, configs, batch_deadline)
 
     def store_scope(self) -> str:
         from .resultstore import host_fingerprint
@@ -435,11 +859,18 @@ class WallclockBackend(_ThreadedEvalMixin, Backend):
 
 
 @dataclass
-class PallasBackend(_ThreadedEvalMixin, Backend):
+class PallasBackend(_SupervisedMeasureMixin, _ThreadedEvalMixin, Backend):
     """Builds the Pallas kernel (interpret mode), checks correctness against
     the jnp oracle at a reduced scale, rejects VMEM-overflowing tiles, and
     scores with the TPU cost model.  The reported time is deterministic (cost
-    model), so batched verification can run on a thread pool safely."""
+    model), so batched verification can run on a thread pool safely.
+
+    ``timeout_s`` arms a *hard* per-kernel deadline: with
+    ``process_workers>=1`` verification runs inside a :class:`SupervisedPool`
+    worker that is SIGKILLed (and respawned) when one interpret-mode
+    verification hangs past the deadline — the kernel becomes an
+    ``exec_error("timeout ...")`` red node.  Without workers the thread path
+    cannot preempt, so ``timeout_s`` is only honored via the pool."""
 
     machine: Machine = TPU_V5E
     scale: float = 0.05
@@ -447,6 +878,54 @@ class PallasBackend(_ThreadedEvalMixin, Backend):
     verify: bool = True
     name: str = "pallas"
     max_workers: int = 4
+    timeout_s: float | None = None      # hard kill deadline (needs workers)
+    process_workers: int = 0            # >=1 → supervised worker pool
+    mp_start_method: str = "spawn"
+    breaker: int = 3
+    faults: dict = field(default_factory=dict, init=False, repr=False,
+                         compare=False)
+    _pool: object = field(default=None, init=False, repr=False, compare=False)
+    _pool_lockdir: str | None = field(
+        default=None, init=False, repr=False, compare=False)
+    _pool_broken: bool = field(
+        default=False, init=False, repr=False, compare=False)
+    _batch_deadline: float | None = field(
+        default=None, init=False, repr=False, compare=False)
+    _warned_fallback: bool = field(
+        default=False, init=False, repr=False, compare=False)
+
+    def worker_spec(self) -> dict:
+        return {"machine": self.machine, "scale": self.scale,
+                "vmem_limit": self.vmem_limit, "verify": self.verify}
+
+    def _pool_deadline(self) -> float | None:
+        return self.timeout_s
+
+    def evaluate_many(
+        self,
+        workload: Workload,
+        configs: Sequence[Configuration],
+        nests: Sequence[LoopNest | None] | None = None,
+    ) -> list[Result]:
+        batch_deadline = self._take_batch_deadline()
+        if configs and self.process_workers >= 1:
+            pool = self._ensure_pool()
+            if pool is not None:
+                out = pool.run(workload, list(configs),
+                               batch_deadline_s=batch_deadline)
+                if pool.broken:
+                    self.close()
+                    self._pool_broken = True
+                return out
+            self._note_serial_fallback()
+        if batch_deadline is not None:
+            # an armed batch deadline needs sequential dispatch to be able
+            # to stop between kernels (nest hints are re-derived — results
+            # are identical, see Backend.evaluate)
+            return self._serial_with_deadline(workload, configs,
+                                              batch_deadline)
+        return _ThreadedEvalMixin.evaluate_many(self, workload, configs,
+                                                nests)
 
     def store_scope(self) -> str:
         # Reported time is the deterministic TPU cost model → host-independent;
@@ -483,6 +962,13 @@ class PallasBackend(_ThreadedEvalMixin, Backend):
             except Exception as e:  # noqa: BLE001
                 return Result("exec_error", note=f"{type(e).__name__}: {e}")
         return Result("ok", time_s=estimate_time(nest, self.machine))
+
+
+# Built-in worker-backend builders (the "fault" kind registers itself on
+# import of repro.core.faults — see build_worker_backend).
+register_worker_backend("costmodel", CostModelBackend)
+register_worker_backend("wallclock", WallclockBackend)
+register_worker_backend("pallas", PallasBackend)
 
 
 def _retile_to(nest: LoopNest, small: Workload) -> LoopNest:

@@ -50,7 +50,9 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import logging
 import os
+import pickle
 import sys
 import time
 from dataclasses import dataclass, field
@@ -58,9 +60,16 @@ from typing import Callable, Sequence
 
 from .autotuner import Experiment, NoSuccessfulExperiment, TuningLog
 from .evaluation import EvaluationEngine
+from .faults import FaultInjectingBackend
 from .measure import Backend, CostModelBackend, PallasBackend, WallclockBackend
 from .searchspace import Configuration, SearchSpace
 from .workloads import PAPER_WORKLOADS, Workload, matmul_workload
+
+_log = logging.getLogger("repro.core.session")
+
+#: Bump when the checkpoint payload layout changes — a mismatched sidecar is
+#: rejected (resume from a stale format would corrupt the run silently).
+CHECKPOINT_VERSION = 1
 
 __all__ = [
     "Proposal",
@@ -141,6 +150,22 @@ class Strategy:
         """Hook called after the run with ``log.cache`` populated —
         strategies append their own counters here (e.g. MCTS transposition
         stats)."""
+
+    def snapshot(self) -> dict:
+        """Picklable strategy state for session checkpoints: every instance
+        attribute except the bound engine/space/workload (those are rebuilt
+        by :meth:`bind` on resume).  Built-in strategies keep all search
+        state (heaps, MCTS tree, RNGs) in plain picklable attributes, so
+        this default suffices; a subclass holding unpicklable state must
+        override both :meth:`snapshot` and :meth:`restore`."""
+        return {k: v for k, v in vars(self).items()
+                if k not in ("engine", "space", "workload")}
+
+    def restore(self, state: dict) -> None:
+        """Inverse of :meth:`snapshot` — called *after* :meth:`bind` on
+        resume, so restored state wins over anything :meth:`on_bound`
+        derived."""
+        vars(self).update(state)
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +254,7 @@ class TuningSession:
         cache: bool = True,
         surrogate_scope: str = "exact",
         surrogate_peers: Sequence[Workload] = (),
+        retry=None,
     ):
         self.backend = backend
         self.store = store
@@ -236,6 +262,9 @@ class TuningSession:
         self.cache = cache
         self.surrogate_scope = surrogate_scope
         self.surrogate_peers = tuple(surrogate_peers)
+        # RetryPolicy | dict | None — forwarded to the engine (see
+        # repro.core.faults.RetryPolicy for the retry/quarantine semantics)
+        self.retry = retry
 
     def tune(
         self,
@@ -247,6 +276,9 @@ class TuningSession:
         max_seconds: float | None = None,
         on_experiment: Callable[[Experiment], None] | None = None,
         engine: EvaluationEngine | None = None,
+        checkpoint: "str | os.PathLike | None" = None,
+        checkpoint_every: int = 25,
+        resume: bool = False,
         **strategy_kwargs,
     ) -> TuningLog:
         """Run one ask/tell tuning loop and return its :class:`TuningLog`.
@@ -258,6 +290,23 @@ class TuningSession:
         constructed engine (it carries dedup/cache state — the
         :class:`~repro.core.autotuner.Autotuner` compatibility path uses
         this); otherwise one is built from the session's configuration.
+
+        ``max_seconds`` is a hard wall-clock bound: the loop predicts how
+        many more experiments fit from the observed per-experiment pace and
+        clips each ask's ``room`` accordingly, and backends exposing
+        ``set_batch_deadline`` get the remaining seconds as a per-batch
+        measurement deadline — configs a batch cannot start in time come
+        back as ``exec_error`` red nodes instead of overshooting.  (The
+        baseline experiment is still always measured.)
+
+        ``checkpoint`` names a crash-safe sidecar file: every
+        ``checkpoint_every`` experiments the full session state (log,
+        strategy state, engine caches/counters, elapsed wall clock) is
+        pickled to it atomically (tmp + fsync + rename).  ``resume=True``
+        loads it and continues the run mid-loop — a killed session replayed
+        with the same spec reaches the byte-identical best; a missing
+        sidecar logs a warning and starts fresh, so ``resume=True`` is safe
+        as an unconditional default in supervisors.
         """
         strat = resolve_strategy(strategy, **strategy_kwargs)
         engine = engine or EvaluationEngine(
@@ -265,10 +314,34 @@ class TuningSession:
             cache=self.cache, surrogate=self.surrogate, store=self.store,
             surrogate_scope=self.surrogate_scope,
             surrogate_peers=self.surrogate_peers,
+            retry=self.retry,
         )
         log = TuningLog(workload=workload.name, backend=self.backend.name)
-        strat.bind(engine, space, workload)
-        t_start = time.perf_counter()
+
+        ck = None
+        if resume:
+            if not checkpoint:
+                raise ValueError("tune(resume=True) requires checkpoint=")
+            ck = self._load_checkpoint(checkpoint, workload, strat)
+        if ck is not None:
+            # Engine state restores BEFORE bind (on_bound consults engine
+            # counters, e.g. MCTS warm ordering); strategy state AFTER bind
+            # (restored search state beats anything on_bound derived).
+            engine.restore(ck["engine_state"])
+            strat.bind(engine, space, workload)
+            strat.restore(ck["strategy_state"])
+            log.experiments = list(ck["experiments"])
+            t_start = time.perf_counter() - ck["elapsed_s"]
+            if ck["finished"]:
+                # the run completed before the restart: return its log
+                # verbatim (the saved cache includes backend fault counters
+                # a fresh backend could not reproduce)
+                log.cache = ck["cache"]
+                return log
+        else:
+            strat.bind(engine, space, workload)
+            t_start = time.perf_counter()
+        last_ckpt = len(log.experiments)
 
         while not strat.finished:
             # The baseline is exempt from the experiment budget: every legacy
@@ -283,6 +356,20 @@ class TuningSession:
             room = budget - len(log.experiments)
             if not log.experiments:
                 room = max(room, 1)
+            if max_seconds is not None and log.experiments:
+                # Pace-based clip: never ask for more experiments than the
+                # remaining wall clock is observed to afford, and hand the
+                # remaining seconds down as the batch measurement deadline.
+                elapsed = time.perf_counter() - t_start
+                remaining = max_seconds - elapsed
+                if remaining <= 0:
+                    break
+                per = elapsed / len(log.experiments)
+                if per > 0:
+                    room = min(room, max(1, int(remaining / per)))
+                set_bd = getattr(self.backend, "set_batch_deadline", None)
+                if set_bd is not None:
+                    set_bd(remaining)
             proposals = list(strat.propose(room))
             if not proposals:
                 continue    # e.g. greedy popped a fully-deduped parent
@@ -298,9 +385,75 @@ class TuningSession:
                 if on_experiment:
                     on_experiment(exp)
                 strat.observe(exp)
+            if (checkpoint
+                    and len(log.experiments) - last_ckpt >= checkpoint_every):
+                self._save_checkpoint(checkpoint, workload, strat, engine,
+                                      log, t_start, finished=False)
+                last_ckpt = len(log.experiments)
         log.cache = engine.stats_dict()
         strat.finalize(log)
+        if checkpoint:
+            self._save_checkpoint(checkpoint, workload, strat, engine, log,
+                                  t_start, finished=True)
         return log
+
+    # -- crash-safe checkpointing --------------------------------------------
+
+    @staticmethod
+    def _strategy_name(strat: Strategy) -> str:
+        return getattr(strat, "strategy_name", type(strat).__name__)
+
+    def _save_checkpoint(self, path, workload: Workload, strat: Strategy,
+                         engine: EvaluationEngine, log: TuningLog,
+                         t_start: float, *, finished: bool) -> None:
+        payload = {
+            "version": CHECKPOINT_VERSION,
+            "workload": workload.name,
+            "backend": self.backend.name,
+            "strategy": self._strategy_name(strat),
+            "finished": finished,
+            "elapsed_s": time.perf_counter() - t_start,
+            "cache": log.cache,     # populated only on the finished save
+            "experiments": list(log.experiments),
+            "strategy_state": strat.snapshot(),
+            "engine_state": engine.snapshot(),
+        }
+        # Atomic sidecar: a crash mid-write must leave the previous
+        # checkpoint intact, so pickle to a sibling tmp, fsync, rename.
+        path = os.fspath(path)
+        tmp = f"{path}.tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    def _load_checkpoint(self, path, workload: Workload,
+                         strat: Strategy) -> "dict | None":
+        path = os.fspath(path)
+        try:
+            with open(path, "rb") as f:
+                ck = pickle.load(f)
+        except FileNotFoundError:
+            _log.warning("checkpoint %s not found — starting fresh", path)
+            return None
+        except Exception as e:     # noqa: BLE001 — truncated/corrupt pickle
+            raise ValueError(
+                f"checkpoint {path!r} is unreadable "
+                f"({type(e).__name__}: {e}); delete it to start fresh"
+            ) from e
+        if ck.get("version") != CHECKPOINT_VERSION:
+            raise ValueError(
+                f"checkpoint {path!r} has version {ck.get('version')!r}, "
+                f"expected {CHECKPOINT_VERSION}; delete it to start fresh")
+        want = {"workload": workload.name, "backend": self.backend.name,
+                "strategy": self._strategy_name(strat)}
+        got = {k: ck.get(k) for k in want}
+        if got != want:
+            raise ValueError(
+                f"checkpoint {path!r} belongs to a different run "
+                f"({got} != {want}); delete it or fix the spec")
+        return ck
 
 
 # ---------------------------------------------------------------------------
@@ -311,6 +464,7 @@ _BACKENDS = {
     "costmodel": CostModelBackend,
     "wallclock": WallclockBackend,
     "pallas": PallasBackend,
+    "fault": FaultInjectingBackend,
 }
 
 # JSON arrays decode as lists; these SearchSpace/backend fields want tuples.
@@ -337,8 +491,20 @@ class TuningSpec:
     be featurizable — each entry a ``{"workload": name, "workload_args":
     {...}}`` object resolved exactly like the spec's own workload (paper
     workloads are always recognized; peers matter for scaled/matmul
-    fingerprints).  Round-trips losslessly through
-    :meth:`to_json`/:meth:`from_json`, and
+    fingerprints).
+
+    Fault tolerance: ``retry`` is a :class:`~repro.core.faults.RetryPolicy`
+    as a JSON object (``{"max_attempts": 3, "backoff_s": 0.05,
+    "backoff_factor": 2.0, "jitter": 0.1, "quarantine_after": 3, "seed":
+    0}`` — all fields optional), ``null`` to disable retries.
+    ``checkpoint`` names the crash-safe session sidecar written atomically
+    every ``checkpoint_every`` experiments; ``python -m repro.core.session
+    spec.json --resume`` continues a killed run from it.  The ``"fault"``
+    backend (fault-injection harness) takes an ``inner`` field in its
+    ``backend_args`` — a nested ``{"backend": ..., "backend_args": {...}}``
+    object resolved recursively.
+
+    Round-trips losslessly through :meth:`to_json`/:meth:`from_json`, and
     ``python -m repro.core.session spec.json`` executes it.
     """
 
@@ -355,6 +521,9 @@ class TuningSpec:
     cache: bool = True
     surrogate_scope: str = "exact"
     surrogate_peers: list = field(default_factory=list)
+    retry: dict | None = None
+    checkpoint: str | None = None
+    checkpoint_every: int = 25
 
     # -- serialization -------------------------------------------------------
 
@@ -440,15 +609,35 @@ class TuningSpec:
                 args[f] = tuple(args[f])
         return SearchSpace(root=workload.nest(), **args)
 
-    def build_backend(self) -> Backend:
-        cls = _BACKENDS.get(self.backend)
+    @staticmethod
+    def _resolve_backend(name: str, backend_args: dict) -> Backend:
+        cls = _BACKENDS.get(name)
         if cls is None:
-            raise ValueError(f"unknown backend {self.backend!r} "
+            raise ValueError(f"unknown backend {name!r} "
                              f"(known: {', '.join(sorted(_BACKENDS))})")
-        return cls(**self.backend_args)
+        args = dict(backend_args)
+        if name == "fault":
+            # The fault injector wraps a real backend: its ``inner`` is a
+            # nested {"backend": ..., "backend_args": {...}} spec fragment,
+            # resolved recursively (fault-over-fault composes).
+            inner = args.pop("inner", None)
+            if not isinstance(inner, dict) or "backend" not in inner:
+                raise ValueError(
+                    "backend 'fault' requires backend_args.inner = "
+                    "{'backend': <name>, 'backend_args': {...}}")
+            unknown = set(inner) - {"backend", "backend_args"}
+            if unknown:
+                raise ValueError(
+                    f"backend_args.inner: unknown field(s) {sorted(unknown)}")
+            args["inner"] = TuningSpec._resolve_backend(
+                inner["backend"], inner.get("backend_args", {}))
+        return cls(**args)
 
-    def run(self, on_experiment: Callable[[Experiment], None] | None = None
-            ) -> TuningLog:
+    def build_backend(self) -> Backend:
+        return self._resolve_backend(self.backend, self.backend_args)
+
+    def run(self, on_experiment: Callable[[Experiment], None] | None = None,
+            *, resume: bool = False) -> TuningLog:
         """Execute the job end to end and return the :class:`TuningLog`."""
         workload = self.build_workload()
         session = TuningSession(
@@ -456,11 +645,16 @@ class TuningSpec:
             store=self.store, surrogate=self.surrogate, cache=self.cache,
             surrogate_scope=self.surrogate_scope,
             surrogate_peers=self.build_peers(),
+            retry=self.retry,
         )
         return session.tune(
             workload, self.build_space(workload),
             strategy=self.strategy, budget=self.budget,
-            on_experiment=on_experiment, **self.strategy_args,
+            on_experiment=on_experiment,
+            checkpoint=self.checkpoint,
+            checkpoint_every=self.checkpoint_every,
+            resume=resume,
+            **self.strategy_args,
         )
 
 
@@ -483,6 +677,11 @@ def main(argv: Sequence[str] | None = None) -> int:
                          "jsonl://... / sqlite://... URI; an empty string "
                          "explicitly disables the store, beating "
                          "CC_RESULT_STORE)")
+    ap.add_argument("--checkpoint", metavar="CKPT.pkl", default=None,
+                    help="override the spec's crash-safe checkpoint sidecar")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the checkpoint sidecar (missing file "
+                         "starts fresh; a mismatched one is an error)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress the per-run summary line")
     args = ap.parse_args(argv)
@@ -496,9 +695,11 @@ def main(argv: Sequence[str] | None = None) -> int:
         spec.budget = args.budget
     if args.store is not None:
         spec.store = args.store
+    if args.checkpoint is not None:
+        spec.checkpoint = args.checkpoint
 
     try:
-        log = spec.run()
+        log = spec.run(resume=args.resume)
     except (ValueError, TypeError) as e:
         print(f"error: spec {args.spec!r} failed to resolve: {e}",
               file=sys.stderr)

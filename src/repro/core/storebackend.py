@@ -255,6 +255,61 @@ class StoreBackend:
         """Release descriptors/connections; the backend reopens lazily."""
 
 
+class DelegatingStoreBackend(StoreBackend):
+    """Base for backends that decorate another backend (fault injection,
+    metrics, tracing): every protocol method delegates to ``inner``;
+    subclasses override only what they intercept.  The facade sees the
+    wrapper's ``kind``/``path`` as the inner backend's, so scoping and
+    target resolution behave as if the wrapper were not there."""
+
+    def __init__(self, inner: StoreBackend):
+        self.inner = inner
+
+    @property
+    def kind(self) -> str:                      # type: ignore[override]
+        return self.inner.kind
+
+    @property
+    def path(self) -> str:                      # type: ignore[override]
+        return self.inner.path
+
+    @path.setter
+    def path(self, value: str) -> None:
+        self.inner.path = value
+
+    def append(self, records: Sequence[StoreRecord]) -> int:
+        return self.inner.append(records)
+
+    def rewrite(self, records: Sequence[StoreRecord]) -> None:
+        self.inner.rewrite(records)
+
+    def compact(self, sig_sink: "set | None" = None) -> dict[str, int]:
+        return self.inner.compact(sig_sink)
+
+    def iter_records(self) -> Iterator[StoreRecord]:
+        return self.inner.iter_records()
+
+    def query(
+        self,
+        workload_fp: str | None = None,
+        scope: str | None = None,
+        scope_kind: str | None = None,
+    ) -> Iterator[StoreRecord]:
+        return self.inner.query(workload_fp, scope, scope_kind)
+
+    def exclusive(self):
+        return self.inner.exclusive()
+
+    def count(self) -> int:
+        return self.inner.count()
+
+    def size_bytes(self) -> int:
+        return self.inner.size_bytes()
+
+    def close(self) -> None:
+        self.inner.close()
+
+
 # ---------------------------------------------------------------------------
 # JSONL — the PR 2 format, byte-compatible
 # ---------------------------------------------------------------------------

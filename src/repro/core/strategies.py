@@ -415,6 +415,15 @@ class MctsStrategy(Strategy):
             log.cache["transpositions"] = self.n_links
             log.cache["dag_nodes"] = len(self.table)
 
+    def snapshot(self) -> dict:
+        # Checkpoints land between propose/observe rounds, where _pending is
+        # always None — drop it defensively so a mid-round snapshot (e.g. a
+        # test checkpointing from on_experiment) can never resurrect a
+        # half-expanded node whose path refers to pre-restore tree objects.
+        state = super().snapshot()
+        state["_pending"] = None
+        return state
+
 
 # ---------------------------------------------------------------------------
 # Beam search

@@ -1,0 +1,407 @@
+"""Fault-tolerance suite: retry/backoff, quarantine, store degradation,
+max_seconds clipping, crash-safe checkpoint/resume, and the supervised
+measurement pool's kill/respawn lifecycle.
+
+No test here sleeps for real in the retry paths — RetryPolicy's ``sleep``
+is injectable and the tests record requested delays against a fake clock.
+Pool tests spawn real worker processes (that *is* the subject under test)
+but keep deadlines tight so the suite stays fast.
+"""
+
+import json
+import logging
+import os
+import pickle
+import time
+from dataclasses import dataclass, field
+
+import pytest
+
+from repro.core import (
+    GEMM,
+    Backend,
+    Configuration,
+    CostModelBackend,
+    EvaluationEngine,
+    FaultInjectingBackend,
+    FlakyStoreBackend,
+    InjectedCrash,
+    Result,
+    ResultStore,
+    RetryPolicy,
+    SearchSpace,
+    SupervisedPool,
+    TuningSession,
+    TuningSpec,
+    WallclockBackend,
+)
+from repro.core.storebackend import JsonlStoreBackend
+
+needs_affinity = pytest.mark.skipif(
+    not hasattr(os, "sched_getaffinity"),
+    reason="core pinning needs sched_getaffinity/sched_setaffinity")
+
+
+def _space():
+    return SearchSpace(root=GEMM.nest())
+
+
+def _configs(n):
+    eng = EvaluationEngine(GEMM, _space(), CostModelBackend(), store=False)
+    return eng.space.children(Configuration())[:n]
+
+
+@dataclass
+class FlakyBackend(Backend):
+    """Fails each canonical structure ``fail_first`` times, then succeeds."""
+
+    fail_first: int = 1
+    name: str = "flaky"
+    calls: int = field(default=0, init=False)
+    seen: dict = field(default_factory=dict, init=False)
+
+    def store_scope(self) -> str:
+        return "flaky:v1"
+
+    def evaluate(self, workload, config, nest=None):
+        self.calls += 1
+        key = config.signature() if hasattr(config, "signature") else tuple(
+            str(t) for t in config.transformations)
+        n = self.seen.get(key, 0)
+        self.seen[key] = n + 1
+        if n < self.fail_first:
+            return Result("exec_error", note=f"transient flake #{n + 1}")
+        return CostModelBackend().evaluate(workload, config, nest=nest)
+
+
+class TestRetryPolicy:
+    def test_delay_is_exponential_without_jitter(self):
+        rp = RetryPolicy(backoff_s=0.1, backoff_factor=2.0, jitter=0.0)
+        assert [rp.delay(a) for a in (1, 2, 3)] == pytest.approx(
+            [0.1, 0.2, 0.4])
+
+    def test_jitter_stays_relative_and_seeded(self):
+        import random
+        rp = RetryPolicy(backoff_s=1.0, backoff_factor=1.0, jitter=0.25)
+        rng = random.Random(7)
+        ds = [rp.delay(1, rng) for _ in range(50)]
+        assert all(0.75 <= d <= 1.25 for d in ds)
+        assert ds == [rp.delay(1, random.Random(7)) for _ in range(1)] + ds[1:]
+
+    def test_pause_uses_injectable_sleep(self):
+        slept = []
+        rp = RetryPolicy(backoff_s=0.5, backoff_factor=3.0, jitter=0.0,
+                         sleep=slept.append)
+        rp.pause(1)
+        rp.pause(2)
+        assert slept == pytest.approx([0.5, 1.5])   # no real sleeping
+
+    @pytest.mark.parametrize("kw", [
+        {"max_attempts": 0}, {"quarantine_after": 0},
+        {"backoff_s": -1.0}, {"backoff_factor": 0.5}, {"jitter": -0.1},
+    ])
+    def test_validation(self, kw):
+        with pytest.raises(ValueError):
+            RetryPolicy(**kw)
+
+
+class TestEngineRetry:
+    def test_transient_flakes_are_retried_to_green(self):
+        slept = []
+        be = FlakyBackend(fail_first=2)
+        eng = EvaluationEngine(GEMM, _space(), be, store=False,
+                               retry=RetryPolicy(max_attempts=3,
+                                                 backoff_s=0.01, jitter=0.0,
+                                                 quarantine_after=99,
+                                                 sleep=slept.append))
+        res = eng.evaluate_many(_configs(4))
+        assert all(r.ok for r in res)
+        assert eng.stats.retries == 8               # 4 configs x 2 retries
+        assert slept == pytest.approx([0.01, 0.02])  # fake clock only
+        assert eng.stats_dict()["faults"]["retries"] == 8
+
+    def test_exhausted_retries_stay_red(self):
+        be = FlakyBackend(fail_first=5)
+        eng = EvaluationEngine(GEMM, _space(), be, store=False,
+                               retry=RetryPolicy(max_attempts=2,
+                                                 backoff_s=0.0,
+                                                 quarantine_after=99))
+        res = eng.evaluate_many(_configs(2))
+        assert all(r.status == "exec_error" for r in res)
+
+    def test_crash_without_policy_propagates(self):
+        be = FaultInjectingBackend(inner=CostModelBackend(), crash=1.0,
+                                   seed=0)
+        eng = EvaluationEngine(GEMM, _space(), be, store=False)
+        with pytest.raises(InjectedCrash):
+            eng.evaluate_many(_configs(2))
+
+    def test_crash_with_policy_is_isolated_and_counted(self):
+        be = FaultInjectingBackend(inner=CostModelBackend(), crash=0.3,
+                                   seed=1)
+        eng = EvaluationEngine(GEMM, _space(), be, store=False,
+                               retry=RetryPolicy(max_attempts=4,
+                                                 backoff_s=0.0,
+                                                 quarantine_after=99))
+        res = eng.evaluate_many(_configs(6))
+        assert all(r.ok for r in res)
+        assert eng.stats.backend_crashes >= 1
+        assert eng.stats_dict()["faults"]["injected_crashes"] >= 1
+
+    def test_healthy_run_has_no_faults_key(self):
+        # byte-identity: a fault-free log must look exactly like the
+        # pre-fault-tolerance drivers', retry configured or not
+        for retry in (None, RetryPolicy(backoff_s=0.0)):
+            eng = EvaluationEngine(GEMM, _space(), CostModelBackend(),
+                                   store=False, retry=retry)
+            eng.evaluate_many(_configs(4))
+            assert "faults" not in eng.stats_dict()
+
+
+class TestQuarantine:
+    def test_persistent_failure_is_quarantined_durably(self, tmp_path):
+        path = tmp_path / "q.jsonl"
+        rp = RetryPolicy(max_attempts=3, backoff_s=0.0, quarantine_after=2)
+        be = FlakyBackend(fail_first=10**9)         # never recovers
+        eng = EvaluationEngine(GEMM, _space(), be, store=path, retry=rp)
+        cfg = _configs(1)
+        res = eng.evaluate_many(cfg)
+        assert res[0].status == "exec_error"
+        assert res[0].note.startswith("quarantined after")
+        assert eng.stats.quarantined == 1
+
+        # warm restart: the durable red replays from the store — the known
+        # persistently-bad key is never handed to the backend again
+        be2 = FlakyBackend(fail_first=10**9)
+        eng2 = EvaluationEngine(GEMM, _space(), be2, store=path, retry=rp)
+        res2 = eng2.evaluate_many(cfg)
+        assert res2[0].status == "exec_error"
+        assert "quarantined" in res2[0].note
+        assert be2.calls == 0
+        ResultStore.drop_shared(path)
+
+    def test_transient_reds_are_not_persisted(self, tmp_path):
+        path = tmp_path / "t.jsonl"
+        be = FlakyBackend(fail_first=10**9)
+        eng = EvaluationEngine(GEMM, _space(), be, store=path,
+                               retry=RetryPolicy(max_attempts=2,
+                                                 backoff_s=0.0,
+                                                 quarantine_after=50))
+        eng.evaluate_many(_configs(1))              # fails, below threshold
+        be2 = FlakyBackend(fail_first=0)
+        eng2 = EvaluationEngine(GEMM, _space(), be2, store=path)
+        assert eng2.evaluate_many(_configs(1))[0].ok
+        assert be2.calls > 0                        # re-measured, not replayed
+        ResultStore.drop_shared(path)
+
+
+class TestStoreDegradation:
+    def test_failing_store_append_degrades_gracefully(self, tmp_path,
+                                                      caplog):
+        path = tmp_path / "flaky.jsonl"
+        store = ResultStore(path,
+                            backend=FlakyStoreBackend(
+                                JsonlStoreBackend(str(path)), p_fail=1.0))
+        sess = TuningSession(CostModelBackend(), store=store)
+        with caplog.at_level(logging.WARNING, logger="repro.core.evaluation"):
+            log = sess.tune(GEMM, _space(), strategy="greedy", budget=40)
+        assert len(log.experiments) == 40           # the session survived
+        assert log.cache["faults"]["store_errors"] >= 1
+        warns = [r for r in caplog.records
+                 if "result-store append failed" in r.message]
+        assert len(warns) == 1                      # warned once, not per batch
+
+
+class TestMaxSecondsClip:
+    def test_wall_clock_is_bounded_not_overshot(self):
+        be = FaultInjectingBackend(inner=CostModelBackend(), slow=1.0,
+                                   slow_s=0.01, seed=0)
+        sess = TuningSession(be, store=False)
+        t0 = time.perf_counter()
+        log = sess.tune(GEMM, _space(), strategy="mcts", budget=10_000,
+                        max_seconds=0.5)
+        wall = time.perf_counter() - t0
+        assert 0 < len(log.experiments) < 10_000
+        # pace-based room clipping keeps the overshoot to about one
+        # experiment, not one unbounded batch
+        assert wall < 0.5 + 1.0
+
+    def test_remaining_time_reaches_backend_as_batch_deadline(self):
+        seen = []
+
+        class Deadlined(CostModelBackend):
+            def set_batch_deadline(self, seconds):
+                seen.append(seconds)
+
+        sess = TuningSession(Deadlined(), store=False)
+        sess.tune(GEMM, _space(), strategy="greedy", budget=30,
+                  max_seconds=60.0)
+        assert seen and all(0 < s <= 60.0 for s in seen)
+
+
+class TestCheckpointResume:
+    STRATEGIES = ("greedy", "mcts", "beam", "random", "ei")
+
+    class _Kill(Exception):
+        pass
+
+    def _run(self, strategy, budget=50, **kw):
+        sess = TuningSession(CostModelBackend(), store=False)
+        return sess.tune(GEMM, _space(), strategy=strategy, budget=budget,
+                         **kw)
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_killed_run_resumes_byte_identical(self, tmp_path, strategy):
+        ck = tmp_path / "ck.pkl"
+        ref = self._run(strategy)
+
+        hits = []
+
+        def killer(exp):
+            hits.append(exp)
+            if len(hits) >= 20:
+                raise self._Kill()
+
+        with pytest.raises(self._Kill):
+            self._run(strategy, checkpoint=ck, checkpoint_every=5,
+                      on_experiment=killer)
+        res = self._run(strategy, checkpoint=ck, resume=True)
+        assert [e.to_dict() for e in res.experiments] == \
+               [e.to_dict() for e in ref.experiments]
+        assert res.cache == ref.cache
+        assert json.loads(res.to_json()) == json.loads(ref.to_json())
+
+    def test_finished_checkpoint_short_circuits(self, tmp_path):
+        ck = tmp_path / "ck.pkl"
+        ref = self._run("mcts", checkpoint=ck)
+
+        class Exploding(CostModelBackend):
+            def _measure(self, w, n):
+                raise AssertionError("finished checkpoint must not measure")
+
+        sess = TuningSession(Exploding(), store=False)
+        res = sess.tune(GEMM, _space(), strategy="mcts", budget=50,
+                        checkpoint=ck, resume=True)
+        assert json.loads(res.to_json()) == json.loads(ref.to_json())
+
+    def test_missing_checkpoint_starts_fresh(self, tmp_path, caplog):
+        with caplog.at_level(logging.WARNING, logger="repro.core.session"):
+            res = self._run("greedy", checkpoint=tmp_path / "none.pkl",
+                            resume=True)
+        assert len(res.experiments) == 50
+        assert any("starting fresh" in r.message for r in caplog.records)
+
+    def test_mismatched_checkpoint_is_rejected(self, tmp_path):
+        ck = tmp_path / "ck.pkl"
+        self._run("greedy", budget=10, checkpoint=ck)
+        with pytest.raises(ValueError, match="different run"):
+            self._run("mcts", budget=10, checkpoint=ck, resume=True)
+
+    def test_corrupt_checkpoint_is_rejected(self, tmp_path):
+        ck = tmp_path / "ck.pkl"
+        ck.write_bytes(b"\x80\x05 definitely not a checkpoint")
+        with pytest.raises(ValueError, match="unreadable"):
+            self._run("greedy", checkpoint=ck, resume=True)
+
+    def test_version_mismatch_is_rejected(self, tmp_path):
+        ck = tmp_path / "ck.pkl"
+        ck.write_bytes(pickle.dumps({"version": 999}))
+        with pytest.raises(ValueError, match="version"):
+            self._run("greedy", checkpoint=ck, resume=True)
+
+    def test_resume_requires_checkpoint_path(self):
+        with pytest.raises(ValueError, match="requires checkpoint"):
+            self._run("greedy", resume=True)
+
+    def test_spec_round_trips_fault_fields(self, tmp_path):
+        spec = TuningSpec(backend="fault",
+                          backend_args={"inner": {"backend": "costmodel"},
+                                        "slow": 1.0, "slow_s": 0.0,
+                                        "seed": 3},
+                          retry={"max_attempts": 2, "backoff_s": 0.0},
+                          checkpoint=str(tmp_path / "ck.pkl"),
+                          checkpoint_every=10, budget=30, store=False)
+        spec2 = TuningSpec.from_json(spec.to_json())
+        assert spec2 == spec
+        log = spec2.run()
+        assert len(log.experiments) == 30
+        assert (tmp_path / "ck.pkl").exists()
+        # unknown inner fields are rejected, not silently dropped
+        bad = TuningSpec(backend="fault",
+                         backend_args={"inner": {"backend": "costmodel",
+                                                 "bogus": 1}})
+        with pytest.raises(ValueError, match="inner"):
+            bad.build_backend()
+
+
+class TestSerialFallbackAccounting:
+    def test_broken_pool_fallback_is_counted_and_warned(self, caplog):
+        be = WallclockBackend(process_workers=8, reps=1, scale=0.01)
+        be._pool_broken = True                      # simulate a dead pool
+        cfgs = _configs(2)
+        with caplog.at_level(logging.WARNING, logger="repro.core.measure"):
+            res = be.evaluate_many(GEMM, cfgs)
+            be.evaluate_many(GEMM, cfgs)
+        assert all(r.ok for r in res)
+        assert be.faults["serial_fallbacks"] == 2
+        warns = [r for r in caplog.records
+                 if "serial" in r.message and "fall" in r.message]
+        assert len(warns) == 1                      # warned once per backend
+
+
+@needs_affinity
+class TestSupervisedPool:
+    def test_worker_lifecycle_and_core_reclaim(self):
+        with SupervisedPool("costmodel", {}, workers=1) as pool:
+            w = pool._worker(0)
+            assert w is not None and w.ensure_ready(180.0)
+            first_core = w.core
+            locks = sorted(os.listdir(pool.lockdir))
+            assert locks == [f"cpu{first_core}.lock"]
+            res = pool.run(GEMM, _configs(2))
+            assert all(r.ok for r in res)
+
+            # kill the worker: its core lock is released, and the lazily
+            # respawned replacement re-claims the freed core
+            pool._retire(0)
+            assert os.listdir(pool.lockdir) == []
+            w2 = pool._worker(0)
+            assert w2 is not None and w2.ensure_ready(180.0)
+            assert w2.core == first_core
+        assert not os.path.exists(pool.lockdir)
+
+    def test_hung_worker_is_killed_at_the_deadline(self):
+        spec = {"inner": {"kind": "costmodel"}, "hang": 1.0, "hang_s": 600.0}
+        with SupervisedPool("fault", spec, workers=1,
+                            deadline_s=1.0) as pool:
+            t0 = time.monotonic()
+            res = pool.run(GEMM, _configs(1))
+            wall = time.monotonic() - t0
+        assert res[0].status == "exec_error"
+        assert "timeout" in res[0].note and "killed" in res[0].note
+        assert pool.faults["deadline_kills"] == 1
+        assert wall < 60.0                          # not the 600s hang
+
+    def test_repeated_deaths_trip_breaker_and_degrade(self):
+        spec = {"inner": {"kind": "costmodel"}, "crash": 1.0,
+                "crash_mode": "exit"}
+        serial = CostModelBackend()
+        with SupervisedPool("fault", spec, workers=1, breaker=2,
+                            serial_fallback=serial.evaluate) as pool:
+            res = pool.run(GEMM, _configs(3))
+        assert pool.broken
+        assert pool.faults["degraded"] == 1
+        assert pool.faults["pool_deaths"] >= 2      # it really respawned
+        assert all(r.ok for r in res)               # degraded, not dead
+        assert pool.faults["serial_fallbacks"] >= 1
+
+    def test_batch_deadline_reds_unstarted_tasks(self):
+        spec = {"inner": {"kind": "costmodel"}, "slow": 1.0, "slow_s": 0.3}
+        with SupervisedPool("fault", spec, workers=1) as pool:
+            w = pool._worker(0)
+            assert w is not None and w.ensure_ready(180.0)  # exclude startup
+            res = pool.run(GEMM, _configs(4), batch_deadline_s=0.45)
+        statuses = [r.status for r in res]
+        assert statuses[0] == "ok"
+        assert "exec_error" in statuses[1:]
+        assert pool.faults.get("deadline_skips", 0) >= 1
