@@ -10,6 +10,7 @@
   bench_acquisition       EI vs LCB vs greedy shootout on one warm store (PR 5)
   bench_store             store migration + cross-workload surrogate transfer
   bench_faults            fault injection: retry/quarantine + kill-9 resume (PR 6)
+  bench_async             async pipelined sessions: worker scaling + resume (PR 7)
   bench_kernels           Pallas kernel micro-benchmarks
   bench_roofline          §Roofline table from the 80-cell dry-run records
 
@@ -35,8 +36,8 @@ Prints a final ``name,us_per_call,derived`` CSV.  Run with
   printed) and exit.
 * ``--quick`` — smoke mode: only the cheap cost-model gate suites
   (``eval_cache`` + the cost-model half of ``warm_start`` + ``session`` +
-  ``acquisition`` + ``faults``), and exit non-zero if any acceptance gate
-  regressed.  This
+  ``acquisition`` + ``faults`` + ``async``), and exit non-zero if any
+  acceptance gate regressed.  This
   is the CI regression check; it is also runnable standalone:
   ``python -m benchmarks.run --quick --json out.json``.
 """
@@ -76,7 +77,7 @@ def _collect_gates(ran: set[str]) -> dict:
     results = os.fspath(results_dir())
     gates: dict = {}
     for name in ("eval_cache", "warm_start", "surrogate", "session",
-                 "acquisition", "store", "faults"):
+                 "acquisition", "store", "faults", "async"):
         if name not in ran:
             continue
         try:
@@ -171,11 +172,11 @@ def main(argv=None) -> None:
     if args.store:
         os.environ["CC_RESULT_STORE"] = args.store
 
-    from . import (bench_acquisition, bench_autotune, bench_beyond_transforms,
-                   bench_eval_cache, bench_faults, bench_kernels,
-                   bench_mcts_vs_greedy, bench_pragma_stacking,
-                   bench_roofline, bench_session, bench_store,
-                   bench_surrogate, bench_warm_start)
+    from . import (bench_acquisition, bench_async, bench_autotune,
+                   bench_beyond_transforms, bench_eval_cache, bench_faults,
+                   bench_kernels, bench_mcts_vs_greedy,
+                   bench_pragma_stacking, bench_roofline, bench_session,
+                   bench_store, bench_surrogate, bench_warm_start)
 
     suites = {
         "pragma_stacking": bench_pragma_stacking.main,
@@ -188,6 +189,7 @@ def main(argv=None) -> None:
         "acquisition": bench_acquisition.main,
         "store": bench_store.main,
         "faults": bench_faults.main,
+        "async": bench_async.main,
         "beyond_transforms": bench_beyond_transforms.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
@@ -199,6 +201,7 @@ def main(argv=None) -> None:
             "session": bench_session.main,
             "acquisition": bench_acquisition.main,
             "faults": bench_faults.main,
+            "async": bench_async.main,
         }
     if args.only:
         picked = [s.strip() for s in args.only.split(",") if s.strip()]
@@ -260,6 +263,10 @@ def main(argv=None) -> None:
             "quick": args.quick,
             "suites": {n: m for n, m in suite_meta.items()},
             "gates": gates,
+            # per-gate wall time: how long each gate-defining suite took
+            # in this invocation (regression-hunting without re-running)
+            "gate_seconds": {n: suite_meta[n]["seconds"] for n in gates
+                             if n in suite_meta},
         })
         trajectory = _trajectory_path()
         os.makedirs(os.path.dirname(trajectory), exist_ok=True)

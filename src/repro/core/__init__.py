@@ -24,7 +24,7 @@ from .costmodel import (
     estimate_time,
     estimate_time_uncached,
 )
-from .evaluation import EvalStats, EvaluationEngine
+from .evaluation import EvalStats, EvaluationEngine, PendingEvaluation
 from .faults import (FaultInjectingBackend, FlakyStoreBackend, InjectedCrash,
                      RetryPolicy)
 from .legality import IllegalTransform, check_legal, is_legal
@@ -69,7 +69,8 @@ __all__ = [
     "IllegalTransform", "InjectedCrash", "Interchange", "Loop", "LoopNest",
     "Machine",
     "MctsStrategy", "NoSuccessfulExperiment", "PAPER_WORKLOADS",
-    "PallasBackend", "Parallelize", "Proposal", "RandomWalkStrategy",
+    "PallasBackend", "Parallelize", "PendingEvaluation", "Proposal",
+    "RandomWalkStrategy",
     "Result", "ResultStore", "RetryPolicy", "SCOPE_POLICIES", "SYR2K",
     "STRATEGIES",
     "STRATEGY_REGISTRY", "SearchSpace", "SqliteStoreBackend",

@@ -137,6 +137,33 @@ class EvalStats:
         return self.hits / self.total if self.total else 0.0
 
 
+@dataclass
+class PendingEvaluation:
+    """Handle for one streaming measurement (:meth:`EvaluationEngine.
+    submit_prepped`).  ``done`` flips exactly once, after which ``result``
+    holds the final :class:`~repro.core.measure.Result` — cache hits and
+    ``compile_error`` red nodes complete at submit time, pool-backed misses
+    complete in :meth:`EvaluationEngine.settle`.  An *alias* (same canonical
+    key as an in-flight primary) carries ``primary`` and completes together
+    with it — the streaming analogue of the batch path's intra-batch
+    duplicate accounting."""
+
+    config: Configuration
+    nest: "LoopNest | TransformError"
+    key: tuple
+    deadline_at: float | None = None
+    future: object = None
+    result: Result | None = None
+    done: bool = False
+    attempts: int = 1
+    primary: "PendingEvaluation | None" = None
+    aliases: list = None
+
+    def __post_init__(self) -> None:
+        if self.aliases is None:
+            self.aliases = []
+
+
 class EvaluationEngine:
     """One engine instance per tuning run (it carries the run's dedup state).
 
@@ -265,6 +292,9 @@ class EvaluationEngine:
         self.stats = EvalStats()
         self._results: dict[tuple, Result] = {}
         self._seen: set[tuple] = set()
+        # streaming dispatch: canonical key → in-flight primary handle,
+        # so a duplicate submission aliases instead of re-measuring
+        self._inflight: dict[tuple, PendingEvaluation] = {}
         self.store: ResultStore | None = None
         self._store_scope: tuple[str, str] | None = None
         # An explicit empty target is an explicit opt-out, exactly like
@@ -712,6 +742,168 @@ class EvaluationEngine:
         :meth:`evaluate_many` on the same configurations."""
         return self._evaluate_prepped(items)
 
+    # -- streaming dispatch (async pipelined sessions) -------------------------
+
+    def submit_prepped(
+        self,
+        config: Configuration,
+        nest: "LoopNest | TransformError",
+        key: tuple,
+        deadline_at: float | None = None,
+    ) -> PendingEvaluation:
+        """Streaming counterpart of one :meth:`evaluate_prepped` item:
+        resolve it against the cache immediately when possible, else hand it
+        to the backend's :meth:`~repro.core.measure._SupervisedMeasureMixin.
+        submit_one` pool future; the returned handle completes in
+        :meth:`settle`.  Cache/dedup/retry/persist semantics — and every
+        counter — mirror the batch path exactly; a backend with no pool
+        measures synchronously (the handle comes back already done), so the
+        async session degrades gracefully to sequential behavior.
+        ``deadline_at`` is an absolute monotonic budget horizon forwarded to
+        the pool (the in-flight half of the ``max_seconds`` accounting)."""
+        cache = self._results if self.cache else None
+        h = PendingEvaluation(config, nest, key, deadline_at=deadline_at)
+        if isinstance(nest, TransformError):
+            if cache is not None:
+                hit = cache.get(key)
+                if hit is not None:
+                    self.stats.hits += 1
+                    h.result, h.done = hit, True
+                    return h
+            self.stats.misses += 1
+            res = Result("compile_error", note=str(nest))
+            if cache is not None:
+                cache[key] = res
+            h.result, h.done = res, True
+            return h
+        if cache is not None:
+            hit = cache.get(key)
+            if hit is not None:
+                self.stats.hits += 1
+                h.result, h.done = hit, True
+                return h
+            primary = self._inflight.get(key)
+            if primary is not None:
+                self.stats.hits += 1
+                h.primary = primary
+                primary.aliases.append(h)
+                return h
+        self.stats.misses += 1
+        submit = getattr(self.backend, "submit_one", None)
+        fut = (submit(self.workload, config, deadline_at=deadline_at)
+               if submit is not None else None)
+        if fut is None:
+            # no pool available: measure synchronously — identical results,
+            # just unpipelined (the async session's costmodel A/B path)
+            res = self._measure_pending([(0, config, nest, key)])[0]
+            self._finalize_stream(h, res)
+            return h
+        h.future = fut
+        if cache is not None:
+            self._inflight[key] = h
+        return h
+
+    def settle(
+        self,
+        handles: "Sequence[PendingEvaluation]",
+        block: bool = False,
+        timeout: float | None = None,
+    ) -> int:
+        """Drive completion for streaming handles: collect finished futures,
+        apply the :class:`~repro.core.faults.RetryPolicy` (which may
+        resubmit a transient failure), and finalize results into the cache/
+        store/surrogate, marking each handle — and its in-flight aliases —
+        done.  ``block=True`` waits until at least one handle completes (or
+        ``timeout`` elapses).  Returns the number of primaries finalized.
+
+        This is also where learned-surrogate refits leave the critical
+        path: a refit due after finalizing fires here, while in-flight
+        measurements keep the pool workers busy, instead of stalling the
+        strategy's next ``propose``."""
+        from concurrent import futures as _cf
+
+        done_n = 0
+        while True:
+            waiting = [h for h in handles
+                       if not h.done and h.primary is None
+                       and h.future is not None]
+            if not waiting:
+                break
+            ready = [h for h in waiting if h.future.done()]
+            if not ready:
+                if not block:
+                    break
+                _cf.wait([h.future for h in waiting], timeout=timeout,
+                         return_when=_cf.FIRST_COMPLETED)
+                ready = [h for h in waiting if h.future.done()]
+                if not ready:
+                    break       # timed out
+            for h in ready:
+                res = self._settle_result(h, h.future.result())
+                if res is not None:
+                    self._finalize_stream(h, res)
+                    done_n += 1
+            if done_n or not block:
+                break
+            # every ready handle was resubmitted as a retry — keep waiting
+        if done_n and self._learned is not None:
+            # off-critical-path refit: trigger a due refit now (the .ready
+            # property refits lazily) so the next propose scores instantly
+            self._learned.ready
+        return done_n
+
+    def _settle_result(self, h: PendingEvaluation,
+                       res: Result) -> Result | None:
+        """Retry/quarantine policy for one completed streaming measurement
+        (the streaming analogue of :meth:`_measure_pending`'s rounds).
+        Returns the final result, or ``None`` when the failure was
+        resubmitted (the handle carries a fresh future)."""
+        rp = self.retry
+        if rp is None or res.status != "exec_error":
+            return res
+        k = h.key
+        self._fail_counts[k] = self._fail_counts.get(k, 0) + 1
+        if (h.attempts < rp.max_attempts
+                and k not in self._quarantined
+                and self._fail_counts[k] < rp.quarantine_after):
+            rp.pause(h.attempts, self._retry_rng)
+            self.stats.retries += 1
+            h.attempts += 1
+            submit = getattr(self.backend, "submit_one", None)
+            fut = (submit(self.workload, h.config, deadline_at=h.deadline_at)
+                   if submit is not None else None)
+            if fut is not None:
+                h.future = fut
+                return None
+            # pool gone mid-run: retry synchronously through the isolated
+            # dispatch path, then re-apply this policy to its outcome
+            return self._settle_result(
+                h, self._dispatch([(0, h.config, h.nest, h.key)])[0])
+        if (self._fail_counts.get(k, 0) >= rp.quarantine_after
+                and k not in self._quarantined):
+            self._quarantined.add(k)
+            self.stats.quarantined += 1
+            res = Result(
+                "exec_error",
+                note=f"quarantined after {self._fail_counts[k]} "
+                     f"failures: {res.note}")
+        return res
+
+    def _finalize_stream(self, h: PendingEvaluation, res: Result) -> None:
+        """Land one streaming measurement exactly like the batch path:
+        cache under the structure key, train the surrogate, persist, then
+        complete the handle and its aliases."""
+        if self.cache:
+            self._results[h.nest.structure_key()] = res
+        if self._learned is not None:
+            self._learned.observe(h.nest.structure_key(), res)
+        if self.store is not None:
+            self._persist([(0, h.config, h.nest, h.key)], [res])
+        h.result, h.done = res, True
+        self._inflight.pop(h.key, None)
+        for a in h.aliases:
+            a.result, a.done = res, True
+
     def sweep(
         self,
         configs: Sequence[Configuration],
@@ -765,6 +957,12 @@ class EvaluationEngine:
                 faults[k] = faults.get(k, 0) + v
         if faults:
             out["faults"] = faults
+        # only when a supervised pool was actually used: serial logs must
+        # stay byte-identical to the pre-pool drivers
+        get_util = getattr(self.backend, "pool_utilization", None)
+        util = get_util() if get_util is not None else None
+        if util:
+            out["pool"] = util
         return out
 
     # -- checkpointing ---------------------------------------------------------

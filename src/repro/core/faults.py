@@ -39,8 +39,8 @@ from dataclasses import dataclass, field
 from typing import Callable
 
 from .loopnest import LoopNest
-from .measure import Backend, Result, register_worker_backend, \
-    build_worker_backend
+from .measure import Backend, Result, _SupervisedMeasureMixin, \
+    register_worker_backend, build_worker_backend
 from .searchspace import Configuration
 from .storebackend import DelegatingStoreBackend, StoreRecord
 from .workloads import Workload
@@ -107,7 +107,7 @@ class RetryPolicy:
 
 
 @dataclass
-class FaultInjectingBackend(Backend):
+class FaultInjectingBackend(_SupervisedMeasureMixin, Backend):
     """Seeded fault-injection wrapper around a real backend.
 
     Each ``evaluate`` draws once from a private ``random.Random(seed)`` and
@@ -151,10 +151,24 @@ class FaultInjectingBackend(Backend):
     deadline_s: float | None = None     # bounds simulated (in-process) hangs
     wrong_factor: float = 7.0
     name: str = "fault"
+    process_workers: int = 0        # >=1 → supervised worker pool (workers
+                                    # rebuild the whole fault+inner stack)
+    mp_start_method: str = "spawn"
+    pool_deadline_s: float | None = None    # per-task hard kill deadline
+    breaker: int = 3
     faults: dict = field(default_factory=dict, init=False, repr=False,
                          compare=False)
     _rng: random.Random = field(default=None, init=False, repr=False,
                                 compare=False)
+    _pool: object = field(default=None, init=False, repr=False, compare=False)
+    _pool_lockdir: str | None = field(
+        default=None, init=False, repr=False, compare=False)
+    _pool_broken: bool = field(
+        default=False, init=False, repr=False, compare=False)
+    _batch_deadline: float | None = field(
+        default=None, init=False, repr=False, compare=False)
+    _warned_fallback: bool = field(
+        default=False, init=False, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         if self.inner is None:
@@ -216,8 +230,61 @@ class FaultInjectingBackend(Backend):
                           note="injected wrong result")
         return res
 
-    # evaluate_many: the sequential Backend default — injection draws are
-    # consumed one per evaluate, in order, keeping the schedule seeded.
+    # -- supervised process-pool batching -------------------------------------
+    #
+    # With process_workers=0 (the default) batches run sequentially in
+    # process, injection draws consumed one per evaluate, in order — the
+    # seeded schedule of every pre-pool user is unchanged.  With
+    # process_workers>=1 each supervised worker rebuilds the *whole*
+    # fault+inner stack from worker_spec(), so every worker has its own
+    # seeded injector (the schedule is per-worker, not global) — the shape
+    # bench_async uses to pipeline deterministic slow measurements.
+
+    def worker_spec(self) -> dict:
+        """Picklable spec rebuilding this injector (and its inner backend,
+        recursively) inside a supervised worker — pool fields excluded."""
+        inner_spec_fn = getattr(self.inner, "worker_spec", None)
+        if inner_spec_fn is None:
+            raise ValueError(
+                f"FaultInjectingBackend(process_workers>=1): inner backend "
+                f"{self.inner.name!r} has no worker_spec() — it cannot be "
+                f"rebuilt inside a pool worker")
+        return {
+            "inner": {"kind": self.inner.name, **inner_spec_fn()},
+            "crash": self.crash, "hang": self.hang, "slow": self.slow,
+            "wrong_result": self.wrong_result, "seed": self.seed,
+            "crash_mode": self.crash_mode, "hang_s": self.hang_s,
+            "slow_s": self.slow_s, "deadline_s": self.deadline_s,
+            "wrong_factor": self.wrong_factor,
+        }
+
+    def _pool_deadline(self) -> float | None:
+        return self.pool_deadline_s
+
+    def evaluate_many(
+        self,
+        workload: Workload,
+        configs: "list[Configuration]",
+        nests=None,
+    ) -> "list[Result]":
+        # nest hints are not forwarded to pool workers (they re-derive);
+        # serial dispatch matches the pre-pool sequential default.
+        batch_deadline = self._take_batch_deadline()
+        if configs and self.process_workers >= 1:
+            pool = self._ensure_pool()
+            if pool is not None:
+                out = pool.run(workload, list(configs),
+                               batch_deadline_s=batch_deadline)
+                if pool.broken:
+                    self.close()
+                    self._pool_broken = True
+                return out
+            self._note_serial_fallback()
+        if batch_deadline is None:
+            # pre-pool sequential default, nest hints forwarded — byte-
+            # identical to every existing engine-level injection user
+            return Backend.evaluate_many(self, workload, configs, nests)
+        return self._serial_with_deadline(workload, configs, batch_deadline)
 
 
 def _build_fault_worker(inner=None, **kwargs) -> FaultInjectingBackend:

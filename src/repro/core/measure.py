@@ -57,6 +57,7 @@ host-independent; wallclock scopes embed the host fingerprint and scale).
 
 from __future__ import annotations
 
+import collections
 import logging
 import multiprocessing
 import os
@@ -64,7 +65,7 @@ import shutil
 import tempfile
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
@@ -372,6 +373,18 @@ class SupervisedPool:
         self._lock = threading.Lock()
         self._workers: list[_SupervisedWorker | None] = [
             self._spawn() for _ in range(max(1, workers))]
+        # per-slot utilization (busy seconds, tasks served, deadline kills)
+        # — surfaced via utilization() into TuningLog.cache["pool"]
+        self._t_started = time.monotonic()
+        self._util: list[dict] = [
+            {"busy_s": 0.0, "tasks": 0, "kills": 0}
+            for _ in range(max(1, workers))]
+        # streaming submit() state: a shared FIFO drained by one dispatcher
+        # thread per worker slot (started lazily on the first submit)
+        self._task_q: collections.deque = collections.deque()
+        self._task_cv = threading.Condition()
+        self._dispatchers: list[threading.Thread] = []
+        self._closing = False
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -413,12 +426,137 @@ class SupervisedPool:
                     else "red nodes (no serial fallback)")
 
     def close(self) -> None:
-        """Kill every worker and release the core-claim directory."""
+        """Kill every worker and release the core-claim directory.  Any
+        queued-but-unstarted streaming tasks resolve to ``exec_error`` red
+        results (a closed pool never leaves a future dangling)."""
+        with self._task_cv:
+            self._closing = True
+            self._task_cv.notify_all()
+        for t in self._dispatchers:
+            t.join(timeout=30.0)
+        self._dispatchers = []
+        while True:
+            with self._task_cv:
+                task = self._task_q.popleft() if self._task_q else None
+            if task is None:
+                break
+            fut = task[0]
+            if fut.set_running_or_notify_cancel():
+                fut.set_result(Result("exec_error", note="pool closed"))
         for slot in range(len(self._workers)):
             self._retire(slot)
         shutil.rmtree(self.lockdir, ignore_errors=True)
 
     # -- dispatch ------------------------------------------------------------
+
+    def warmup(self, timeout: float | None = None) -> int:
+        """Block until every worker finished its startup handshake; returns
+        the number that came up ready.  Benchmarks call this so pool spawn
+        cost (one interpreter + JAX import per worker) is excluded from the
+        measured tuning wall clock."""
+        t = self.startup_timeout if timeout is None else timeout
+        ready = 0
+        for slot in range(len(self._workers)):
+            w = self._worker(slot)
+            if w is not None and w.ensure_ready(t):
+                ready += 1
+        return ready
+
+    def submit(
+        self,
+        workload: "Workload",
+        config: "Configuration",
+        deadline_at: float | None = None,
+    ) -> "Future[Result]":
+        """Streaming entry point: enqueue one task and return a
+        :class:`~concurrent.futures.Future` that resolves to its
+        :class:`Result`.  One dispatcher thread per worker slot drains the
+        shared queue, so up to ``workers`` tasks run concurrently and a
+        future completes the moment *its* measurement lands — the async
+        session observes results out of submission order.
+
+        ``deadline_at`` is an absolute ``time.monotonic()`` budget horizon
+        (the session's remaining ``max_seconds``): tasks that cannot start
+        before it become ``exec_error`` red nodes, exactly like the batch
+        deadline in :meth:`run`.  Deadlines, kill/respawn, and the circuit
+        breaker are the same machinery — the dispatcher reuses
+        :meth:`_run_one`.  Futures never carry exceptions; every outcome is
+        a :class:`Result`.  Do not interleave :meth:`submit` with a
+        concurrent :meth:`run` call — both would drive the same worker
+        slots."""
+        fut: "Future[Result]" = Future()
+        with self._task_cv:
+            if self._closing:
+                fut.set_result(Result("exec_error", note="pool closed"))
+                return fut
+            self._task_q.append((fut, workload, config, deadline_at))
+            if len(self._dispatchers) < len(self._workers):
+                slot = len(self._dispatchers)
+                t = threading.Thread(
+                    target=self._dispatch_loop, args=(slot,), daemon=True)
+                self._dispatchers.append(t)
+                t.start()
+            self._task_cv.notify()
+        return fut
+
+    def _dispatch_loop(self, slot: int) -> None:
+        while True:
+            with self._task_cv:
+                while not self._task_q and not self._closing:
+                    self._task_cv.wait()
+                if self._closing:
+                    return      # close() red-flags whatever is still queued
+                fut, workload, config, deadline_at = self._task_q.popleft()
+            if not fut.set_running_or_notify_cancel():
+                continue
+            if deadline_at is not None and time.monotonic() >= deadline_at:
+                self._count("deadline_skips")
+                fut.set_result(
+                    Result("exec_error", note="timeout (batch deadline)"))
+                continue
+            if self.broken:
+                fut.set_result(self._serial_eval(workload, config))
+                continue
+            res = self._timed_run_one(slot, workload, config, deadline_at)
+            fut.set_result(res if res is not None
+                           else self._serial_eval(workload, config))
+
+    def utilization(self) -> dict:
+        """Pool utilization snapshot for ``TuningLog.cache["pool"]``:
+        per-worker busy/idle seconds, tasks served, and deadline kills,
+        plus the aggregate busy fraction over the pool's lifetime."""
+        wall = max(time.monotonic() - self._t_started, 1e-9)
+        with self._lock:
+            per = [
+                {"busy_s": round(u["busy_s"], 4),
+                 "idle_s": round(max(0.0, wall - u["busy_s"]), 4),
+                 "tasks": u["tasks"], "kills": u["kills"]}
+                for u in self._util]
+        busy = sum(u["busy_s"] for u in per)
+        return {
+            "workers": len(per),
+            "wall_s": round(wall, 4),
+            "busy_s": round(busy, 4),
+            "tasks": sum(u["tasks"] for u in per),
+            "kills": sum(u["kills"] for u in per),
+            "busy_frac": round(busy / (wall * len(per)), 4),
+            "per_worker": per,
+        }
+
+    def _serial_eval(self, workload: "Workload",
+                     config: "Configuration") -> "Result":
+        self._count("serial_fallbacks")
+        if self.serial_fallback is None:
+            return Result(
+                "exec_error",
+                note="worker died (supervised pool broken, "
+                     "no serial fallback)")
+        try:
+            return self.serial_fallback(workload, config)
+        except Exception as e:  # noqa: BLE001
+            return Result(
+                "exec_error",
+                note=f"serial fallback failed: {type(e).__name__}: {e}")
 
     def run(
         self,
@@ -440,20 +578,6 @@ class SupervisedPool:
             with qlock:
                 return pending.pop(0) if pending else None
 
-        def serial(i: int) -> Result:
-            self._count("serial_fallbacks")
-            if self.serial_fallback is None:
-                return Result(
-                    "exec_error",
-                    note="worker died (supervised pool broken, "
-                         "no serial fallback)")
-            try:
-                return self.serial_fallback(workload, configs[i])
-            except Exception as e:  # noqa: BLE001
-                return Result(
-                    "exec_error",
-                    note=f"serial fallback failed: {type(e).__name__}: {e}")
-
         def drive(slot: int) -> None:
             while True:
                 i = next_index()
@@ -465,10 +589,12 @@ class SupervisedPool:
                         "exec_error", note="timeout (batch deadline)")
                     continue
                 if self.broken:
-                    results[i] = serial(i)
+                    results[i] = self._serial_eval(workload, configs[i])
                     continue
-                res = self._run_one(slot, workload, configs[i], batch_end)
-                results[i] = res if res is not None else serial(i)
+                res = self._timed_run_one(slot, workload, configs[i],
+                                          batch_end)
+                results[i] = (res if res is not None
+                              else self._serial_eval(workload, configs[i]))
 
         if len(self._workers) == 1:
             drive(0)
@@ -480,6 +606,18 @@ class SupervisedPool:
             for t in threads:
                 t.join()
         return results  # type: ignore[return-value]
+
+    def _timed_run_one(self, slot: int, workload: "Workload",
+                       config: "Configuration",
+                       batch_end: float | None) -> "Result | None":
+        t0 = time.monotonic()
+        try:
+            return self._run_one(slot, workload, config, batch_end)
+        finally:
+            with self._lock:
+                u = self._util[slot]
+                u["busy_s"] += time.monotonic() - t0
+                u["tasks"] += 1
 
     def _run_one(self, slot: int, workload: "Workload",
                  config: "Configuration",
@@ -515,6 +653,8 @@ class SupervisedPool:
                     # hard overrun: kill, release the core, respawn lazily
                     self._retire(slot)
                     self._count("deadline_kills")
+                    with self._lock:
+                        self._util[slot]["kills"] += 1
                     return Result(
                         "exec_error",
                         note=f"timeout (worker killed after {wait:.1f}s "
@@ -591,6 +731,10 @@ class _SupervisedMeasureMixin:
     :meth:`worker_spec` / :meth:`_pool_deadline`.
     """
 
+    #: last pool utilization snapshot, kept across close() so the session
+    #: can surface it in TuningLog.cache["pool"] after the pool is gone
+    _last_pool_util = None
+
     def worker_spec(self) -> dict:
         """Picklable constructor kwargs from which a pool worker rebuilds
         this backend (pool fields intentionally excluded — workers evaluate
@@ -650,10 +794,16 @@ class _SupervisedMeasureMixin:
             return self._pool
         if self._pool_broken:
             return None
-        if (self._pool_requires_pinning()
-                and not hasattr(os, "sched_setaffinity")):
-            return None
-        workers = min(self.process_workers, len(_usable_cores()))
+        if self._pool_requires_pinning():
+            # honest wall-clock timing needs one dedicated core per worker
+            if not hasattr(os, "sched_setaffinity"):
+                return None
+            workers = min(self.process_workers, len(_usable_cores()))
+        else:
+            # deterministic backends run unpinned fine — don't clamp to the
+            # core count (a 1-core host can still pipeline sleep/IO-bound
+            # measurements across N workers)
+            workers = self.process_workers
         if workers < 1:
             return None
         try:
@@ -671,9 +821,30 @@ class _SupervisedMeasureMixin:
             self._pool_broken = True
         return self._pool
 
+    def submit_one(self, workload, config,
+                   deadline_at: float | None = None):
+        """Streaming dispatch: submit one measurement to the supervised pool
+        and return its :class:`~concurrent.futures.Future`, or ``None`` when
+        no pool is available (then the caller measures synchronously —
+        results identical, just unpipelined)."""
+        if getattr(self, "process_workers", 0) < 1:
+            return None
+        pool = self._ensure_pool()
+        if pool is None:
+            return None
+        return pool.submit(workload, config, deadline_at=deadline_at)
+
+    def pool_utilization(self) -> dict | None:
+        """Utilization of the supervised pool, or ``None`` when no pool was
+        ever used (so fault-free serial logs stay byte-identical)."""
+        if self._pool is not None:
+            self._last_pool_util = self._pool.utilization()
+        return self._last_pool_util
+
     def close(self) -> None:
         """Shut down the worker pool and release the core-claim directory."""
         if self._pool is not None:
+            self._last_pool_util = self._pool.utilization()
             self._pool.close()
             self._pool = None
         if self._pool_lockdir is not None:
@@ -703,6 +874,13 @@ class CostModelBackend(Backend):
                 self._rng = np.random.default_rng(self.seed)
             t *= float(np.exp(self._rng.normal(0.0, self.noise)))
         return Result("ok", time_s=t)
+
+    def worker_spec(self) -> dict:
+        """Picklable constructor kwargs for a supervised-pool worker (used
+        when a :class:`~repro.core.faults.FaultInjectingBackend` wraps this
+        model inside a pool)."""
+        return {"machine": self.machine, "noise": self.noise,
+                "seed": self.seed}
 
     def store_scope(self) -> str:
         # Deterministic analytic model: host-independent.  Noisy runs are

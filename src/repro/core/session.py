@@ -69,7 +69,9 @@ _log = logging.getLogger("repro.core.session")
 
 #: Bump when the checkpoint payload layout changes — a mismatched sidecar is
 #: rejected (resume from a stale format would corrupt the run silently).
-CHECKPOINT_VERSION = 1
+#: v2: MCTS snapshots carry a pending-descent dict and per-node pending
+#: counters (async virtual loss) instead of a single optional tuple.
+CHECKPOINT_VERSION = 2
 
 __all__ = [
     "Proposal",
@@ -279,6 +281,7 @@ class TuningSession:
         checkpoint: "str | os.PathLike | None" = None,
         checkpoint_every: int = 25,
         resume: bool = False,
+        async_workers: int = 0,
         **strategy_kwargs,
     ) -> TuningLog:
         """Run one ask/tell tuning loop and return its :class:`TuningLog`.
@@ -307,6 +310,21 @@ class TuningSession:
         with the same spec reaches the byte-identical best; a missing
         sidecar logs a warning and starts fresh, so ``resume=True`` is safe
         as an unconditional default in supervisors.
+
+        ``async_workers=N`` (N >= 1) switches to the **pipelined** loop:
+        proposals are submitted as streaming measurements
+        (:meth:`EvaluationEngine.submit_prepped` over the backend's
+        supervised pool) and the strategy keeps proposing speculatively
+        against in-flight results — up to ~2·N measurements stay in flight
+        so all N pool workers remain busy while the strategy thinks and the
+        surrogate refits.  Results are observed as they land (strategies
+        tolerate out-of-order observes; MCTS applies virtual loss to pending
+        descents), experiments are logged under their submission number, and
+        checkpoints land only at quiescent points (everything in flight
+        drained), preserving the ``--resume`` guarantee.  ``async_workers=0``
+        (the default) is the synchronous loop, byte-identical to before the
+        async mode existed; a backend without a pool degrades the async loop
+        to synchronous completion — identical results, no pipelining.
         """
         strat = resolve_strategy(strategy, **strategy_kwargs)
         engine = engine or EvaluationEngine(
@@ -342,6 +360,12 @@ class TuningSession:
             strat.bind(engine, space, workload)
             t_start = time.perf_counter()
         last_ckpt = len(log.experiments)
+
+        if async_workers:
+            return self._tune_async(
+                strat, engine, log, workload, budget, max_seconds,
+                on_experiment, checkpoint, checkpoint_every, t_start,
+                last_ckpt, int(async_workers))
 
         while not strat.finished:
             # The baseline is exempt from the experiment budget: every legacy
@@ -390,6 +414,121 @@ class TuningSession:
                 self._save_checkpoint(checkpoint, workload, strat, engine,
                                       log, t_start, finished=False)
                 last_ckpt = len(log.experiments)
+        log.cache = engine.stats_dict()
+        strat.finalize(log)
+        if checkpoint:
+            self._save_checkpoint(checkpoint, workload, strat, engine, log,
+                                  t_start, finished=True)
+        return log
+
+    def _tune_async(self, strat: Strategy, engine: EvaluationEngine,
+                    log: TuningLog, workload: Workload, budget: int,
+                    max_seconds: "float | None",
+                    on_experiment: "Callable[[Experiment], None] | None",
+                    checkpoint, checkpoint_every: int, t_start: float,
+                    last_ckpt: int, workers: int) -> TuningLog:
+        """The pipelined ask/tell loop (``tune(async_workers=N)``).
+
+        Invariants vs the synchronous loop: every proposal is submitted
+        under a contiguous submission number and logged exactly once; the
+        budget caps *submissions* (at quiescence submissions == logged
+        experiments, so the budget semantics match); ``max_seconds``
+        clipping counts submitted-but-unobserved measurements so the
+        pipeline cannot overshoot; checkpoints and the finished-log tail
+        run only at quiescent points.  With an instant (pool-less) backend
+        every submission completes synchronously and the inner submit loop
+        yields to observation first, so the trajectory is identical to the
+        synchronous session — the pipelining only reorders genuinely
+        concurrent measurements."""
+        lookahead = max(workers + 1, 2 * workers)
+        inflight: "list[tuple[int, Proposal, object]]" = []
+        submitted = len(log.experiments)
+        stop = False
+
+        def drain_done() -> int:
+            done = [t for t in inflight if t[2].done]
+            if not done:
+                return 0
+            inflight[:] = [t for t in inflight if not t[2].done]
+            for num, prop, h in done:
+                exp = Experiment(number=num, config=prop.config,
+                                 result=h.result, parent=prop.parent)
+                log.experiments.append(exp)
+                if on_experiment:
+                    on_experiment(exp)
+                strat.observe(exp)
+            return len(done)
+
+        while True:
+            if not inflight:
+                # quiescent point: the log is complete, budgets are
+                # re-checked exactly like the sync loop, checkpoints are safe
+                log.experiments.sort(key=lambda e: e.number)
+                if strat.finished or stop:
+                    break
+                if log.experiments and submitted >= budget:
+                    break
+                if (max_seconds is not None
+                        and time.perf_counter() - t_start > max_seconds):
+                    break
+                if (checkpoint and
+                        len(log.experiments) - last_ckpt >= checkpoint_every):
+                    self._save_checkpoint(checkpoint, workload, strat,
+                                          engine, log, t_start,
+                                          finished=False)
+                    last_ckpt = len(log.experiments)
+            made = 0
+            if not stop:
+                room = budget - submitted
+                if not log.experiments and not inflight:
+                    # the baseline is exempt from the budget (see tune())
+                    room = max(room, 1)
+                deadline_at = None
+                if max_seconds is not None and log.experiments:
+                    elapsed = time.perf_counter() - t_start
+                    remaining = max_seconds - elapsed
+                    if remaining <= 0:
+                        stop, room = True, 0
+                    else:
+                        deadline_at = time.monotonic() + remaining
+                        per = elapsed / len(log.experiments)
+                        if per > 0:
+                            # in-flight measurements already claim a share
+                            # of the remaining wall clock — count them so
+                            # the pipelined loop cannot overshoot
+                            afford = int(remaining / per) - len(inflight)
+                            floor = 0 if inflight else 1
+                            room = min(room, max(floor, afford))
+                while room > 0 and len(inflight) < lookahead:
+                    props = list(strat.propose(room))
+                    if not props:
+                        break
+                    for p in props:
+                        nest, key = (p.prepped if p.prepped is not None
+                                     else engine.prep(p.config))
+                        h = engine.submit_prepped(p.config, nest, key,
+                                                  deadline_at=deadline_at)
+                        inflight.append((submitted, p, h))
+                        submitted += 1
+                        made += 1
+                        room -= 1
+                    if any(t[2].done for t in inflight):
+                        # observe what already landed before speculating
+                        # further — this is what degrades an instant
+                        # backend to the synchronous trajectory
+                        break
+            if inflight:
+                engine.settle([t[2] for t in inflight], block=(made == 0))
+                drain_done()
+            elif made == 0:
+                if stop:
+                    break
+                # nothing proposed, nothing in flight, not finished: the
+                # strategy promises progress (same contract as the sync
+                # loop) — re-check budgets and ask again
+                continue
+
+        log.experiments.sort(key=lambda e: e.number)
         log.cache = engine.stats_dict()
         strat.finalize(log)
         if checkpoint:
@@ -499,7 +638,10 @@ class TuningSpec:
     0}`` — all fields optional), ``null`` to disable retries.
     ``checkpoint`` names the crash-safe session sidecar written atomically
     every ``checkpoint_every`` experiments; ``python -m repro.core.session
-    spec.json --resume`` continues a killed run from it.  The ``"fault"``
+    spec.json --resume`` continues a killed run from it.
+    ``async_workers`` (default 0) switches :meth:`TuningSession.tune` to
+    the pipelined loop with that many measurements in flight — see
+    :meth:`TuningSession.tune` for the semantics.  The ``"fault"``
     backend (fault-injection harness) takes an ``inner`` field in its
     ``backend_args`` — a nested ``{"backend": ..., "backend_args": {...}}``
     object resolved recursively.
@@ -524,6 +666,7 @@ class TuningSpec:
     retry: dict | None = None
     checkpoint: str | None = None
     checkpoint_every: int = 25
+    async_workers: int = 0
 
     # -- serialization -------------------------------------------------------
 
@@ -654,6 +797,7 @@ class TuningSpec:
             checkpoint=self.checkpoint,
             checkpoint_every=self.checkpoint_every,
             resume=resume,
+            async_workers=self.async_workers,
             **self.strategy_args,
         )
 
@@ -679,6 +823,11 @@ def main(argv: Sequence[str] | None = None) -> int:
                          "CC_RESULT_STORE)")
     ap.add_argument("--checkpoint", metavar="CKPT.pkl", default=None,
                     help="override the spec's crash-safe checkpoint sidecar")
+    ap.add_argument("--async-workers", type=int, default=None,
+                    metavar="N", dest="async_workers",
+                    help="override the spec's async_workers (pipelined "
+                         "session with N measurements in flight; 0 = the "
+                         "synchronous loop)")
     ap.add_argument("--resume", action="store_true",
                     help="resume from the checkpoint sidecar (missing file "
                          "starts fresh; a mismatched one is an error)")
@@ -697,6 +846,8 @@ def main(argv: Sequence[str] | None = None) -> int:
         spec.store = args.store
     if args.checkpoint is not None:
         spec.checkpoint = args.checkpoint
+    if args.async_workers is not None:
+        spec.async_workers = args.async_workers
 
     try:
         log = spec.run(resume=args.resume)

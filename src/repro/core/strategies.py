@@ -82,6 +82,11 @@ class GreedyStrategy(Strategy):
         if not self._started:
             self._started = True
             return [Proposal(Configuration(), None)]
+        if not self._heap:
+            # async propose-ahead may ask again while every expandable
+            # parent's result is still in flight — nothing to expand *yet*
+            # (unreachable in the synchronous loop, which checks `finished`)
+            return []
         _, num = heapq.heappop(self._heap)
         kids = self.space.children(self._configs[num], dedup=False)
         return [Proposal(c, num, prepped=(nest, key))
@@ -130,6 +135,10 @@ class _Node:
                                 # add selectable children without consuming
                                 # widening slots (exploration is not starved
                                 # by a densely linked DAG)
+    pending: int = 0            # expansions proposed here but not yet
+                                # observed (async virtual-loss descents) —
+                                # a node with everything in flight must wait,
+                                # not be declared dead
 
     def ucb(self, c: float, parent_visits: int) -> float:
         """UCB1 as seen from the parent the selection is descending through
@@ -236,7 +245,11 @@ class MctsStrategy(Strategy):
         self._t0: float | None = None
         self._started = False
         self._finished = False
-        self._pending: tuple[_Node, tuple, list[_Node]] | None = None
+        # key → (node, selection path) for every descent whose expansion is
+        # in flight.  Sync sessions hold at most one entry between a
+        # propose/observe pair; async propose-ahead holds one per pending
+        # measurement (virtual-loss descents, reconciled by key on observe).
+        self._pending: dict[tuple, tuple[_Node, list[_Node]]] = {}
 
     def on_bound(self) -> None:
         # Only warm runs key every derived child (the ordering needs the keys
@@ -328,6 +341,10 @@ class MctsStrategy(Strategy):
         if not self._started:
             self._started = True
             return [Proposal(Configuration(), None)]
+        if self.root is None:
+            # baseline still in flight (async propose-ahead): nothing to
+            # descend until it lands — a failed baseline sets _finished
+            return []
         engine = self.engine
         while True:
             # 1. selection: descend while widening is not indicated,
@@ -341,6 +358,10 @@ class MctsStrategy(Strategy):
                     break
                 live = [ch for ch in node.children if not ch.dead]
                 if not live:
+                    if node.pending:
+                        # every candidate here is in flight — wait for an
+                        # observe instead of declaring the node dead
+                        return []
                     node.dead = True
                     break
                 node = max(
@@ -373,11 +394,21 @@ class MctsStrategy(Strategy):
                 # was pure trajectory variance — so merging waits until the
                 # run is warm.
                 continue
-            self._pending = (node, key, path)
+            # Virtual loss: the path's *visit* half of the backpropagation
+            # is applied at propose time, the *value* half at observe.  In a
+            # synchronous session nothing reads the tree between the two, so
+            # the state at every propose/observe boundary is byte-identical
+            # to the old single-shot update; in an async session the early
+            # visits lower the pending path's UCB mean, steering concurrent
+            # descents away from collapsing onto one branch.
+            for nn in path:
+                nn.visits += 1
+            node.pending += 1
+            self._pending[key] = (node, path)
             return [Proposal(config, node.number, prepped=(nest, key))]
 
     def observe(self, exp: Experiment) -> None:
-        if self.root is None and self._pending is None:
+        if self.root is None and not self._pending:
             # experiment 0: the baseline becomes the root
             base_key = self.engine.canonical_key(exp.config)
             self.engine.seed_seen(exp.config)
@@ -389,15 +420,17 @@ class MctsStrategy(Strategy):
                               time_s=self._t0, visits=1, value=1.0, number=0)
             self.table[base_key] = self.root
             return
-        node, key, path = self._pending
-        self._pending = None
+        key = self.engine.canonical_key(exp.config)
+        node, path = self._pending.pop(key)
+        node.pending -= 1
         child = _Node(config=exp.config, key=key, parents=[node],
                       time_s=exp.result.time_s if exp.result.ok else None,
                       dead=not exp.result.ok, number=exp.number)
         node.children.append(child)
         node.owned += 1
         self.table[key] = child
-        # 3. backpropagation along the selection path (plus the new child).
+        # 3. backpropagation along the selection path (plus the new child);
+        # the path's visits were already counted at propose (virtual loss).
         # Path backprop keeps visit counts well-founded on the DAG — the
         # all-ancestor walk is reserved for transposition discoveries, where
         # crediting every derivation order is the point.
@@ -405,7 +438,6 @@ class MctsStrategy(Strategy):
         child.visits += 1
         child.value += r
         for nn in path:
-            nn.visits += 1
             nn.value += r
 
     def finalize(self, log: TuningLog) -> None:
@@ -416,12 +448,13 @@ class MctsStrategy(Strategy):
             log.cache["dag_nodes"] = len(self.table)
 
     def snapshot(self) -> dict:
-        # Checkpoints land between propose/observe rounds, where _pending is
-        # always None — drop it defensively so a mid-round snapshot (e.g. a
-        # test checkpointing from on_experiment) can never resurrect a
-        # half-expanded node whose path refers to pre-restore tree objects.
+        # Checkpoints land at quiescent points (every in-flight proposal
+        # observed), where _pending is always empty — drop it defensively so
+        # a mid-round snapshot (e.g. a test checkpointing from
+        # on_experiment) can never resurrect a half-expanded node whose path
+        # refers to pre-restore tree objects.
         state = super().snapshot()
-        state["_pending"] = None
+        state["_pending"] = {}
         return state
 
 
@@ -459,6 +492,11 @@ class BeamStrategy(Strategy):
         if not self._started:
             self._started = True
             return [Proposal(Configuration(), None)]
+        if self._expect:
+            # beam is level-synchronous: async propose-ahead must wait for
+            # the whole in-flight level before the next one can be derived
+            # (unreachable in the synchronous loop)
+            return []
         dedup = self.space.dedup
         batch: list[Proposal] = []
         for parent in self._frontier:

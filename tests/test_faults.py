@@ -349,6 +349,7 @@ class TestSerialFallbackAccounting:
         assert len(warns) == 1                      # warned once per backend
 
 
+@pytest.mark.pool
 @needs_affinity
 class TestSupervisedPool:
     def test_worker_lifecycle_and_core_reclaim(self):
