@@ -11,7 +11,9 @@
   bench_store             store migration + cross-workload surrogate transfer
   bench_faults            fault injection: retry/quarantine + kill-9 resume (PR 6)
   bench_async             async pipelined sessions: worker scaling + resume (PR 7)
-  bench_kernels           Pallas kernel micro-benchmarks
+  bench_kernels           kernel-tuning gate: the repo's own Pallas kernels
+                          (attention/SSD) tuned through TuningSession —
+                          tuned must beat the block=512 serving default
   bench_roofline          §Roofline table from the 80-cell dry-run records
 
 Prints a final ``name,us_per_call,derived`` CSV.  Run with
@@ -36,8 +38,8 @@ Prints a final ``name,us_per_call,derived`` CSV.  Run with
   printed) and exit.
 * ``--quick`` — smoke mode: only the cheap cost-model gate suites
   (``eval_cache`` + the cost-model half of ``warm_start`` + ``session`` +
-  ``acquisition`` + ``faults`` + ``async``), and exit non-zero if any
-  acceptance gate regressed.  This
+  ``acquisition`` + ``faults`` + ``async`` + ``kernels``), and exit
+  non-zero if any acceptance gate regressed.  This
   is the CI regression check; it is also runnable standalone:
   ``python -m benchmarks.run --quick --json out.json``.
 """
@@ -77,7 +79,7 @@ def _collect_gates(ran: set[str]) -> dict:
     results = os.fspath(results_dir())
     gates: dict = {}
     for name in ("eval_cache", "warm_start", "surrogate", "session",
-                 "acquisition", "store", "faults", "async"):
+                 "acquisition", "store", "faults", "async", "kernels"):
         if name not in ran:
             continue
         try:
@@ -202,6 +204,7 @@ def main(argv=None) -> None:
             "acquisition": bench_acquisition.main,
             "faults": bench_faults.main,
             "async": bench_async.main,
+            "kernels": bench_kernels.main,
         }
     if args.only:
         picked = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -58,6 +58,8 @@ from .transformations import (
     Unroll,
     Vectorize,
 )
+from .kernelworkload import (KernelWorkload, attention_workload,
+                             kernel_workload, serve_overrides, ssd_workload)
 from .workloads import COVARIANCE, GEMM, PAPER_WORKLOADS, SYR2K, Workload, matmul_workload
 
 __all__ = [
@@ -66,7 +68,8 @@ __all__ = [
     "DelegatingStoreBackend",
     "EvalStats", "EvaluationEngine", "Experiment", "FaultInjectingBackend",
     "FlakyStoreBackend", "GEMM", "GreedyStrategy",
-    "IllegalTransform", "InjectedCrash", "Interchange", "Loop", "LoopNest",
+    "IllegalTransform", "InjectedCrash", "Interchange", "KernelWorkload",
+    "Loop", "LoopNest",
     "Machine",
     "MctsStrategy", "NoSuccessfulExperiment", "PAPER_WORKLOADS",
     "PallasBackend", "Parallelize", "PendingEvaluation", "Proposal",
@@ -81,8 +84,10 @@ __all__ = [
     "TuningLog", "TuningSession", "TuningSpec", "Unroll", "Vectorize",
     "WallclockBackend", "Workload", "XEON_8180M", "check_legal",
     "estimate_time", "estimate_time_uncached", "expected_improvement",
-    "host_fingerprint", "is_legal", "make_nest", "matmul_workload",
+    "attention_workload",
+    "host_fingerprint", "is_legal", "kernel_workload", "make_nest",
+    "matmul_workload",
     "migrate_store", "nest_from_key", "register_strategy",
     "resolve_strategy", "run_beam", "run_greedy", "run_mcts", "run_random",
-    "spearman", "structure_features",
+    "serve_overrides", "spearman", "ssd_workload", "structure_features",
 ]

@@ -1036,12 +1036,26 @@ class WallclockBackend(_SupervisedMeasureMixin, _ThreadedEvalMixin, Backend):
             return Result("exec_error", note=f"{type(e).__name__}: {e}")
 
 
+def _is_kernel_workload(w) -> bool:
+    """A workload is "any callable with a structure key": anything exposing
+    ``build``/``vmem_bytes`` (e.g. :class:`~repro.core.kernelworkload.
+    KernelWorkload`) supplies its own hand-written Pallas kernel and VMEM
+    model instead of the einsum codegen path."""
+    return callable(getattr(w, "build", None))
+
+
 @dataclass
 class PallasBackend(_SupervisedMeasureMixin, _ThreadedEvalMixin, Backend):
     """Builds the Pallas kernel (interpret mode), checks correctness against
     the jnp oracle at a reduced scale, rejects VMEM-overflowing tiles, and
     scores with the TPU cost model.  The reported time is deterministic (cost
     model), so batched verification can run on a thread pool safely.
+
+    Workloads exposing their own ``build``/``vmem_bytes`` (kernel workloads
+    — the repo's hand-written Pallas kernels wrapped as tunables) take those
+    in place of the einsum ``codegen`` path; everything else (scaled
+    verification, cost-model scoring, the supervised pool, the store scope)
+    is identical.
 
     ``timeout_s`` arms a *hard* per-kernel deadline: with
     ``process_workers>=1`` verification runs inside a :class:`SupervisedPool`
@@ -1113,11 +1127,13 @@ class PallasBackend(_SupervisedMeasureMixin, _ThreadedEvalMixin, Backend):
 
     def _measure(self, workload: Workload, nest: LoopNest) -> Result:
         try:
-            if codegen.vmem_bytes(workload, nest) > self.vmem_limit:
+            vmem = (workload.vmem_bytes(nest)
+                    if _is_kernel_workload(workload)
+                    else codegen.vmem_bytes(workload, nest))
+            if vmem > self.vmem_limit:
                 return Result(
                     "compile_error",
-                    note=f"BlockSpec tiles exceed VMEM "
-                    f"({codegen.vmem_bytes(workload, nest)} B)",
+                    note=f"BlockSpec tiles exceed VMEM ({vmem} B)",
                 )
         except codegen.CodegenError as e:
             return Result("compile_error", note=str(e))
@@ -1125,7 +1141,9 @@ class PallasBackend(_SupervisedMeasureMixin, _ThreadedEvalMixin, Backend):
             w = workload.scaled(self.scale)
             try:
                 nest_small = _retile_to(nest, w)
-                fn = codegen.build_pallas(w, nest_small, interpret=True)
+                fn = (w.build(nest_small, interpret=True)
+                      if _is_kernel_workload(w)
+                      else codegen.build_pallas(w, nest_small, interpret=True))
                 args = w.make_args()
                 got = np.asarray(fn(args))
                 want = np.asarray(w.reference(args))

@@ -63,6 +63,7 @@ from .evaluation import EvaluationEngine
 from .faults import FaultInjectingBackend
 from .measure import Backend, CostModelBackend, PallasBackend, WallclockBackend
 from .searchspace import Configuration, SearchSpace
+from .kernelworkload import KERNEL_WORKLOAD_BUILDERS, kernel_workload
 from .workloads import PAPER_WORKLOADS, Workload, matmul_workload
 
 _log = logging.getLogger("repro.core.session")
@@ -614,9 +615,12 @@ _TUPLE_SPACE_FIELDS = ("tile_sizes", "unroll_factors")
 class TuningSpec:
     """A whole tuning job as one serializable document.
 
-    ``workload`` names a :data:`~repro.core.workloads.PAPER_WORKLOADS` entry
-    or ``"matmul"`` (with ``workload_args`` = m/n/k/... for
-    :func:`~repro.core.workloads.matmul_workload`); ``workload_args`` may
+    ``workload`` names a :data:`~repro.core.workloads.PAPER_WORKLOADS` entry,
+    ``"matmul"`` (with ``workload_args`` = m/n/k/... for
+    :func:`~repro.core.workloads.matmul_workload`), or one of the repo's own
+    Pallas kernels — ``"attention"`` / ``"ssd"`` via
+    :func:`~repro.core.kernelworkload.kernel_workload`, with
+    ``workload_args`` = the builder kwargs; ``workload_args`` may
     also carry ``scale`` to pre-scale extents.  ``space_args`` are
     :class:`SearchSpace` kwargs (sans ``root``), ``backend_args`` the
     backend constructor's, ``strategy_args`` the strategy constructor's.
@@ -711,16 +715,24 @@ class TuningSpec:
         if name == "matmul":
             args.setdefault("name", "matmul")
             w = matmul_workload(**args)
+        elif name in KERNEL_WORKLOAD_BUILDERS:
+            # The repo's own Pallas kernels as tunables ("attention", "ssd");
+            # workload_args become the builder kwargs (head counts, seq
+            # lengths, causal flag, ...).
+            w = kernel_workload(name, **args)
         else:
             if args:
                 raise ValueError(
                     f"workload_args {sorted(args)} are only valid for "
-                    f"workload='matmul' (besides 'scale')")
+                    f"workload='matmul' or kernel workloads "
+                    f"({', '.join(sorted(KERNEL_WORKLOAD_BUILDERS))}) "
+                    f"(besides 'scale')")
             w = PAPER_WORKLOADS.get(name)
             if w is None:
                 raise ValueError(
                     f"unknown workload {name!r} (known: "
-                    f"{', '.join(sorted(PAPER_WORKLOADS))}, matmul)")
+                    f"{', '.join(sorted(PAPER_WORKLOADS))}, matmul, "
+                    f"{', '.join(sorted(KERNEL_WORKLOAD_BUILDERS))})")
         return w.scaled(scale) if scale is not None else w
 
     def build_workload(self) -> Workload:

@@ -24,7 +24,7 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                  *, scale, causal, block_q, block_kv, q_offset):
+                  *, scale, causal, block_q, block_kv, q_offset, kv_len):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -38,12 +38,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     k = k_ref[0].astype(jnp.float32)                 # (bkv, d)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (bq, bkv)
 
-    if causal:
+    # ``kv_len`` is the true (unpadded) KV length; when the KV axis was
+    # padded to a block multiple the tail columns must never win the softmax
+    kv_padded = kv_len % block_kv != 0
+    if causal or kv_padded:
         qpos = qi * block_q + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_kv), 0) + q_offset
         kpos = ki * block_kv + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_kv), 1)
-        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        valid = kpos < kv_len if kv_padded else True
+        if causal:
+            valid = (kpos <= qpos) & valid
+        s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
@@ -78,26 +84,35 @@ def flash_attention(
         scale = 1.0 / (D ** 0.5)
     bq = min(block_q, Sq)
     bkv = min(block_kv, Skv)
-    assert Sq % bq == 0 and Skv % bkv == 0
+    # Non-divisible block sizes: pad both sequence axes up to a block
+    # multiple.  Padded query rows are sliced off the output; padded key
+    # columns are masked to NEG_INF inside the kernel (``kv_len``).
+    sq_p = -(-Sq // bq) * bq
+    skv_p = -(-Skv // bkv) * bkv
 
     qr = q.reshape(B * Hq, Sq, D)
     kr = k.reshape(B * Hkv, Skv, D)
     vr = v.reshape(B * Hkv, Skv, D)
+    if sq_p != Sq:
+        qr = jnp.pad(qr, ((0, 0), (0, sq_p - Sq), (0, 0)))
+    if skv_p != Skv:
+        kr = jnp.pad(kr, ((0, 0), (0, skv_p - Skv), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, skv_p - Skv), (0, 0)))
 
     kern = functools.partial(
         _flash_kernel, scale=scale, causal=causal,
-        block_q=bq, block_kv=bkv, q_offset=Skv - Sq,
+        block_q=bq, block_kv=bkv, q_offset=Skv - Sq, kv_len=Skv,
     )
     out = pl.pallas_call(
         kern,
-        grid=(B * Hq, Sq // bq, Skv // bkv),
+        grid=(B * Hq, sq_p // bq, skv_p // bkv),
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
             pl.BlockSpec((1, bkv, D), lambda h, i, j, _g=group: (h // _g, j, 0)),
             pl.BlockSpec((1, bkv, D), lambda h, i, j, _g=group: (h // _g, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, sq_p, D), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -105,4 +120,4 @@ def flash_attention(
         ],
         interpret=interpret,
     )(qr, kr, vr)
-    return out.reshape(B, Hq, Sq, D)
+    return out[:, :Sq].reshape(B, Hq, Sq, D)

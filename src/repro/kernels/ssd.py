@@ -71,11 +71,17 @@ def ssd_scan(
     BH, L, P = x.shape
     N = b.shape[-1]
     ch = min(chunk, L)
-    assert L % ch == 0
+    # Non-divisible chunk: pad the sequence axis with zeros.  The scan is
+    # causal left-to-right, so zero-padded trailing steps (x=b=c=0, dt=0)
+    # never influence y[:, :L]; the padded rows are sliced off the output.
+    l_p = -(-L // ch) * ch
+    if l_p != L:
+        pad = ((0, 0), (0, l_p - L), (0, 0))
+        x, dt, b, c = (jnp.pad(t, pad) for t in (x, dt, b, c))
     kern = functools.partial(_ssd_kernel, chunk=ch)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
-        grid=(BH, L // ch),
+        grid=(BH, l_p // ch),
         in_specs=[
             pl.BlockSpec((1, ch, P), lambda h, i: (h, i, 0)),
             pl.BlockSpec((1, ch, 1), lambda h, i: (h, i, 0)),
@@ -84,7 +90,8 @@ def ssd_scan(
             pl.BlockSpec((1, ch, N), lambda h, i: (h, i, 0)),
         ],
         out_specs=pl.BlockSpec((1, ch, P), lambda h, i: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, L, P), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((BH, l_p, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
         interpret=interpret,
     )(x, dt, a, b, c)
+    return out[:, :L]

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: AOT-lower + compile every (arch × shape × mesh) cell.
 
 For each cell this script:
@@ -18,6 +15,15 @@ Usage:
   python -m repro.launch.dryrun --arch qwen1_5_32b --shape train_4k --mesh single
   python -m repro.launch.dryrun --all --mesh both --out benchmarks/results/dryrun
 """
+
+import os
+
+# The 512 placeholder host devices must be forced before the first jax
+# import below — appended to any user-set XLA_FLAGS, never clobbering them.
+_HOST_DEVICES_FLAG = "--xla_force_host_platform_device_count=512"
+if _HOST_DEVICES_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} {_HOST_DEVICES_FLAG}".strip())
 
 import argparse
 import dataclasses

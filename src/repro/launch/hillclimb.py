@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimbing: the paper's tree search applied to the distributed
 configuration of the three chosen cells (DESIGN.md §2, core/distconfig.py).
 
@@ -11,6 +8,16 @@ hypothesis, confirmed or refuted) lands in benchmarks/results/hillclimb/.
 Usage:
   python -m repro.launch.hillclimb --cell qwen110b_train --budget 12
 """
+
+import os
+
+# The 512 placeholder host devices must be forced before the first jax
+# import below — but *appended* to whatever XLA_FLAGS the user already set,
+# never clobbering them.
+_HOST_DEVICES_FLAG = "--xla_force_host_platform_device_count=512"
+if _HOST_DEVICES_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} {_HOST_DEVICES_FLAG}".strip())
 
 import argparse
 import dataclasses

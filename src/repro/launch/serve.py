@@ -2,12 +2,37 @@
 
 Initialises (or restores) parameters, builds the engine, and runs a wave of
 synthetic requests — the ``serve_step`` counterpart of launch.train.
+
+``--tuned-schedules`` closes the autotuning loop: it takes the
+``kernel_schedules.json`` written by ``benchmarks/bench_kernels.py`` (the
+winning block sizes of a :class:`~repro.core.kernelworkload.KernelWorkload`
+tuning run) and installs them into the :class:`~repro.configs.base.
+ModelConfig` serving knobs (``attn_q_chunk``, ``ssd_chunk``), so a tuned
+kernel schedule is measured as end-to-end tokens/sec rather than kernel
+microseconds.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import time
+
+
+def apply_tuned_schedules(cfg, path):
+    """Install tuned kernel schedules (``{"attention": {"block_q": ...},
+    "ssd": {"chunk": ...}}``) into a :class:`ModelConfig`.  Unknown kernels
+    in the file raise — a schedule that silently fails to apply would
+    invalidate the tokens/sec comparison."""
+    from repro.core.kernelworkload import serve_overrides
+
+    with open(path, encoding="utf-8") as f:
+        schedules = json.load(f)
+    overrides = {}
+    for kernel, params in schedules.items():
+        overrides.update(serve_overrides(kernel, params))
+    return dataclasses.replace(cfg, **overrides), overrides
 
 
 def main(argv=None):
@@ -20,6 +45,11 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--ckpt", type=str, default=None,
                     help="checkpoint dir to restore params from")
+    ap.add_argument("--tuned-schedules", type=str, default=None,
+                    metavar="JSON",
+                    help="kernel_schedules.json from bench_kernels — "
+                         "installs the tuned block sizes into the model "
+                         "config (attn_q_chunk / ssd_chunk)")
     args = ap.parse_args(argv)
 
     import jax
@@ -32,6 +62,10 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.tuned_schedules:
+        cfg, overrides = apply_tuned_schedules(cfg, args.tuned_schedules)
+        print(f"[launch.serve] tuned schedules from "
+              f"{args.tuned_schedules}: {overrides}")
     m = build_model(cfg)
     params = m.init(jax.random.key(0))
     if args.ckpt:

@@ -86,7 +86,14 @@ class ServeEngine:
 
 def _install_prefix(caches, pre_caches, max_seq):
     """Copy prefill caches (length = prompt) into the preallocated max_seq
-    caches, padding the sequence dim."""
+    caches, padding the sequence dim.
+
+    Every leaf must either match the preallocated shape exactly or pad up to
+    it.  An unmergeable leaf (rank/dtype mismatch, or a prefill dim *larger*
+    than the preallocation) is a hard error: silently keeping the
+    preallocated leaf would leave the KV cache zeroed and decode would read
+    an empty context with no signal that anything went wrong.
+    """
     def merge(dst, src):
         if dst.shape == src.shape:
             return src
@@ -100,7 +107,11 @@ def _install_prefix(caches, pre_caches, max_seq):
                 pads.append((0, b - a))
             if ok:
                 return jnp.pad(src, pads).astype(dst.dtype)
-        return dst     # keep preallocated (e.g. int length counters handled below)
+        raise ValueError(
+            f"_install_prefix: cannot merge prefill cache leaf "
+            f"{src.shape}/{src.dtype} into preallocated {dst.shape}/"
+            f"{dst.dtype} (max_seq={max_seq}) — decode would silently read "
+            f"a zeroed cache; check init_caches/prefill cache layouts match")
 
     # (length counters already match: init_caches(filled=plen) == prefill's)
     return jax.tree.map(merge, caches, pre_caches)
