@@ -79,7 +79,8 @@ def _collect_gates(ran: set[str]) -> dict:
     results = os.fspath(results_dir())
     gates: dict = {}
     for name in ("eval_cache", "warm_start", "surrogate", "session",
-                 "acquisition", "store", "faults", "async", "kernels"):
+                 "acquisition", "store", "faults", "async", "kernels",
+                 "analysis"):
         if name not in ran:
             continue
         try:
@@ -174,9 +175,9 @@ def main(argv=None) -> None:
     if args.store:
         os.environ["CC_RESULT_STORE"] = args.store
 
-    from . import (bench_acquisition, bench_async, bench_autotune,
-                   bench_beyond_transforms, bench_eval_cache, bench_faults,
-                   bench_kernels, bench_mcts_vs_greedy,
+    from . import (bench_acquisition, bench_analysis, bench_async,
+                   bench_autotune, bench_beyond_transforms, bench_eval_cache,
+                   bench_faults, bench_kernels, bench_mcts_vs_greedy,
                    bench_pragma_stacking, bench_roofline, bench_session,
                    bench_store, bench_surrogate, bench_warm_start)
 
@@ -195,6 +196,7 @@ def main(argv=None) -> None:
         "beyond_transforms": bench_beyond_transforms.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
+        "analysis": bench_analysis.main,
     }
     if args.quick:
         suites = {
@@ -205,6 +207,7 @@ def main(argv=None) -> None:
             "faults": bench_faults.main,
             "async": bench_async.main,
             "kernels": bench_kernels.main,
+            "analysis": lambda: bench_analysis.main(quick=True),
         }
     if args.only:
         picked = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -1,0 +1,53 @@
+"""Static schedule analysis — dependence-based red-node prediction.
+
+The paper does *no* a-priori pruning: every illegal configuration is found by
+compiling it (§IV-B), which is why syr2k's tree is dominated by red nodes
+(§VI-B).  This package predicts the backends' *deterministic* red nodes
+statically so the evaluation engine can reject them without dispatching a
+measurement worker:
+
+* :mod:`repro.analysis.deps` — a dependence analyzer computing distance /
+  direction vectors from the ``Access`` patterns of a :class:`LoopNest`.
+* :mod:`repro.analysis.passes` — the pass-manager core: named passes over the
+  dependence evidence plus backend-feasibility mirrors (VMEM capacity, grid
+  budget, codegen/kernel expressibility), producing a :class:`Verdict` with
+  provenance (which rule fired, on which evidence).
+* :mod:`repro.analysis.differential` — the soundness harness cross-checking
+  static verdicts against actual backend verdicts over sampled schedules.
+  Hard invariant: **zero false infeasibles** — anything a backend accepts must
+  pass static analysis.
+* :mod:`repro.analysis.lint` — ``python -m repro.analysis.lint spec.json``
+  reports a space's statically-infeasible fraction and per-rule histogram
+  before a job is submitted to the fleet.
+
+Opt-in at every layer (``EvaluationEngine(static_analysis=True)``,
+``TuningSession``, ``TuningSpec``); default-off runs stay byte-identical.
+"""
+
+from .deps import Dependence, dependences, source_order
+from .passes import (
+    AnalysisContext,
+    BackendModel,
+    Finding,
+    StaticAnalyzer,
+    Verdict,
+    available_passes,
+    register_pass,
+)
+from .differential import DifferentialReport, run_differential, sample_configs
+
+__all__ = [
+    "AnalysisContext",
+    "BackendModel",
+    "Dependence",
+    "DifferentialReport",
+    "Finding",
+    "StaticAnalyzer",
+    "Verdict",
+    "available_passes",
+    "dependences",
+    "register_pass",
+    "run_differential",
+    "sample_configs",
+    "source_order",
+]

@@ -1,0 +1,121 @@
+"""Dependence analysis over :class:`LoopNest` access patterns.
+
+This is the machine-checked counterpart of the prose model in
+``repro.core.legality``: instead of hand-coded rules over loop attributes, we
+derive explicit *dependences* from the nest's ``Access`` patterns and bound
+metadata, each carrying a distance vector over the source iteration space and
+a direction vector over the transformed loop order.  The legality passes in
+:mod:`repro.analysis.passes` then reject schedules from this evidence alone,
+and the differential harness checks the result against ``check_legal`` (the
+oracle) and the real backends.
+
+Two dependence kinds cover the model:
+
+* ``reduction`` — a ``reduce`` access ``C[i][j] += ...`` carries a dependence
+  on every source loop that does *not* index ``C``: iterations differing only
+  in that loop hit the same element, giving the elementary distance vector
+  ``(0, …, 1, …, 0)`` (1 in the carried var's position).  Parallelizing any
+  transformed loop derived from that var reorders a chain of read-modify-write
+  accumulations (Polly refuses this too — paper §V: associativity is not
+  considered).
+* ``bound`` — a triangular pair ``(provider, dependent)`` (``for j <= i``)
+  makes the dependent loop's bound a *value* dependence on the provider's
+  induction variable.  It has no fixed distance; what matters is the
+  structural relation of the two vars' transformed loops (ordering, tiling
+  balance), which the triangular pass inspects.
+
+Direction vectors use the classic ``"<" / "=" / "*"`` alphabet per transformed
+loop, outermost→innermost: ``"="`` for loops not derived from the carried var;
+``"<"`` at the outermost loop derived from it (the dependence is carried
+forward there); ``"*"`` for the inner derived loops — after strip-mining, the
+cross-tile instances of a distance-1 dependence take both signs at the point
+loop (distance ``(1, 1-T)`` across a tile boundary of size ``T``), so the
+component is unknown.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.loopnest import LoopNest
+
+__all__ = ["Dependence", "dependences", "source_order"]
+
+
+@dataclass(frozen=True)
+class Dependence:
+    """One loop-carried dependence, with the evidence it was derived from.
+
+    ``var`` is the *source-level* loop carrying it.  For ``reduction`` kind,
+    ``array`` is the accumulated array and ``distance``/``direction`` are the
+    vectors described in the module docstring.  For ``bound`` kind, ``var`` is
+    the dependent var, ``provider`` the bound-providing var, and the vectors
+    are empty (the dependence is on the induction *value*, not an iteration
+    offset).
+    """
+
+    kind: str                           # "reduction" | "bound"
+    var: str                            # source loop carrying the dependence
+    array: str = ""                     # reduction: the accumulated array
+    provider: str = ""                  # bound: the bound-providing var
+    distance: tuple[int, ...] = ()      # over source_order(nest)
+    direction: tuple[str, ...] = ()     # over nest.loops (outermost→innermost)
+
+    def describe(self) -> str:
+        if self.kind == "reduction":
+            return (f"reduction on {self.array!r} carried by {self.var!r} "
+                    f"(distance {self.distance}, direction {self.direction})")
+        return f"bound of {self.var!r} provided by {self.provider!r}"
+
+
+def source_order(nest: LoopNest) -> tuple[str, ...]:
+    """Canonical ordering of source-level loop vars: order of first appearance
+    in the transformed nest, then any extent-only vars (fully-unrolled or
+    degenerate dims) in extents order.  Distance vectors index this order."""
+    order: dict[str, None] = {}
+    for l in nest.loops:
+        order.setdefault(l.origin)
+    for v in nest.extents:
+        order.setdefault(v)
+    return tuple(order)
+
+
+def dependences(nest: LoopNest) -> tuple[Dependence, ...]:
+    """All loop-carried dependences of the transformed nest."""
+    srcs = source_order(nest)
+    pos = {v: i for i, v in enumerate(srcs)}
+    out: list[Dependence] = []
+
+    # Reduction dependences: one elementary distance-1 dependence per
+    # (reduce access, source var not indexing it).
+    for a in nest.accesses:
+        if a.kind != "reduce":
+            continue
+        for v in srcs:
+            if v in a.vars:
+                continue
+            dist = tuple(1 if i == pos[v] else 0 for i in range(len(srcs)))
+            direction: list[str] = []
+            first = True
+            for l in nest.loops:
+                if l.origin != v:
+                    direction.append("=")
+                elif first:
+                    direction.append("<")
+                    first = False
+                else:
+                    direction.append("*")
+            out.append(Dependence(
+                kind="reduction", var=v, array=a.array,
+                distance=dist, direction=tuple(direction),
+            ))
+
+    # Bound dependences: the triangular pairs, kept only when both vars still
+    # have loops in the transformed nest (a fully-degenerate dim carries no
+    # structural constraint — mirrors check_legal's `if not prov or not dep`).
+    present = {l.origin for l in nest.loops}
+    for provider, dependent in nest.triangular:
+        if provider in present and dependent in present:
+            out.append(Dependence(kind="bound", var=dependent, provider=provider))
+
+    return tuple(out)

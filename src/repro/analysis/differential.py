@@ -1,0 +1,190 @@
+"""Differential soundness harness: static verdicts vs actual backend verdicts.
+
+Samples schedules from a workload's :class:`SearchSpace` by seeded random
+walks, analyzes each with the :class:`StaticAnalyzer` configured for the
+backend under test, evaluates the same schedule with the *real* backend, and
+tallies:
+
+* **false infeasibles** — backend says ``ok`` but static analysis rejected.
+  The hard invariant is that this set is **empty**: a false infeasible means
+  the engine would silently hide a viable schedule from the search.
+* **coverage** — fraction of backend red nodes the analyzer predicted.  This
+  is best-effort (nondeterministic failures are out of scope by design) and
+  reported per rule.
+
+For the wallclock backend, real execution over thousands of schedules is not
+affordable in CI; ``wallclock_dry_verdict`` runs the backend's exact
+deterministic prefix — scaled re-derivation, ``check_legal``,
+``codegen.build_xla`` *construction* (which raises every deterministic
+``CodegenError`` before any tracing or execution) — so the oracle is still
+the production code path, minus the timed run.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+from repro.core import codegen
+from repro.core.legality import IllegalTransform, check_legal
+from repro.core.loopnest import LoopNest
+from repro.core.measure import Result
+from repro.core.searchspace import Configuration, SearchSpace
+from repro.core.transformations import TransformError
+
+from .passes import StaticAnalyzer
+
+__all__ = [
+    "DifferentialReport",
+    "run_differential",
+    "sample_configs",
+    "wallclock_dry_verdict",
+]
+
+
+def sample_configs(
+    space: SearchSpace,
+    n: int,
+    seed: int = 0,
+    max_depth: int = 4,
+    restart: float = 0.3,
+) -> list[Configuration]:
+    """``n`` distinct derivable configurations by seeded random walks with
+    restarts (depth ≥ 1 — the root is trivially feasible everywhere).  Walks
+    restart at broken structures, dead ends, and the depth cap, so samples
+    spread over shallow and deep schedules."""
+    rng = random.Random(seed)
+    out: list[Configuration] = []
+    seen: set[tuple] = set()
+    cur = Configuration()
+    budget = max(n * 60, 2000)
+    while len(out) < n and budget > 0:
+        budget -= 1
+        if len(cur) >= max_depth or rng.random() < restart:
+            cur = Configuration()
+            continue
+        kids = space.children(cur, dedup=False)
+        if not kids:
+            cur = Configuration()
+            continue
+        cur = kids[rng.randrange(len(kids))]
+        if not isinstance(space.try_structure(cur), LoopNest):
+            cur = Configuration()
+            continue
+        pk = cur.path_key()
+        if pk not in seen:
+            seen.add(pk)
+            out.append(cur)
+    return out
+
+
+def wallclock_dry_verdict(backend, workload, config: Configuration) -> Result:
+    """The wallclock backend's deterministic prefix, via the production code:
+    scaled re-derivation → legality → ``build_xla`` construction.  Returns
+    ``ok`` when the prefix accepts (the real backend would proceed to run)."""
+    w = workload.scaled(backend.scale)
+    try:
+        nest = config.apply(w.nest())
+    except TransformError as e:
+        return Result("compile_error", note=str(e))
+    try:
+        check_legal(nest)
+    except IllegalTransform as e:
+        return Result("illegal", note=str(e))
+    try:
+        codegen.build_xla(w, nest)
+    except codegen.CodegenError as e:
+        return Result("compile_error", note=str(e))
+    return Result("ok", time_s=0.0)
+
+
+@dataclass
+class DifferentialReport:
+    """Tally of one (workload, backend) differential run."""
+
+    workload: str
+    backend: str
+    samples: int = 0
+    backend_red: int = 0
+    predicted_red: int = 0
+    agreed_red: int = 0                      # red on both sides
+    false_infeasible: list[dict] = field(default_factory=list)
+    by_rule: dict[str, int] = field(default_factory=dict)
+    uncovered: dict[str, int] = field(default_factory=dict)   # note-prefix → count
+
+    @property
+    def sound(self) -> bool:
+        return not self.false_infeasible
+
+    @property
+    def coverage(self) -> float:
+        return self.agreed_red / self.backend_red if self.backend_red else 1.0
+
+    def to_dict(self) -> dict:
+        return {
+            "workload": self.workload,
+            "backend": self.backend,
+            "samples": self.samples,
+            "backend_red": self.backend_red,
+            "predicted_red": self.predicted_red,
+            "agreed_red": self.agreed_red,
+            "coverage": round(self.coverage, 4),
+            "false_infeasible": self.false_infeasible,
+            "by_rule": dict(sorted(self.by_rule.items())),
+            "uncovered": dict(sorted(self.uncovered.items())),
+            "sound": self.sound,
+        }
+
+
+def _note_prefix(note: str) -> str:
+    return note.split(":", 1)[0][:60] if note else "(none)"
+
+
+def run_differential(
+    workload,
+    backend,
+    *,
+    space: SearchSpace | None = None,
+    samples: int = 2000,
+    seed: int = 0,
+    max_depth: int = 4,
+    dry: bool = False,
+    label: str | None = None,
+) -> DifferentialReport:
+    """Cross-check static verdicts against the backend over sampled schedules.
+
+    ``dry=True`` (wallclock only) uses :func:`wallclock_dry_verdict` instead
+    of a timed run.  Every sampled configuration is derivable at full scale —
+    underivable ones never reach a backend through the engine anyway."""
+    space = space or SearchSpace(root=workload.nest())
+    configs = sample_configs(space, samples, seed=seed, max_depth=max_depth)
+    analyzer = StaticAnalyzer(workload, backend=backend)
+    rep = DifferentialReport(
+        workload=getattr(workload, "name", "?"),
+        backend=label or getattr(backend, "name", "?"),
+        samples=len(configs),
+    )
+    for config in configs:
+        nest = space.try_structure(config)
+        verdict = analyzer.analyze(nest, config=config)
+        if dry:
+            res = wallclock_dry_verdict(backend, workload, config)
+        else:
+            res = backend.evaluate(workload, config, nest=nest)
+        if res.ok and not verdict.feasible:
+            rep.false_infeasible.append({
+                "path": [repr(t) for t in config.transformations],
+                "rule": verdict.rule,
+                "detail": verdict.detail,
+            })
+        if not verdict.feasible:
+            rep.predicted_red += 1
+            rep.by_rule[verdict.rule] = rep.by_rule.get(verdict.rule, 0) + 1
+        if not res.ok:
+            rep.backend_red += 1
+            if verdict.feasible:
+                p = _note_prefix(res.note)
+                rep.uncovered[p] = rep.uncovered.get(p, 0) + 1
+            else:
+                rep.agreed_red += 1
+    return rep

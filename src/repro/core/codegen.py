@@ -342,6 +342,8 @@ def vmem_bytes(w: Workload, nest: LoopNest) -> int:
     """VMEM working set claimed by the BlockSpecs of :func:`build_pallas` —
     used to reject tiles that cannot fit (compile failure on real TPU)."""
     plan = _extract_plan(w, nest)
+    elem = {(a.array, a.vars): a.elem_bytes for a in nest.accesses}
+    default = getattr(w, "elem_bytes", 8)
     total = 0
     seen = set()
     for t in w.terms:
@@ -352,9 +354,10 @@ def vmem_bytes(w: Workload, nest: LoopNest) -> int:
             n = 1
             for v in vs:
                 n *= plan.tile[v]
-            total += n * 4
+            total += n * elem.get((arr, vs), default)
     n = 1
     for v in w.out_vars:
         n *= plan.tile[v]
-    total += 2 * n * 4     # out block + f32 accumulator
+    # out block at its element width + the explicit f32 accumulator scratch
+    total += n * elem.get((w.out_array, w.out_vars), default) + n * 4
     return total

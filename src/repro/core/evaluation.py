@@ -127,6 +127,10 @@ class EvalStats:
     quarantined: int = 0
     backend_crashes: int = 0
     store_errors: int = 0
+    # statically-predicted red nodes rejected without backend dispatch
+    # (``static_analysis=True`` only; 0 — and absent from stats_dict —
+    # otherwise: byte-identity for default runs)
+    static_pruned: int = 0
 
     @property
     def total(self) -> int:
@@ -249,11 +253,20 @@ class EvaluationEngine:
         surrogate_scope: str = "exact",
         surrogate_peers: "Sequence[Workload]" = (),
         retry: "RetryPolicy | dict | None" = None,
+        static_analysis: bool = False,
     ):
         self.workload = workload
         self.space = space
         self.backend = backend
         self.cache = cache
+        self._static = None
+        self._static_rules: dict[str, int] = {}
+        if static_analysis:
+            # Lazy import: repro.analysis imports core modules, so a
+            # top-level import here would cycle.
+            from repro.analysis import StaticAnalyzer
+
+            self._static = StaticAnalyzer(workload, backend=backend)
         if isinstance(retry, dict):
             retry = RetryPolicy(**retry)
         self.retry = retry
@@ -534,6 +547,17 @@ class EvaluationEngine:
                     self.stats.hits += 1
                     aliases.append((i, key))
                     continue
+            if self._static is not None:
+                res = self._static_check(config, nest)
+                if res is not None:
+                    # statically-predicted red node: instant result, no
+                    # backend dispatch (the whole point of the analyzer)
+                    self.stats.misses += 1
+                    if cache is not None:
+                        cache[key] = res
+                    results[i] = res
+                    continue
+            if cache is not None:
                 pending_key_of[key] = i
             self.stats.misses += 1
             pending.append((i, config, nest, key))
@@ -554,6 +578,20 @@ class EvaluationEngine:
             for i, key in aliases:
                 results[i] = cache[key]
         return results  # type: ignore[return-value]
+
+    def _static_check(self, config: Configuration,
+                      nest: "LoopNest") -> Result | None:
+        """Static-analysis gate for one derivable schedule: ``None`` when the
+        analyzer accepts (dispatch proceeds), else the red
+        :class:`~repro.core.measure.Result` the modeled backend would have
+        produced, with the firing rule in the note's provenance prefix."""
+        v = self._static.analyze(nest, config=config)
+        if v.feasible:
+            return None
+        f = v.findings[0]
+        self.stats.static_pruned += 1
+        self._static_rules[f.rule] = self._static_rules.get(f.rule, 0) + 1
+        return Result(f.status, note=f"static:{f.rule}: {f.detail}")
 
     # -- fault tolerance (retry / quarantine / store degradation) --------------
 
@@ -788,6 +826,14 @@ class EvaluationEngine:
                 h.primary = primary
                 primary.aliases.append(h)
                 return h
+        if self._static is not None:
+            res = self._static_check(config, nest)
+            if res is not None:
+                self.stats.misses += 1
+                if cache is not None:
+                    cache[key] = res
+                h.result, h.done = res, True
+                return h
         self.stats.misses += 1
         submit = getattr(self.backend, "submit_one", None)
         fut = (submit(self.workload, config, deadline_at=deadline_at)
@@ -957,6 +1003,14 @@ class EvaluationEngine:
                 faults[k] = faults.get(k, 0) + v
         if faults:
             out["faults"] = faults
+        # only when the static analyzer actually pruned something:
+        # static_analysis=False runs (and analyzer runs that predicted
+        # nothing) stay byte-identical to pre-analysis logs
+        if self.stats.static_pruned:
+            out["static"] = {
+                "pruned": self.stats.static_pruned,
+                "by_rule": dict(sorted(self._static_rules.items())),
+            }
         # only when a supervised pool was actually used: serial logs must
         # stay byte-identical to the pre-pool drivers
         get_util = getattr(self.backend, "pool_utilization", None)
@@ -981,6 +1035,7 @@ class EvaluationEngine:
             "retry_rng": (self._retry_rng.getstate()
                           if self._retry_rng is not None else None),
             "learned": self._learned,
+            "static_rules": dict(self._static_rules),
         }
 
     def restore(self, state: dict) -> None:
@@ -989,6 +1044,9 @@ class EvaluationEngine:
         resuming the strategy loop."""
         self._results.update(state["results"])
         self._seen.update(state["seen"])
+        # .get: checkpoints written before the static analyzer existed
+        # restore cleanly (EvalStats fields default likewise)
+        self._static_rules.update(state.get("static_rules", {}))
         self.stats = EvalStats(**state["stats"])
         self._fail_counts.update(state["fail_counts"])
         self._quarantined.update(state["quarantined"])

@@ -97,6 +97,18 @@ def check_legal(nest: LoopNest) -> None:
                 f"triangular bound: {dependent!r} tiled while its bound "
                 f"provider {provider!r} is not"
             )
+        if len(dep_pts) > len(prov_pts) > 0:
+            # Multilevel tiling can give the pair different point-loop counts;
+            # the levels compared above are the aligned outer ones, and the
+            # dependent's unmatched *inner* levels have no provider level to
+            # bound them — they straddle the diagonal, so reject the tail
+            # (the provider being tiled deeper than the dependent is fine,
+            # like the provider being tiled alone).
+            raise IllegalTransform(
+                f"triangular bound: {dependent!r} tiled {len(dep_pts)}× but "
+                f"its bound provider {provider!r} only {len(prov_pts)}× — "
+                f"the unmatched inner level(s) have no bounding tile"
+            )
 
     # 3. Mixed tiling depth inside one reuse chain: a var tiled more than twice
     #    exceeds what the code generators support → structural compile failure

@@ -258,6 +258,7 @@ class TuningSession:
         surrogate_scope: str = "exact",
         surrogate_peers: Sequence[Workload] = (),
         retry=None,
+        static_analysis: bool = False,
     ):
         self.backend = backend
         self.store = store
@@ -268,6 +269,9 @@ class TuningSession:
         # RetryPolicy | dict | None — forwarded to the engine (see
         # repro.core.faults.RetryPolicy for the retry/quarantine semantics)
         self.retry = retry
+        # opt-in static red-node prediction (repro.analysis): statically
+        # infeasible schedules short-circuit without backend dispatch
+        self.static_analysis = static_analysis
 
     def tune(
         self,
@@ -334,6 +338,7 @@ class TuningSession:
             surrogate_scope=self.surrogate_scope,
             surrogate_peers=self.surrogate_peers,
             retry=self.retry,
+            static_analysis=self.static_analysis,
         )
         log = TuningLog(workload=workload.name, backend=self.backend.name)
 
@@ -671,6 +676,9 @@ class TuningSpec:
     checkpoint: str | None = None
     checkpoint_every: int = 25
     async_workers: int = 0
+    # opt-in static red-node prediction (repro.analysis): statically
+    # infeasible schedules become instant red nodes, zero worker dispatch
+    static_analysis: bool = False
 
     # -- serialization -------------------------------------------------------
 
@@ -801,6 +809,7 @@ class TuningSpec:
             surrogate_scope=self.surrogate_scope,
             surrogate_peers=self.build_peers(),
             retry=self.retry,
+            static_analysis=self.static_analysis,
         )
         return session.tune(
             workload, self.build_space(workload),
@@ -840,6 +849,13 @@ def main(argv: Sequence[str] | None = None) -> int:
                     help="override the spec's async_workers (pipelined "
                          "session with N measurements in flight; 0 = the "
                          "synchronous loop)")
+    ap.add_argument("--static-analysis", action="store_true",
+                    dest="static_analysis",
+                    help="override the spec's static_analysis to on: "
+                         "statically-infeasible schedules become instant "
+                         "red nodes with zero worker dispatch "
+                         "(repro.analysis; lint the spec first with "
+                         "python -m repro.analysis.lint)")
     ap.add_argument("--resume", action="store_true",
                     help="resume from the checkpoint sidecar (missing file "
                          "starts fresh; a mismatched one is an error)")
@@ -860,6 +876,8 @@ def main(argv: Sequence[str] | None = None) -> int:
         spec.checkpoint = args.checkpoint
     if args.async_workers is not None:
         spec.async_workers = args.async_workers
+    if args.static_analysis:
+        spec.static_analysis = True
 
     try:
         log = spec.run(resume=args.resume)

@@ -1,0 +1,322 @@
+"""Tests for :mod:`repro.analysis` — the static schedule analyzer.
+
+Covers the dependence analyzer's evidence (distance/direction vectors,
+provenance), exact equivalence of the dependence passes with the
+``check_legal`` oracle, the backend feasibility mirrors, and the engine /
+session / spec integration (opt-in, byte-identical when off, fewer backend
+dispatches and identical best when on)."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis import (
+    BackendModel,
+    StaticAnalyzer,
+    Verdict,
+    available_passes,
+    dependences,
+    source_order,
+)
+from repro.analysis.passes import default_passes
+from repro.core import COVARIANCE, GEMM, SYR2K, Interchange, Parallelize, Tile
+from repro.core.evaluation import EvaluationEngine
+from repro.core.kernelworkload import kernel_workload
+from repro.core.legality import is_legal
+from repro.core.measure import CostModelBackend, PallasBackend, WallclockBackend
+from repro.core.searchspace import Configuration, SearchSpace
+from repro.core.session import TuningSession, TuningSpec
+
+
+def _apply(workload, *ts):
+    nest = workload.nest()
+    for t in ts:
+        nest = t.apply(nest)
+    return nest
+
+
+class TestDependences:
+    def test_gemm_reduction_dependence(self):
+        deps = dependences(GEMM.nest())
+        assert len(deps) == 1
+        d = deps[0]
+        assert d.kind == "reduction" and d.var == "k" and d.array == "C"
+        assert source_order(GEMM.nest()) == ("i", "j", "k")
+        assert d.distance == (0, 0, 1)
+        assert d.direction == ("=", "=", "<")
+
+    def test_syr2k_has_reduction_and_bound(self):
+        deps = dependences(SYR2K.nest())
+        kinds = sorted(d.kind for d in deps)
+        assert kinds == ["bound", "reduction"]
+        bound = next(d for d in deps if d.kind == "bound")
+        assert (bound.provider, bound.var) == ("i", "j")
+
+    def test_direction_vector_under_tiling(self):
+        """Tiling k splits the carried dimension: '<' at the outermost
+        derived loop, '*' at the inner (cross-tile instances take both
+        signs after strip-mining)."""
+        nest = _apply(GEMM, Tile(loops=("k",), sizes=(64,)))
+        d = next(x for x in dependences(nest) if x.kind == "reduction")
+        by_loop = dict(zip([l.name for l in nest.loops], d.direction))
+        assert by_loop["k1"] == "<" and by_loop["k2"] == "*"
+        assert by_loop["i"] == "=" and by_loop["j"] == "="
+
+    def test_dependences_follow_loop_renaming(self):
+        """The evidence is expressed against origins, not loop names."""
+        nest = _apply(GEMM, Tile(loops=("k",), sizes=(64,)))
+        from dataclasses import replace
+
+        renamed = replace(
+            nest,
+            loops=tuple(replace(l, name=f"L{i}")
+                        for i, l in enumerate(nest.loops)),
+        )
+        assert dependences(renamed) == dependences(nest)
+
+
+class TestOracleEquivalence:
+    """The dependence passes must agree with ``check_legal`` — exactly —
+    on every nest (the differential harness rechecks this at scale)."""
+
+    CASES = [
+        (GEMM, ()),
+        (GEMM, (Parallelize(loop="k"),)),
+        (GEMM, (Parallelize(loop="i"),)),
+        (GEMM, (Tile(loops=("k",), sizes=(64,)), Parallelize(loop="k2"))),
+        (GEMM, (Interchange(loops=("i", "j", "k"),
+                            permutation=("k", "j", "i")),)),
+        (COVARIANCE, (Interchange(loops=("i", "j", "k"),
+                                  permutation=("j", "i", "k")),)),
+        (COVARIANCE, (Tile(loops=("j",), sizes=(64,)),)),
+        (COVARIANCE, (Tile(loops=("i",), sizes=(64,)),)),
+        (COVARIANCE, (Tile(loops=("i", "j"), sizes=(16, 64)),)),
+        (COVARIANCE, (Tile(loops=("i", "j"), sizes=(64, 16)),)),
+        (COVARIANCE, (Tile(loops=("i", "j"), sizes=(64, 64)),
+                      Tile(loops=("j1",), sizes=(4,)))),
+        (SYR2K, (Tile(loops=("i", "j"), sizes=(16, 16)),)),
+        (SYR2K, (Parallelize(loop="k"),)),
+    ]
+
+    @pytest.mark.parametrize("workload,ts", CASES)
+    def test_matches_check_legal(self, workload, ts):
+        nest = _apply(workload, *ts)
+        analyzer = StaticAnalyzer(workload)   # dependence passes only
+        verdict = analyzer.analyze(nest)
+        assert verdict.feasible == is_legal(nest)
+        if not verdict.feasible:
+            assert verdict.rule.startswith("dependence.")
+            assert verdict.status == "illegal"
+            assert verdict.findings[0].evidence  # provenance present
+
+    def test_generic_analyzer_runs_only_dependence_passes(self):
+        a = StaticAnalyzer(GEMM)
+        assert a.passes == ("dependence.parallel-reduction",
+                            "dependence.triangular")
+
+
+class TestBackendModels:
+    def test_pass_selection(self):
+        cm, wc = CostModelBackend(), WallclockBackend()
+        pl = PallasBackend(verify=False)
+        assert default_passes(GEMM, BackendModel.of(cm)) == (
+            "dependence.parallel-reduction", "dependence.triangular")
+        assert "feasibility.xla" in default_passes(GEMM, BackendModel.of(wc))
+        assert "feasibility.pallas" in default_passes(GEMM, BackendModel.of(pl))
+        attn = kernel_workload("attention")
+        assert "feasibility.kernel" in default_passes(attn, BackendModel.of(pl))
+        # kernel workloads never take the einsum XLA path
+        assert "feasibility.xla" not in default_passes(
+            attn, BackendModel.of(wc))
+
+    def test_fault_wrapper_unwraps_to_inner(self):
+        from repro.core.faults import FaultInjectingBackend
+
+        fb = FaultInjectingBackend(inner=PallasBackend(verify=False))
+        m = BackendModel.of(fb)
+        assert m.kind == "pallas" and m.verify is False
+
+    def test_unknown_pass_rejected(self):
+        with pytest.raises(ValueError, match="unknown analysis pass"):
+            StaticAnalyzer(GEMM, passes=("no.such.pass",))
+        assert "dependence.triangular" in available_passes()
+
+
+class TestFeasibilityMirrors:
+    def test_wallclock_grid_budget_predicted(self):
+        """Tiny tiles at full extents blow MAX_WALLCLOCK_GRID_STEPS on the
+        scaled nest exactly as the backend's build_xla would."""
+        wc = WallclockBackend()
+        cfg = Configuration().child(Tile(loops=("i", "j", "k"),
+                                         sizes=(4, 4, 4)))
+        nest = cfg.apply(GEMM.nest())
+        v = StaticAnalyzer(GEMM, backend=wc).analyze(nest, config=cfg)
+        assert not v.feasible
+        assert v.rule == "feasibility.xla" and v.status == "compile_error"
+        assert "grid" in v.detail
+
+    def test_wallclock_needs_config(self):
+        """Without the config the scaled re-derivation cannot run — the
+        pass must stay silent (sound), not guess from the full-scale nest."""
+        wc = WallclockBackend()
+        cfg = Configuration().child(Tile(loops=("i", "j", "k"),
+                                         sizes=(4, 4, 4)))
+        nest = cfg.apply(GEMM.nest())
+        v = StaticAnalyzer(GEMM, backend=wc).analyze(nest)   # no config
+        assert v.feasible
+
+    def test_pallas_vmem_overflow_predicted(self):
+        """Untiled gemm claims the full f64 operands as its 'blocks' —
+        ~145 MiB, over the 128 MiB budget (and only ~72 MiB under the old
+        hard-coded 4-byte accounting: the satellite fix is what makes the
+        root correctly red)."""
+        pl = PallasBackend(verify=False)
+        cfg = Configuration()
+        nest = cfg.apply(GEMM.nest())
+        v = StaticAnalyzer(GEMM, backend=pl).analyze(nest, config=cfg)
+        assert not v.feasible
+        assert v.rule == "feasibility.pallas"
+        assert "VMEM" in v.detail
+        # the backend agrees (vmem check is deterministic, pre-verify)
+        res = pl.evaluate(GEMM, cfg)
+        assert res.status == "compile_error" and "VMEM" in res.note
+
+    def test_kernel_expressibility_predicted(self):
+        attn = kernel_workload("attention")
+        pl = PallasBackend(verify=False)
+        # tiling the non-tileable head dim is a kernel CodegenError
+        cfg = Configuration().child(Tile(loops=("h",), sizes=(4,)))
+        nest = cfg.apply(attn.nest())
+        v = StaticAnalyzer(attn, backend=pl).analyze(nest, config=cfg)
+        assert not v.feasible and v.rule == "feasibility.kernel"
+        res = pl.evaluate(attn, cfg)
+        assert res.status == "compile_error"
+
+    def test_verdict_repr_fields(self):
+        v = Verdict(feasible=True)
+        assert v.rule is None and v.status is None and v.detail is None
+
+
+class TestEngineIntegration:
+    def _spaces(self):
+        w = SYR2K
+        return w, SearchSpace(root=w.nest())
+
+    def test_default_off_no_static_key(self):
+        w, space = self._spaces()
+        eng = EvaluationEngine(w, space, CostModelBackend(), store=False)
+        eng.sweep(space.children(Configuration()))
+        assert eng.stats.static_pruned == 0
+        assert "static" not in eng.stats_dict()
+
+    def test_pruning_short_circuits_backend(self):
+        w, space = self._spaces()
+
+        class CountingBackend(CostModelBackend):
+            dispatched = 0
+
+            def evaluate_many(self, workload, configs, nests=None):
+                CountingBackend.dispatched += len(configs)
+                return super().evaluate_many(workload, configs, nests=nests)
+
+        CountingBackend.dispatched = 0
+        be = CountingBackend()
+        eng_off = EvaluationEngine(w, space, be, store=False)
+        kids = space.children(Configuration())
+        base = eng_off.sweep(kids)
+        n_off = CountingBackend.dispatched
+
+        CountingBackend.dispatched = 0
+        eng_on = EvaluationEngine(w, space, CountingBackend(), store=False,
+                                  static_analysis=True)
+        pruned = eng_on.sweep(kids)
+        n_on = CountingBackend.dispatched
+
+        assert n_on < n_off
+        assert eng_on.stats.static_pruned > 0
+        # identical statuses and times — only red notes carry provenance
+        for (c1, r1), (c2, r2) in zip(base, pruned):
+            assert c1.path_key() == c2.path_key()
+            assert r1.status == r2.status and r1.time_s == r2.time_s
+            if r2.note.startswith("static:"):
+                assert not r1.ok
+        d = eng_on.stats_dict()["static"]
+        assert d["pruned"] == eng_on.stats.static_pruned
+        assert sum(d["by_rule"].values()) == d["pruned"]
+
+    def test_streaming_path_prunes_too(self):
+        w, space = self._spaces()
+        eng = EvaluationEngine(w, space, CostModelBackend(), store=False,
+                               static_analysis=True)
+        bad = Configuration().child(Parallelize(loop="k"))
+        nest, key = space.try_canonical_key(bad)
+        h = eng.submit_prepped(bad, nest, key)
+        assert h.done and h.result.status == "illegal"
+        assert h.result.note.startswith("static:dependence.")
+        assert eng.stats.static_pruned == 1
+
+    def test_snapshot_restore_roundtrip(self):
+        w, space = self._spaces()
+        eng = EvaluationEngine(w, space, CostModelBackend(), store=False,
+                               static_analysis=True)
+        eng.sweep(space.children(Configuration()))
+        snap = eng.snapshot()
+        assert snap["static_rules"]
+        eng2 = EvaluationEngine(w, space, CostModelBackend(), store=False,
+                                static_analysis=True)
+        eng2.restore(snap)
+        assert eng2.stats.static_pruned == eng.stats.static_pruned
+        assert eng2.stats_dict()["static"] == eng.stats_dict()["static"]
+
+    def test_restore_accepts_pre_analysis_checkpoint(self):
+        """Snapshots written before the analyzer existed lack the
+        ``static_rules`` key and a ``static_pruned`` stat — both default."""
+        w, space = self._spaces()
+        eng = EvaluationEngine(w, space, CostModelBackend(), store=False)
+        snap = eng.snapshot()
+        del snap["static_rules"]
+        snap["stats"].pop("static_pruned")
+        eng2 = EvaluationEngine(w, space, CostModelBackend(), store=False)
+        eng2.restore(snap)
+        assert eng2.stats.static_pruned == 0
+
+
+class TestSessionAndSpec:
+    def test_session_identical_best_with_fewer_dispatches(self):
+        w = SYR2K
+        logs = {}
+        for static in (False, True):
+            s = TuningSession(CostModelBackend(), store=False,
+                              static_analysis=static)
+            logs[static] = s.tune(w, SearchSpace(root=w.nest()),
+                                  strategy="greedy", budget=120)
+        a, b = logs[False], logs[True]
+        assert a.best().result.time_s == b.best().result.time_s
+        assert (a.best().config.path_key()
+                == b.best().config.path_key())
+        assert len(a.experiments) == len(b.experiments)
+        assert "static" not in a.cache
+        assert b.cache["static"]["pruned"] > 0
+
+    def test_spec_roundtrip_and_default(self):
+        spec = TuningSpec(workload="syr2k", budget=30,
+                          static_analysis=True, store=False)
+        spec2 = TuningSpec.from_json(spec.to_json())
+        assert spec2.static_analysis is True
+        assert TuningSpec().static_analysis is False
+        log = spec2.run()
+        assert log.cache["static"]["pruned"] > 0
+
+    def test_cli_flag_overrides_spec(self, tmp_path, capsys):
+        from repro.core.session import main
+
+        p = tmp_path / "spec.json"
+        TuningSpec(workload="syr2k", budget=25, store=False).save(p)
+        out = tmp_path / "log.json"
+        rc = main([str(p), "--static-analysis", "--quiet",
+                   "--out", str(out)])
+        assert rc == 0
+        import json
+
+        log = json.loads(out.read_text())
+        assert log["cache"]["static"]["pruned"] > 0

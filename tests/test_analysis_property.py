@@ -1,0 +1,154 @@
+"""Property tests for the dependence analyzer + the differential harness as a
+tier-1 gate.
+
+The hypothesis versions run when hypothesis is installed (the conftest shim
+skips them otherwise); each property also has a seeded plain-pytest fallback
+over randomly sampled schedules so the invariants are exercised either way:
+
+* verdicts are invariant under loop *renaming* (evidence is origin-based),
+* static-accept ⊆ ``check_legal``-accept on random transformation sequences
+  (the dependence passes never accept an illegal schedule), and in fact the
+  verdicts match exactly (equivalence, checked both directions),
+* the differential harness finds zero false infeasibles on every workload
+  (small sample counts here; ``bench_analysis`` runs the ≥2000-sample gate).
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import StaticAnalyzer, dependences, run_differential
+from repro.core import GEMM, SYR2K
+from repro.core.kernelworkload import kernel_workload
+from repro.core.legality import is_legal
+from repro.core.measure import CostModelBackend, PallasBackend, WallclockBackend
+from repro.core.searchspace import SearchSpace
+from repro.core.workloads import PAPER_WORKLOADS
+from repro.analysis.differential import sample_configs
+
+WORKLOADS = {
+    "gemm": lambda: PAPER_WORKLOADS["gemm"],
+    "covariance": lambda: PAPER_WORKLOADS["covariance"],
+    "syr2k": lambda: PAPER_WORKLOADS["syr2k"],
+    "attention": lambda: kernel_workload("attention"),
+    "ssd": lambda: kernel_workload("ssd"),
+}
+
+
+def _sampled_nests(workload, n, seed):
+    space = SearchSpace(root=workload.nest())
+    for config in sample_configs(space, n, seed=seed):
+        yield config, space.try_structure(config)
+
+
+def _rename(nest):
+    return replace(
+        nest,
+        loops=tuple(replace(l, name=f"q{i}")
+                    for i, l in enumerate(nest.loops)),
+    )
+
+
+# -- hypothesis versions -----------------------------------------------------
+
+
+@given(st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_rename_invariance_hypothesis(seed):
+    w = SYR2K
+    analyzer = StaticAnalyzer(w)
+    for _config, nest in _sampled_nests(w, 8, seed):
+        a = analyzer.analyze(nest)
+        b = analyzer.analyze(_rename(nest))
+        assert a.feasible == b.feasible
+        assert [f.rule for f in a.findings] == [f.rule for f in b.findings]
+
+
+@given(st.sampled_from(sorted(WORKLOADS)), st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_static_accept_subsumes_legality_hypothesis(name, seed):
+    w = WORKLOADS[name]()
+    analyzer = StaticAnalyzer(w)
+    for _config, nest in _sampled_nests(w, 8, seed):
+        v = analyzer.analyze(nest)
+        legal = is_legal(nest)
+        assert v.feasible == legal
+        if not legal:
+            assert not v.feasible  # static-accept ⊆ legality-accept
+
+
+# -- seeded fallbacks (always run; hypothesis absent on the container) -------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_rename_invariance_seeded(seed):
+    for w in (SYR2K, GEMM):
+        analyzer = StaticAnalyzer(w)
+        for _config, nest in _sampled_nests(w, 40, seed):
+            a = analyzer.analyze(nest)
+            b = analyzer.analyze(_rename(nest))
+            assert a.feasible == b.feasible
+            assert [f.rule for f in a.findings] == [f.rule for f in b.findings]
+            assert dependences(_rename(nest)) == dependences(nest)
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_static_accept_subsumes_legality_seeded(name):
+    w = WORKLOADS[name]()
+    analyzer = StaticAnalyzer(w)
+    checked = 0
+    for _config, nest in _sampled_nests(w, 120, seed=7):
+        v = analyzer.analyze(nest)
+        assert v.feasible == is_legal(nest)
+        checked += 1
+    assert checked >= 50
+
+
+# -- differential harness as a tier-1 gate (small samples) -------------------
+
+_TIER1_MATRIX = [
+    ("gemm", "costmodel"),
+    ("covariance", "costmodel"),
+    ("syr2k", "costmodel"),
+    ("attention", "costmodel"),
+    ("ssd", "costmodel"),
+    ("gemm", "wallclock-dry"),
+    ("syr2k", "wallclock-dry"),
+    ("covariance", "pallas-nf"),
+    ("attention", "pallas-nf"),
+    ("ssd", "pallas-nf"),
+]
+
+
+def _backend_for(kind):
+    if kind == "costmodel":
+        return CostModelBackend(), False
+    if kind == "wallclock-dry":
+        return WallclockBackend(), True
+    if kind == "pallas-nf":
+        return PallasBackend(verify=False), False
+    raise AssertionError(kind)
+
+
+@pytest.mark.parametrize("name,kind", _TIER1_MATRIX,
+                         ids=[f"{n}-{k}" for n, k in _TIER1_MATRIX])
+def test_differential_soundness_tier1(name, kind):
+    w = WORKLOADS[name]()
+    backend, dry = _backend_for(kind)
+    rep = run_differential(w, backend, samples=150, seed=11, dry=dry,
+                           label=kind)
+    assert rep.samples >= 100
+    assert rep.sound, f"false infeasibles: {rep.false_infeasible[:3]}"
+    # deterministic backends: the mirrors are exhaustive, not best-effort
+    assert rep.coverage == 1.0, rep.to_dict()
+
+
+def test_differential_report_shape():
+    rep = run_differential(SYR2K, CostModelBackend(), samples=60, seed=3)
+    d = rep.to_dict()
+    assert d["backend_red"] == d["agreed_red"] + sum(d["uncovered"].values())
+    assert sum(d["by_rule"].values()) == d["predicted_red"]
+    assert d["sound"] is True

@@ -115,5 +115,18 @@ def test_vmem_accounting():
     cfg = Configuration().child(Tile(loops=("i", "j", "k"), sizes=(32, 32, 32)))
     nest = cfg.apply(GEMM.nest())
     b = codegen.vmem_bytes(GEMM, nest)
-    # A tile + B tile + out block + f32 accumulator = 4 × 32×32×4
-    assert b == 4 * 32 * 32 * 4
+    # A tile + B tile + out block at the workload's element width (f64 —
+    # PolyBench doubles) + the explicit f32 accumulator scratch
+    assert GEMM.elem_bytes == 8
+    assert b == 3 * 32 * 32 * 8 + 32 * 32 * 4
+
+
+def test_vmem_accounting_elem_bytes():
+    """vmem_bytes honors per-access element width (a bf16 matmul's working
+    set is a quarter of the f64 default's, accumulator aside)."""
+    from repro.core.workloads import matmul_workload
+
+    w = matmul_workload("mm", 256, 256, 256, elem_bytes=2)
+    cfg = Configuration().child(Tile(loops=("i", "j", "k"), sizes=(32, 32, 32)))
+    b = codegen.vmem_bytes(w, cfg.apply(w.nest()))
+    assert b == 3 * 32 * 32 * 2 + 32 * 32 * 4

@@ -104,6 +104,39 @@ class TestTriangularBounds:
         with pytest.raises(IllegalTransform, match="triangular"):
             check_legal(nest)
 
+    def test_dependent_tiled_deeper_than_provider_is_illegal(self):
+        """Regression: rule 2c used ``zip(prov_pts, dep_pts)``, which
+        silently truncated when multilevel tiling gave the pair different
+        point-loop counts — a 2-level-tiled dependent against a 1-level
+        provider slipped through with its unmatched inner level unchecked."""
+        nest = _apply(
+            COVARIANCE,
+            Tile(loops=("i", "j"), sizes=(64, 64)),
+            # second tiling level on the dependent only: j now has two point
+            # loops (4 with span 64, then 64), i still one — the aligned zip
+            # passes (4 ≤ 64) and the old code dropped j's inner 64
+            Tile(loops=("j1",), sizes=(4,)),
+        )
+        dep_pts = [l.trips for l in nest.loops
+                   if l.origin == "j" and l.is_point]
+        prov_pts = [l.trips for l in nest.loops
+                    if l.origin == "i" and l.is_point]
+        assert len(dep_pts) == 2 and len(prov_pts) == 1
+        with pytest.raises(IllegalTransform, match="unmatched inner"):
+            check_legal(nest)
+
+    def test_provider_tiled_deeper_than_dependent_stays_conservative(self):
+        """The mirror case (provider 2-level, dependent 1-level) must not be
+        newly *accepted* by the fix: the aligned outer levels still compare
+        (provider's outer tile 4 < dependent's 64 → wider-tile rule)."""
+        nest = _apply(
+            COVARIANCE,
+            Tile(loops=("i", "j"), sizes=(64, 64)),
+            Tile(loops=("i1",), sizes=(4,)),
+        )
+        with pytest.raises(IllegalTransform, match="wider"):
+            check_legal(nest)
+
     def test_syr2k_shares_the_covariance_rules(self):
         with pytest.raises(IllegalTransform):
             check_legal(_apply(

@@ -1,0 +1,57 @@
+"""Smoke test for the spec linter CLI (``python -m repro.analysis.lint``):
+run as a real subprocess over a generated attention :class:`TuningSpec`
+JSON, exit codes 0/2 = clean/bad-spec, infeasible-fraction output parsed."""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+from repro.core.session import TuningSpec
+
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def _run_lint(*args):
+    env = dict(os.environ, PYTHONPATH=_SRC)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+
+
+def test_lint_attention_spec(tmp_path):
+    spec = TuningSpec(
+        workload="attention",
+        backend="pallas",
+        backend_args={"verify": False},
+        store=False,
+    )
+    p = tmp_path / "spec.json"
+    spec.save(p)
+    out = _run_lint(str(p), "--samples", "150", "--seed", "5")
+    assert out.returncode == 0, out.stderr[-2000:]
+    lines = out.stdout.splitlines()
+    frac_line = next(l for l in lines if l.startswith("infeasible_fraction="))
+    frac = float(frac_line.split("=", 1)[1])
+    assert 0.0 <= frac <= 1.0
+    # causal attention's triangular bound + kernel expressibility dominate
+    # this space: the linter must find a substantial red fraction
+    assert frac > 0.2
+    header = next(l for l in lines if l.startswith("lint:"))
+    assert "backend=pallas" in header
+    assert any("," in l for l in lines[lines.index("rule,count") + 1:])
+
+
+def test_lint_bad_spec_exits_2(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text('{"workload": "no-such-kernel"}')
+    out = _run_lint(str(p))
+    assert out.returncode == 2
+    assert "bad spec" in out.stdout
+
+    missing = tmp_path / "missing.json"
+    out = _run_lint(str(missing))
+    assert out.returncode == 2
