@@ -70,7 +70,11 @@ def _drop_store(path: str) -> None:
 
 
 def _rank_correlation_gate(w, store_path: str, emit) -> dict:
-    """Gate 1: learned Spearman vs analytic Spearman on held-out records."""
+    """Gate 1: learned Spearman vs analytic Spearman on held-out records,
+    plus the dependence-feature arm (ROADMAP item 6): the default ``"full"``
+    feature set (dependence vectors + feasibility margins) must rank the
+    held-out set at least as well as the historical ``"tokens"`` vector —
+    the new columns may only add information, never cost ranking quality."""
     from repro.core import (
         ResultStore,
         Surrogate,
@@ -85,22 +89,29 @@ def _rank_correlation_gate(w, store_path: str, emit) -> dict:
     items = ResultStore.shared(store_path).ok_items(w.fingerprint(), scope)
     train, held = items[0::2], items[1::2]
     sur = Surrogate(w).fit_items(train)
+    sur_tok = Surrogate(w, feature_set="tokens").fit_items(train)
     measured = [t for _, t in held]
     learned_pred = [sur.predict_one(k) for k, _ in held]
+    tokens_pred = [sur_tok.predict_one(k) for k, _ in held]
     analytic_pred = [
         estimate_time(nest_from_key(k, w), XEON_8180M) for k, _ in held
     ]
     rho_learned = spearman(learned_pred, measured)
+    rho_tokens = spearman(tokens_pred, measured)
     rho_analytic = spearman(analytic_pred, measured)
+    dep_pass = rho_learned >= rho_tokens - 1e-9
     emit(f"  {w.name:11s} held-out Spearman: learned={rho_learned:+.3f}  "
-         f"analytic={rho_analytic:+.3f}  "
+         f"tokens-only={rho_tokens:+.3f}  analytic={rho_analytic:+.3f}  "
          f"(train={len(train)}, held={len(held)})  "
-         f"({'PASS' if rho_learned > rho_analytic else 'miss'})")
+         f"({'PASS' if rho_learned > rho_analytic else 'miss'}, "
+         f"dep-features {'PASS' if dep_pass else 'miss'})")
     return {
         "n_train": len(train),
         "n_held_out": len(held),
         "spearman_learned": rho_learned,
+        "spearman_tokens": rho_tokens,
         "spearman_analytic": rho_analytic,
+        "dep_features_pass": bool(dep_pass),
         "pass": bool(rho_learned > rho_analytic),
     }
 
@@ -170,15 +181,22 @@ def main(emit=print):
             summary[k]["fewer_experiments"] for k in KERNELS),
         "rank_correlation_all": all(
             summary[k]["rank_correlation"]["pass"] for k in KERNELS),
+        "dep_features_all": all(
+            summary[k]["rank_correlation"]["dep_features_pass"]
+            for k in KERNELS),
         "pass": all(
             summary[k]["fewer_experiments"]
-            and summary[k]["rank_correlation"]["pass"] for k in KERNELS),
+            and summary[k]["rank_correlation"]["pass"]
+            and summary[k]["rank_correlation"]["dep_features_pass"]
+            for k in KERNELS),
     }
     emit(f"  acceptance: "
          f"{'PASS' if summary['acceptance']['pass'] else 'FAIL'} "
          f"(fewer-exps={summary['acceptance']['fewer_experiments_all']}, "
          f"spearman-beats-analytic="
-         f"{summary['acceptance']['rank_correlation_all']})")
+         f"{summary['acceptance']['rank_correlation_all']}, "
+         f"dep-features-beat-tokens="
+         f"{summary['acceptance']['dep_features_all']})")
     save_result("surrogate", summary)
     return rows
 

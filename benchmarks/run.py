@@ -11,6 +11,8 @@
   bench_store             store migration + cross-workload surrogate transfer
   bench_faults            fault injection: retry/quarantine + kill-9 resume (PR 6)
   bench_async             async pipelined sessions: worker scaling + resume (PR 7)
+  bench_fleet             fleet dispatcher: N-host scaling, kill-9 requeue,
+                          warm serving from the federated cache (PR 10)
   bench_kernels           kernel-tuning gate: the repo's own Pallas kernels
                           (attention/SSD) tuned through TuningSession —
                           tuned must beat the block=512 serving default
@@ -38,7 +40,7 @@ Prints a final ``name,us_per_call,derived`` CSV.  Run with
   printed) and exit.
 * ``--quick`` — smoke mode: only the cheap cost-model gate suites
   (``eval_cache`` + the cost-model half of ``warm_start`` + ``session`` +
-  ``acquisition`` + ``faults`` + ``async`` + ``kernels``), and exit
+  ``acquisition`` + ``faults`` + ``async`` + ``fleet`` + ``kernels``), and exit
   non-zero if any acceptance gate regressed.  This
   is the CI regression check; it is also runnable standalone:
   ``python -m benchmarks.run --quick --json out.json``.
@@ -79,8 +81,8 @@ def _collect_gates(ran: set[str]) -> dict:
     results = os.fspath(results_dir())
     gates: dict = {}
     for name in ("eval_cache", "warm_start", "surrogate", "session",
-                 "acquisition", "store", "faults", "async", "kernels",
-                 "analysis"):
+                 "acquisition", "store", "faults", "async", "fleet",
+                 "kernels", "analysis"):
         if name not in ran:
             continue
         try:
@@ -177,9 +179,10 @@ def main(argv=None) -> None:
 
     from . import (bench_acquisition, bench_analysis, bench_async,
                    bench_autotune, bench_beyond_transforms, bench_eval_cache,
-                   bench_faults, bench_kernels, bench_mcts_vs_greedy,
-                   bench_pragma_stacking, bench_roofline, bench_session,
-                   bench_store, bench_surrogate, bench_warm_start)
+                   bench_faults, bench_fleet, bench_kernels,
+                   bench_mcts_vs_greedy, bench_pragma_stacking,
+                   bench_roofline, bench_session, bench_store,
+                   bench_surrogate, bench_warm_start)
 
     suites = {
         "pragma_stacking": bench_pragma_stacking.main,
@@ -193,6 +196,7 @@ def main(argv=None) -> None:
         "store": bench_store.main,
         "faults": bench_faults.main,
         "async": bench_async.main,
+        "fleet": bench_fleet.main,
         "beyond_transforms": bench_beyond_transforms.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
@@ -206,6 +210,7 @@ def main(argv=None) -> None:
             "acquisition": bench_acquisition.main,
             "faults": bench_faults.main,
             "async": bench_async.main,
+            "fleet": bench_fleet.main,
             "kernels": bench_kernels.main,
             "analysis": lambda: bench_analysis.main(quick=True),
         }

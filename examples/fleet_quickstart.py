@@ -1,0 +1,77 @@
+"""Fleet quickstart: tuning-as-a-service on one machine (ROADMAP item 1).
+
+Boots the whole fleet in a single process — a dispatcher (door lint, FIFO
+queue, federation merge daemon) with its HTTP server on an ephemeral port,
+two workers running jobs through the unchanged ``TuningSession`` stack —
+then submits a ``TuningSpec``, follows the experiment stream, and
+re-submits the identical spec to show it served from the federated cache
+with zero backend dispatches.
+
+    PYTHONPATH=src python examples/fleet_quickstart.py
+
+In a real deployment each piece is its own process/host:
+
+    python -m repro.fleet.server --port 8757 --spool /var/tune/spool
+    python -m repro.fleet.worker --connect dispatcher:8757   # per host
+    python -m repro.fleet.client submit spec.json --follow
+"""
+
+import tempfile
+import threading
+
+from repro.fleet import Dispatcher, FleetHTTPServer, FleetWorker
+from repro.fleet.client import follow, submit
+
+SPEC = {
+    "workload": "gemm", "strategy": "greedy", "budget": 40,
+    "backend": "costmodel",
+    "space_args": {"tile_sizes": [16, 64, 256], "max_transformations": 3},
+    # no "store": the fleet's federation policy kicks in — the worker
+    # primes a local store from GET /store and uploads it back on finish
+}
+
+
+def main():
+    with tempfile.TemporaryDirectory(prefix="fleet_quickstart_") as tmp:
+        dispatcher = Dispatcher(spool_dir=f"{tmp}/spool", lint_samples=100,
+                                federation_interval_s=0.5)
+        server = FleetHTTPServer(dispatcher, ("127.0.0.1", 0))
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+        print(f"dispatcher listening on 127.0.0.1:{server.port}")
+
+        workers = [FleetWorker("127.0.0.1", server.port, name=f"w{i}",
+                               workdir=f"{tmp}/w{i}") for i in (1, 2)]
+        for w in workers:
+            w.register()
+
+        job = submit("127.0.0.1", server.port, dict(SPEC))
+        print(f"submitted {job['job_id']}: lint sampled "
+              f"{job['lint']['samples']} configs, "
+              f"{job['lint']['infeasible_fraction']:.0%} infeasible")
+
+        workers[0].run_one()                # a worker picks the job up
+        for ev in follow("127.0.0.1", server.port, job["job_id"]):
+            if ev["event"] == "experiment" and ev["number"] % 10 == 0:
+                print(f"  exp #{ev['number']:3d}  {ev['status']:14s} "
+                      f"time={ev.get('time_s')}")
+            elif ev["event"] == "done":
+                best = ev["result"]["best"]
+                print(f"done: best time {best['time_s']:.3f}s at "
+                      f"experiment #{best['number']}")
+
+        # the identical spec again — served from the federated cache
+        job2 = submit("127.0.0.1", server.port, dict(SPEC))
+        workers[1].run_one()                # the *other* worker, warm
+        st = dispatcher.job_status(job2["job_id"])
+        cache = st["result"]["cache"]
+        print(f"re-submitted as {job2['job_id']}: preloaded "
+              f"{cache['preloaded']} records, {cache['hits']} cache hits — "
+              f"best {st['result']['best']['time_s']:.3f}s "
+              f"(same answer, no re-measurement)")
+
+        server.shutdown()
+        server.server_close()
+
+
+if __name__ == "__main__":
+    main()

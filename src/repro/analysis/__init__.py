@@ -18,7 +18,9 @@ measurement worker:
   pass static analysis.
 * :mod:`repro.analysis.lint` — ``python -m repro.analysis.lint spec.json``
   reports a space's statically-infeasible fraction and per-rule histogram
-  before a job is submitted to the fleet.
+  before a job is submitted to the fleet; :func:`lint_spec` is the callable
+  form the fleet dispatcher runs at the door (bad specs are rejected with a
+  typed :class:`LintError` instead of burning a worker).
 
 Opt-in at every layer (``EvaluationEngine(static_analysis=True)``,
 ``TuningSession``, ``TuningSpec``); default-off runs stay byte-identical.
@@ -35,6 +37,7 @@ from .passes import (
     register_pass,
 )
 from .differential import DifferentialReport, run_differential, sample_configs
+from .lint import LintError, lint_spec
 
 __all__ = [
     "AnalysisContext",
@@ -42,10 +45,12 @@ __all__ = [
     "Dependence",
     "DifferentialReport",
     "Finding",
+    "LintError",
     "StaticAnalyzer",
     "Verdict",
     "available_passes",
     "dependences",
+    "lint_spec",
     "register_pass",
     "run_differential",
     "sample_configs",

@@ -8,6 +8,12 @@ histogram.  Run it before submitting a job to the fleet: a space dominated by
 one rule's red nodes is usually a mis-specified space, and the fraction bounds
 how much `static_analysis=True` can save.
 
+The same check is exposed as a callable API — :func:`lint_spec` — which the
+fleet dispatcher (:mod:`repro.fleet.server`) runs at the door on every
+submitted spec: a spec that cannot even resolve, or whose sampled space is
+*entirely* statically infeasible, is rejected with a typed error instead of
+burning a measurement worker on it.
+
 Exit codes: 0 = report printed, 2 = bad spec (unreadable / unresolvable),
 matching the session CLI's convention.
 """
@@ -17,7 +23,88 @@ from __future__ import annotations
 import argparse
 from typing import Sequence
 
-__all__ = ["main"]
+__all__ = ["LintError", "lint_spec", "main"]
+
+
+class LintError(ValueError):
+    """A spec that fails the door lint, carrying a typed machine-readable
+    reason (``code``) alongside the human-readable message.
+
+    Codes: ``"bad-spec"`` — the document does not resolve to a runnable job
+    (unknown workload/backend/strategy, malformed args); ``"infeasible-space"``
+    — the spec resolves but every sampled schedule is statically red, so
+    dispatching it would only burn a worker producing red nodes.
+    """
+
+    def __init__(self, code: str, detail: str, report: dict | None = None):
+        super().__init__(detail)
+        self.code = code
+        self.detail = detail
+        self.report = report or {}
+
+    def to_dict(self) -> dict:
+        return {"error": self.code, "detail": self.detail,
+                "report": self.report}
+
+
+def lint_spec(spec, samples: int = 1000, seed: int = 0,
+              max_depth: int = 4) -> dict:
+    """Statically lint one :class:`~repro.core.session.TuningSpec` (instance
+    or plain dict): resolve it, sample ``samples`` schedules from its search
+    space, and run the static analyzer configured for its backend — zero
+    measurements.
+
+    Returns the report dict ``{"workload", "backend_model", "samples",
+    "seed", "passes", "infeasible", "infeasible_fraction", "by_rule"}``.
+    Raises :class:`LintError` with ``code="bad-spec"`` when the spec does not
+    resolve, and ``code="infeasible-space"`` when *every* sampled schedule is
+    statically infeasible (sampling found nothing a backend would measure).
+    """
+    from repro.core.session import TuningSpec
+
+    try:
+        if not isinstance(spec, TuningSpec):
+            spec = TuningSpec.from_dict(spec)
+        workload = spec.build_workload()
+        space = spec.build_space(workload)
+        backend = spec.build_backend()
+        spec.build_peers()
+    except (OSError, ValueError, TypeError, KeyError) as e:
+        raise LintError("bad-spec", str(e)) from e
+
+    from .differential import sample_configs
+    from .passes import StaticAnalyzer
+
+    analyzer = StaticAnalyzer(workload, backend=backend)
+    configs = sample_configs(space, samples, seed=seed, max_depth=max_depth)
+    by_rule: dict[str, int] = {}
+    infeasible = 0
+    for config in configs:
+        nest = space.try_structure(config)
+        v = analyzer.analyze(nest, config=config)
+        if not v.feasible:
+            infeasible += 1
+            by_rule[v.rule] = by_rule.get(v.rule, 0) + 1
+
+    n = len(configs)
+    report = {
+        "workload": getattr(workload, "name", "?"),
+        "backend_model": analyzer.model.kind,
+        "samples": n,
+        "seed": seed,
+        "passes": list(analyzer.passes),
+        "infeasible": infeasible,
+        "infeasible_fraction": infeasible / n if n else 0.0,
+        "by_rule": dict(sorted(by_rule.items(),
+                               key=lambda kv: (-kv[1], kv[0]))),
+    }
+    if n and infeasible == n:
+        raise LintError(
+            "infeasible-space",
+            f"all {n} sampled schedules are statically infeasible "
+            f"(rules: {', '.join(report['by_rule'])})",
+            report)
+    return report
 
 
 def main(argv: Sequence[str] | None = None) -> int:
@@ -38,37 +125,26 @@ def main(argv: Sequence[str] | None = None) -> int:
 
     try:
         spec = TuningSpec.load(args.spec)
-        workload = spec.build_workload()
-        space = spec.build_space(workload)
-        backend = spec.build_backend()
-    except (OSError, ValueError, TypeError, KeyError) as e:
+    except (OSError, ValueError, TypeError) as e:
         print(f"error: bad spec: {e}")
         return 2
+    try:
+        report = lint_spec(spec, samples=args.samples, seed=args.seed,
+                           max_depth=args.max_depth)
+    except LintError as e:
+        if e.code == "bad-spec":
+            print(f"error: bad spec: {e.detail}")
+            return 2
+        # infeasible-space: still a report — print it like the healthy path
+        report = e.report
 
-    from .differential import sample_configs
-    from .passes import StaticAnalyzer
-
-    analyzer = StaticAnalyzer(workload, backend=backend)
-    configs = sample_configs(space, args.samples, seed=args.seed,
-                             max_depth=args.max_depth)
-    by_rule: dict[str, int] = {}
-    infeasible = 0
-    for config in configs:
-        nest = space.try_structure(config)
-        v = analyzer.analyze(nest, config=config)
-        if not v.feasible:
-            infeasible += 1
-            by_rule[v.rule] = by_rule.get(v.rule, 0) + 1
-
-    n = len(configs)
-    frac = infeasible / n if n else 0.0
-    print(f"lint: workload={getattr(workload, 'name', '?')} "
-          f"backend={analyzer.model.kind} samples={n} seed={args.seed} "
-          f"passes={','.join(analyzer.passes)}")
-    print(f"infeasible_fraction={frac:.4f}")
-    print(f"infeasible={infeasible}")
+    print(f"lint: workload={report['workload']} "
+          f"backend={report['backend_model']} samples={report['samples']} "
+          f"seed={report['seed']} passes={','.join(report['passes'])}")
+    print(f"infeasible_fraction={report['infeasible_fraction']:.4f}")
+    print(f"infeasible={report['infeasible']}")
     print("rule,count")
-    for rule, count in sorted(by_rule.items(), key=lambda kv: (-kv[1], kv[0])):
+    for rule, count in report["by_rule"].items():
         print(f"{rule},{count}")
     return 0
 

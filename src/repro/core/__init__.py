@@ -37,8 +37,8 @@ from .measure import (
     SupervisedPool,
     WallclockBackend,
 )
-from .resultstore import (SCOPE_POLICIES, ResultStore, host_fingerprint,
-                          migrate_store)
+from .resultstore import (SCOPE_POLICIES, FederationDaemon, ResultStore,
+                          host_fingerprint, migrate_store)
 from .storebackend import (DelegatingStoreBackend, JsonlStoreBackend,
                            SqliteStoreBackend, StoreBackend,
                            StoreBrokenError, StoreRecord)
@@ -67,7 +67,7 @@ __all__ = [
     "COVARIANCE", "Configuration", "CostModelBackend", "DEFAULT_TILE_SIZES",
     "DelegatingStoreBackend",
     "EvalStats", "EvaluationEngine", "Experiment", "FaultInjectingBackend",
-    "FlakyStoreBackend", "GEMM", "GreedyStrategy",
+    "FederationDaemon", "FlakyStoreBackend", "GEMM", "GreedyStrategy",
     "IllegalTransform", "InjectedCrash", "Interchange", "KernelWorkload",
     "Loop", "LoopNest",
     "Machine",

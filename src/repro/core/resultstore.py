@@ -79,6 +79,7 @@ from .storebackend import (
 )
 
 __all__ = [
+    "FederationDaemon",
     "ResultStore",
     "SCHEMA_VERSION",
     "SCOPE_POLICIES",
@@ -348,6 +349,50 @@ class ResultStore:
             stats["dropped_foreign"], stats["dropped_corrupt"],
             size, threshold)
 
+    # -- wire transfer (fleet upload/download path) --------------------------
+
+    def export_lines(self) -> list[str]:
+        """Every current-schema record serialized as canonical JSONL lines —
+        the wire format of the fleet store-transfer path
+        (``POST /upload`` / ``GET /store`` in :mod:`repro.fleet`).  Works for
+        any backend: records are read through the backend protocol and
+        re-encoded as JSONL regardless of how they are stored."""
+        with self._lock:
+            return [JsonlStoreBackend.encode_line(rec)
+                    for rec in self.backend.iter_records()]
+
+    def ingest_lines(self, lines: Iterable[str]) -> dict[str, int]:
+        """Append records received as canonical JSONL lines (the inverse of
+        :meth:`export_lines`) — the fleet dispatcher's upload sink and the
+        worker's warm-pull sink.  Corrupt or foreign-schema lines are counted
+        and skipped, records this process already persisted are deduped, and
+        the append is one atomic batch.  Returns ``{"ingested", "skipped",
+        "corrupt"}``."""
+        fresh: list[StoreRecord] = []
+        sigs: set[tuple[str, str, str]] = set()
+        corrupt = skipped = 0
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            rec = JsonlStoreBackend._decode_line(line)
+            if rec is None:
+                corrupt += 1
+                continue
+            sig = rec.sig()
+            if sig in self._written or sig in sigs:
+                skipped += 1
+                continue
+            sigs.add(sig)
+            fresh.append(rec)
+        n = 0
+        if fresh:
+            with self._lock:
+                n = self.backend.append(fresh)
+                self._written.update(sigs)
+            self._maybe_autocompact()
+        return {"ingested": n, "skipped": skipped, "corrupt": corrupt}
+
     # -- federation ----------------------------------------------------------
 
     def merge(self, *sources: "ResultStore | str | os.PathLike"
@@ -451,3 +496,99 @@ def migrate_store(src: "ResultStore | str | os.PathLike",
             s.close()
         if d is not dst:
             d.close()
+
+
+class FederationDaemon:
+    """The periodic federation merge job :meth:`ResultStore.merge` used to
+    leave to the operator: a daemon thread that folds a set of source stores
+    (per-worker stores, upload staging files) into one shared store every
+    ``interval_s`` seconds, newest record per key.
+
+    Sources may be added while running (:meth:`add_source` — the fleet
+    dispatcher registers each worker's store as it connects); paths that do
+    not exist yet are skipped until they do.  :meth:`merge_now` forces one
+    synchronous cycle (tests, and the dispatcher's warm-path flush before
+    answering a re-submitted spec).  Merge errors are counted and logged,
+    never raised out of the thread — a transiently locked source must not
+    kill federation.
+    """
+
+    def __init__(self, store: "ResultStore | str | os.PathLike",
+                 sources: Sequence[str | os.PathLike] = (),
+                 interval_s: float = 5.0):
+        self.store = (store if isinstance(store, ResultStore)
+                      else ResultStore.shared(store))
+        self.interval_s = float(interval_s)
+        self._sources: list[str] = []
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.cycles = 0
+        self.errors = 0
+        self.last_stats: dict | None = None
+        for s in sources:
+            self.add_source(s)
+
+    def add_source(self, source: str | os.PathLike) -> None:
+        path = os.fspath(source)
+        with self._lock:
+            if path not in self._sources:
+                self._sources.append(path)
+
+    @property
+    def sources(self) -> list[str]:
+        with self._lock:
+            return list(self._sources)
+
+    def merge_now(self) -> dict | None:
+        """One synchronous federation cycle over the currently existing
+        sources; returns the merge stats (None when no source exists yet)."""
+        existing = [p for p in self.sources if os.path.exists(p)]
+        if not existing:
+            return None
+        try:
+            stats = self.store.merge(*existing)
+        except Exception:       # noqa: BLE001 — keep federating
+            self.errors += 1
+            _log.exception("federation merge cycle failed")
+            return None
+        self.cycles += 1
+        self.last_stats = stats
+        return stats
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            self._wake.wait(self.interval_s)
+            self._wake.clear()
+            if self._stop.is_set():
+                break
+            self.merge_now()
+
+    def start(self) -> "FederationDaemon":
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._run, name="store-federation", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, final_merge: bool = True) -> None:
+        """Stop the thread; by default run one last cycle so results landed
+        just before shutdown are not stranded in worker stores."""
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        if final_merge:
+            self.merge_now()
+
+    def stats(self) -> dict:
+        return {
+            "sources": self.sources,
+            "interval_s": self.interval_s,
+            "cycles": self.cycles,
+            "errors": self.errors,
+            "last": self.last_stats,
+        }

@@ -859,6 +859,12 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--resume", action="store_true",
                     help="resume from the checkpoint sidecar (missing file "
                          "starts fresh; a mismatched one is an error)")
+    ap.add_argument("--stream", action="store_true",
+                    help="emit one NDJSON line per experiment on stdout as "
+                         "it completes (the job-level streaming hook the "
+                         "fleet follows; implies --quiet for the summary "
+                         "line, which moves to a final {\"event\": \"done\"} "
+                         "record)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress the per-run summary line")
     args = ap.parse_args(argv)
@@ -879,8 +885,17 @@ def main(argv: Sequence[str] | None = None) -> int:
     if args.static_analysis:
         spec.static_analysis = True
 
+    on_experiment = None
+    if args.stream:
+        def on_experiment(exp: Experiment) -> None:
+            # NDJSON event stream: one self-describing line per experiment,
+            # flushed immediately so a follower (pipe, fleet dispatcher)
+            # sees results as they land, not at process exit
+            print(json.dumps({"event": "experiment", **exp.to_dict()},
+                             separators=(",", ":")), flush=True)
+
     try:
-        log = spec.run(resume=args.resume)
+        log = spec.run(on_experiment, resume=args.resume)
     except (ValueError, TypeError) as e:
         print(f"error: spec {args.spec!r} failed to resolve: {e}",
               file=sys.stderr)
@@ -893,11 +908,19 @@ def main(argv: Sequence[str] | None = None) -> int:
         best = log.best()
         summary = (f"best time_s={best.result.time_s:.6g} "
                    f"at experiment #{best.number}")
+        best_dict = {"time_s": best.result.time_s, "number": best.number}
         rc = 0
     except NoSuccessfulExperiment as e:
         summary = f"FAILED: {e}"
+        best_dict = None
         rc = 1
-    if not args.quiet:
+    if args.stream:
+        print(json.dumps({"event": "done", "workload": log.workload,
+                          "backend": log.backend, "strategy": spec.strategy,
+                          "experiments": len(log.experiments),
+                          "best": best_dict},
+                         separators=(",", ":")), flush=True)
+    elif not args.quiet:
         print(f"{log.workload} [{spec.strategy} on {log.backend}] "
               f"{len(log.experiments)} experiments: {summary}")
     return rc

@@ -20,7 +20,13 @@ This module implements that learned surrogate with zero new dependencies:
   triangularity).  One feature is the log of the *analytic* model's own
   prediction, so the regression learns the measured-vs-model residual — the
   learned surrogate can only refine the analytic ranking, never start from
-  less information than it.
+  less information than it.  The default ``feature_set="full"`` additionally
+  appends the dependence-vector block (ROADMAP item 6): carried-dependence
+  counts and direction signatures from
+  :func:`repro.analysis.deps.dependences`, triangular tile slack, and the
+  signed feasibility margins against the wallclock grid-step and Pallas VMEM
+  budgets; ``feature_set="tokens"`` keeps the historical syntactic vector
+  (the ``bench_surrogate`` baseline arm).
 * :class:`Surrogate` — pure-numpy regularized regression over those features.
   Two model forms: Bayesian ridge (``model="ridge"``, the default — closed
   form, calibrated predictive uncertainty for exploration bonuses) and
@@ -61,7 +67,9 @@ from .measure import Result
 from .workloads import Workload
 
 __all__ = [
+    "FEATURE_SETS",
     "Surrogate",
+    "feature_names",
     "nest_from_key",
     "spearman",
     "structure_features",
@@ -126,9 +134,39 @@ def nest_from_key(key: tuple, workload: Workload) -> LoopNest:
 _VMAX = 4           # source vars featurized individually (paper kernels: 3)
 _PER_VAR = 8
 
+#: Feature sets: ``"full"`` (default) appends the dependence-vector and
+#: feasibility-margin block to the token features; ``"tokens"`` is the
+#: historical purely-syntactic vector (the bench_surrogate baseline arm).
+FEATURE_SETS = ("full", "tokens")
 
-def feature_names(workload: Workload) -> list[str]:
+#: The dependence/feasibility block (ROADMAP item 6): schedules the
+#: analytic model ranks identically can differ sharply in *why* they are
+#: fast — what the carried dependences allow and how much feasibility
+#: headroom the schedule leaves.  These columns come straight from
+#: :func:`repro.analysis.deps.dependences` direction vectors plus the
+#: backends' own feasibility budgets.
+_DEP_NAMES = [
+    "dep.n_reduction",      # reduction dependences (accumulation chains)
+    "dep.n_bound",          # triangular bound dependences
+    "dep.carried_frac",     # fraction of loops carrying any dependence
+    "dep.lt",               # "<" entries across direction vectors
+    "dep.star",             # "*" entries (multi-level tilings of carriers)
+    "dep.inner_carried",    # innermost loop carries a dependence
+    "tri.slack",            # log₂ headroom of tiles under triangular bounds
+    "margin.grid",          # log₂ slack vs the wallclock grid-step budget
+    "margin.vmem",          # log₂ slack vs the Pallas VMEM budget
+]
+
+#: Default Pallas VMEM budget the margin feature measures against (mirrors
+#: ``PallasBackend``'s 128 MiB default).
+_VMEM_LIMIT_BYTES = 128 * 1024 * 1024
+
+
+def feature_names(workload: Workload, feature_set: str = "full") -> list[str]:
     """Column names of :func:`structure_features` (diagnostics/tests)."""
+    if feature_set not in FEATURE_SETS:
+        raise ValueError(f"unknown feature_set {feature_set!r} "
+                         f"(choose one of {FEATURE_SETS})")
     names = [
         "log_analytic",
         "n_loops", "n_point", "n_parallel", "n_unrolled", "n_vectorized",
@@ -145,20 +183,92 @@ def feature_names(workload: Workload) -> list[str]:
             f"{tag}.log_inner_tile", f"{tag}.pos_outer", f"{tag}.pos_inner",
             f"{tag}.parallel", f"{tag}.log_extent",
         ]
+    if feature_set == "full":
+        names += _DEP_NAMES
     return names
+
+
+def _dependence_features(nest: LoopNest, workload: Workload,
+                         grid: float) -> list[float]:
+    """The ``_DEP_NAMES`` block for one derived nest.
+
+    Imported lazily: :mod:`repro.analysis` depends on :mod:`repro.core`, so
+    a module-level import here would be circular; at feature-extraction time
+    the core package is fully initialized and the import is a cache hit.
+    The margin columns degrade to 0.0 (neutral under standardization) when
+    the schedule has no Pallas plan — the dependence columns never degrade.
+    """
+    from repro.analysis.deps import dependences
+
+    lg = lambda x: math.log2(max(float(x), 1.0))  # noqa: E731
+    deps = dependences(nest)
+    reds = [d for d in deps if d.kind == "reduction"]
+    bounds = [d for d in deps if d.kind == "bound"]
+    n = len(nest.loops)
+    lt = sum(d.direction.count("<") for d in reds)
+    star = sum(d.direction.count("*") for d in reds)
+    carried = set()
+    for d in reds:
+        for i, sym in enumerate(d.direction):
+            if sym != "=":
+                carried.add(i)
+    inner_carried = float(bool(reds) and any(
+        d.direction and d.direction[-1] != "=" for d in reds))
+
+    # triangular slack: how much of the bounded var's extent the innermost
+    # tile leaves uncut — small tiles keep triangular iteration domains
+    # nearly exact, big tiles waste work on the empty half
+    tri_slack = 0.0
+    for d in bounds:
+        tile = 1.0
+        for l in nest.loops:
+            if l.origin == d.var and l.is_point:
+                tile *= l.trips
+        tri_slack += lg(workload.extents.get(d.var, 1)) - lg(tile)
+
+    # feasibility margins: signed log₂ headroom against the two hard
+    # budgets the backends enforce (negative ⇒ statically infeasible)
+    try:
+        from .codegen import MAX_WALLCLOCK_GRID_STEPS
+        grid_margin = lg(MAX_WALLCLOCK_GRID_STEPS) - lg(grid)
+    except Exception:       # noqa: BLE001 — jax-less environments
+        grid_margin = 0.0
+    try:
+        own = getattr(workload, "vmem_bytes", None)
+        if own is not None:
+            vmem = own(nest)
+        else:
+            from .codegen import vmem_bytes
+            vmem = vmem_bytes(workload, nest)
+        vmem_margin = lg(_VMEM_LIMIT_BYTES) - lg(vmem)
+    except Exception:       # noqa: BLE001 — unplannable schedule: neutral
+        vmem_margin = 0.0
+
+    return [
+        float(len(reds)), float(len(bounds)),
+        len(carried) / max(n, 1),
+        float(lt), float(star), inner_carried,
+        tri_slack, grid_margin, vmem_margin,
+    ]
 
 
 def structure_features(
     key: tuple, workload: Workload, machine: Machine = XEON_8180M,
-    nest: LoopNest | None = None,
+    nest: LoopNest | None = None, feature_set: str = "full",
 ) -> np.ndarray:
     """Fixed-length feature vector for one canonical structure key.
 
-    Pure function of ``(key, workload, machine)`` — no hashing, no process
-    state — so the same store trains byte-identical models everywhere.  Pass
-    ``nest`` when the caller already holds the derived nest (the evaluation
-    engine does) to skip the :func:`nest_from_key` reconstruction.
+    Pure function of ``(key, workload, machine, feature_set)`` — no hashing,
+    no process state — so the same store trains byte-identical models
+    everywhere.  Pass ``nest`` when the caller already holds the derived
+    nest (the evaluation engine does) to skip the :func:`nest_from_key`
+    reconstruction.  ``feature_set="full"`` (default) appends the
+    dependence-vector/feasibility block (``_DEP_NAMES``); ``"tokens"`` is
+    the historical syntactic vector.
     """
+    if feature_set not in FEATURE_SETS:
+        raise ValueError(f"unknown feature_set {feature_set!r} "
+                         f"(choose one of {FEATURE_SETS})")
     if nest is None:
         nest = nest_from_key(key, workload)
     loops = nest.loops
@@ -227,6 +337,8 @@ def structure_features(
             float(any(l.parallel for _, l in mine)),
             lg(workload.extents.get(v, 1)),
         ]
+    if feature_set == "full":
+        feats += _dependence_features(nest, workload, grid)
     return np.asarray(feats, dtype=np.float64)
 
 
@@ -311,13 +423,18 @@ class Surrogate:
         refit_every: int = 8,
         n_rounds: int = 120,
         learning_rate: float = 0.15,
+        feature_set: str = "full",
     ):
         if model not in ("ridge", "stumps"):
             raise ValueError(f"Surrogate: unknown model {model!r} "
                              f"(choose 'ridge' or 'stumps')")
+        if feature_set not in FEATURE_SETS:
+            raise ValueError(f"Surrogate: unknown feature_set "
+                             f"{feature_set!r} (choose one of {FEATURE_SETS})")
         self.workload = workload
         self.machine = machine or XEON_8180M
         self.model = model
+        self.feature_set = feature_set
         self.ridge_lambda = float(ridge_lambda)
         self.min_fit = int(min_fit)
         self.refit_every = int(refit_every)
@@ -339,6 +456,7 @@ class Surrogate:
         self._version = 0
         self._pred_cache: dict[tuple, tuple[float, float]] = {}
         # ridge state
+        self._active_dim: int | None = None
         self._mu: np.ndarray | None = None
         self._sd: np.ndarray | None = None
         self._w: np.ndarray | None = None
@@ -469,7 +587,9 @@ class Surrogate:
         cid = (w.fingerprint(), key)
         f = self._feat_cache.get(cid)
         if f is None:
-            f = structure_features(key, w, self.machine, nest=nest)
+            f = structure_features(key, w, self.machine, nest=nest,
+                                   feature_set=getattr(
+                                       self, "feature_set", "full"))
             self._feat_cache[cid] = f
         return f
 
@@ -492,7 +612,42 @@ class Surrogate:
         self._version += 1
         self._pred_cache.clear()
 
+    @staticmethod
+    def _loo_predictions(X: np.ndarray, y: np.ndarray,
+                         ridge_lambda: float) -> np.ndarray:
+        """Closed-form leave-one-out predictions of the ridge fit on (X, y):
+        ``ŷ_i − y_i = r_i / (1 - h_ii)`` with ``H = Z A⁻¹ Zᵀ``."""
+        mu, sd = X.mean(axis=0), X.std(axis=0)
+        sd = np.where(sd < 1e-12, 1.0, sd)
+        Z = np.hstack([np.ones((len(X), 1)), (X - mu) / sd])
+        A = Z.T @ Z + ridge_lambda * np.eye(Z.shape[1])
+        A[0, 0] -= ridge_lambda
+        A_inv = np.linalg.inv(A)
+        resid = y - Z @ (A_inv @ (Z.T @ y))
+        h = np.einsum("ij,jk,ik->i", Z, A_inv, Z)
+        return y - resid / np.maximum(1.0 - h, 1e-6)
+
     def _fit_ridge(self, X: np.ndarray, y: np.ndarray) -> None:
+        # dependence-column ablation: the "full" feature set must never rank
+        # worse than the token prefix it extends, so the dependence/margin
+        # block is kept only when it *strictly* improves leave-one-out
+        # Spearman rank correlation — ranking is what the engine uses the
+        # surrogate for, and on a small noisy wallclock store nine extra
+        # columns may not earn their keep; dropping them recovers the
+        # token-only fit exactly
+        dim = X.shape[1]
+        if getattr(self, "feature_set", "full") == "full" \
+                and dim > len(_DEP_NAMES):
+            n_tokens = dim - len(_DEP_NAMES)
+            rho_full = spearman(
+                self._loo_predictions(X, y, self.ridge_lambda), y)
+            rho_tok = spearman(
+                self._loo_predictions(X[:, :n_tokens], y,
+                                      self.ridge_lambda), y)
+            if rho_full <= rho_tok + 1e-12:
+                dim = n_tokens
+        self._active_dim = dim
+        X = X[:, :dim]
         self._mu = X.mean(axis=0)
         sd = X.std(axis=0)
         sd[sd < 1e-12] = 1.0        # constant columns contribute nothing
@@ -572,7 +727,8 @@ class Surrogate:
             return hit
         x = self._features(key, nest=nest)
         if self.model == "ridge":
-            z = np.concatenate([[1.0], (x - self._mu) / self._sd])
+            z = np.concatenate(
+                [[1.0], (x[:self._mu.shape[0]] - self._mu) / self._sd])
             mean = float(z @ self._w)
             var = self._s2 * (1.0 + float(z @ self._A_inv @ z))
             out = (mean, math.sqrt(max(var, 0.0)))
@@ -619,6 +775,8 @@ class Surrogate:
         self._refit()
         return {
             "model": self.model,
+            "feature_set": getattr(self, "feature_set", "full"),
+            "n_features_active": getattr(self, "_active_dim", None),
             "n_samples": len(self._samples),
             "n_workloads": len({fp for fp, _ in self._samples}),
             "n_pooled": len(self._pooled),

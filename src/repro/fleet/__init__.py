@@ -1,0 +1,44 @@
+"""Tuning as a service: fleet dispatcher, workers, client (ROADMAP item 1).
+
+Stdlib-only (sockets, threads, ``http.server``) distribution layer over the
+unchanged single-host stack:
+
+* :mod:`repro.fleet.server` — the dispatcher (``python -m
+  repro.fleet.server``): lints :class:`~repro.core.session.TuningSpec`
+  submissions at the door via :func:`repro.analysis.lint.lint_spec`, queues
+  jobs FIFO, streams NDJSON experiment events to followers, requeues jobs
+  whose worker stops heartbeating (blindly resumable via the checkpoint
+  sidecar), and runs the federation loop — the periodic
+  :meth:`~repro.core.resultstore.ResultStore.merge` daemon that folds
+  worker uploads into one shared store so re-submitted or subsumed specs
+  are answered from cache with zero backend dispatches.
+* :mod:`repro.fleet.worker` — ``python -m repro.fleet.worker --connect
+  host:port``: pulls jobs, runs them through the unchanged
+  :class:`~repro.core.session.TuningSession`, heartbeats, federates
+  results.
+* :mod:`repro.fleet.client` — ``python -m repro.fleet.client
+  submit|status|follow``.
+* :mod:`repro.fleet.protocol` — the shared JSON/NDJSON-over-HTTP wire
+  helpers and route table.
+"""
+
+from .protocol import (DEFAULT_PORT, HEARTBEAT_INTERVAL_S,
+                       HEARTBEAT_TIMEOUT_S, FleetError, http_json,
+                       http_lines, iter_ndjson, parse_address)
+from .server import Dispatcher, FleetHTTPServer, Job
+from .worker import FleetWorker
+
+__all__ = [
+    "DEFAULT_PORT",
+    "Dispatcher",
+    "FleetError",
+    "FleetHTTPServer",
+    "FleetWorker",
+    "HEARTBEAT_INTERVAL_S",
+    "HEARTBEAT_TIMEOUT_S",
+    "Job",
+    "http_json",
+    "http_lines",
+    "iter_ndjson",
+    "parse_address",
+]

@@ -1,0 +1,132 @@
+"""Fleet client: ``python -m repro.fleet.client submit|status|follow``.
+
+The operator's hand on the dispatcher:
+
+* ``submit spec.json`` — POST the spec; prints the job document (or the
+  typed rejection — exit 2 on ``bad-spec``/``infeasible-space``, mirroring
+  the session CLI's bad-spec exit code).  ``--follow`` tails the job to
+  completion in one step.
+* ``status [job_id]`` — the fleet summary, or one job's document.
+* ``follow job_id`` — stream the job's NDJSON events until it is terminal
+  (exit 0 on ``done``, 1 on ``failed``).
+
+All subcommands take ``--connect host:port`` (default
+``127.0.0.1:8757``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Sequence
+
+from .protocol import (DEFAULT_PORT, FleetError, http_json, http_lines,
+                       iter_ndjson, parse_address)
+
+__all__ = ["main", "submit", "follow"]
+
+
+def submit(host: str, port: int, spec_doc: dict) -> dict:
+    """POST one spec; returns the job document or raises
+    :class:`~repro.fleet.protocol.FleetError` with the typed payload."""
+    return http_json(host, port, "POST", "/submit", {"spec": spec_doc})
+
+
+def follow(host: str, port: int, job_id: str):
+    """Yield the job's event dicts until the stream closes (terminal job)."""
+    yield from iter_ndjson(
+        http_lines(host, port, "GET", f"/follow/{job_id}", timeout=None))
+
+
+def _print(doc: dict) -> None:
+    print(json.dumps(doc, indent=2, sort_keys=True, default=float))
+
+
+def _follow_to_exit(host: str, port: int, job_id: str) -> int:
+    last = None
+    for ev in follow(host, port, job_id):
+        print(json.dumps(ev, separators=(",", ":"), default=float),
+              flush=True)
+        last = ev
+    if last is None:
+        return 1
+    if last.get("event") == "done":
+        return 0
+    return 1
+
+
+def main(argv: "Sequence[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fleet.client",
+        description="Talk to a fleet dispatcher: submit TuningSpec jobs, "
+                    "inspect fleet state, follow result streams.")
+    ap.add_argument("--connect", default=f"127.0.0.1:{DEFAULT_PORT}",
+                    metavar="HOST:PORT", help="dispatcher address "
+                    f"(default 127.0.0.1:{DEFAULT_PORT})")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_submit = sub.add_parser("submit", help="submit a TuningSpec JSON file")
+    p_submit.add_argument("spec", metavar="SPEC.json",
+                          help="TuningSpec document ('-' for stdin)")
+    p_submit.add_argument("--follow", action="store_true",
+                          help="after submitting, stream events until the "
+                               "job is terminal")
+
+    p_status = sub.add_parser("status", help="fleet summary or one job")
+    p_status.add_argument("job_id", nargs="?", default=None)
+
+    p_follow = sub.add_parser("follow", help="stream one job's events")
+    p_follow.add_argument("job_id")
+
+    args = ap.parse_args(argv)
+    host, port = parse_address(args.connect)
+
+    try:
+        if args.cmd == "submit":
+            if args.spec == "-":
+                spec_doc = json.load(sys.stdin)
+            else:
+                with open(args.spec, encoding="utf-8") as fh:
+                    spec_doc = json.load(fh)
+            if not isinstance(spec_doc, dict):
+                print("error: spec must be a JSON object", file=sys.stderr)
+                return 2
+            try:
+                job = submit(host, port, spec_doc)
+            except FleetError as e:
+                _print(e.payload)
+                return 2 if e.code in ("bad-spec", "infeasible-space") else 1
+            _print(job)
+            if args.follow:
+                return _follow_to_exit(host, port, job["job_id"])
+            return 0
+        if args.cmd == "status":
+            path = ("/status" if args.job_id is None
+                    else f"/status/{args.job_id}")
+            try:
+                _print(http_json(host, port, "GET", path))
+            except FleetError as e:
+                _print(e.payload)
+                return 1
+            return 0
+        if args.cmd == "follow":
+            return _follow_to_exit(host, port, args.job_id)
+    except BrokenPipeError:
+        # stdout closed early (e.g. piped into `head`) — not a fleet error
+        try:
+            sys.stdout.close()
+        except OSError:
+            pass
+        return 0
+    except (ConnectionError, OSError) as e:
+        print(f"error: dispatcher unreachable at {host}:{port} ({e})",
+              file=sys.stderr)
+        return 1
+    return 2        # unreachable — argparse enforces the subcommand
+
+
+if __name__ == "__main__":
+    from repro.fleet.client import main as _canonical_main
+
+    raise SystemExit(_canonical_main())

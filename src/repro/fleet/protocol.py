@@ -1,0 +1,160 @@
+"""Fleet wire protocol: JSON over HTTP, NDJSON for streams — stdlib only.
+
+Every fleet endpoint speaks JSON request/response bodies over plain HTTP
+(:mod:`http.client` on the caller side, :mod:`http.server` in the
+dispatcher); the two streaming surfaces — ``GET /follow/<job>`` result
+streams and the ``GET /store`` / ``POST /upload`` store-transfer pair — are
+newline-delimited (NDJSON / canonical store JSONL lines).  This module holds
+the pieces every side shares: the request helper, NDJSON iteration, address
+parsing, and the protocol defaults.
+
+Routes (all rooted at the dispatcher):
+
+=======================  ====================================================
+``POST /submit``         body ``{"spec": {...TuningSpec...}}`` → job document
+                         (typed error on bad/infeasible specs — see
+                         :class:`repro.analysis.lint.LintError`)
+``GET  /status``         fleet summary (jobs by state, workers, federation)
+``GET  /status/<job>``   one job document
+``GET  /follow/<job>``   NDJSON event stream until the job is terminal
+``POST /upload``         canonical store JSONL lines → federated store intake
+``GET  /store``          the federated store as canonical JSONL lines
+``POST /worker/register``  worker hello → ``{"worker_id": ...}``
+``POST /worker/poll``    → ``{"job": null | {job_id, spec, resume}}``
+``POST /worker/heartbeat``  liveness + streamed experiment events
+``POST /worker/done``    terminal job report (full TuningLog dict)
+=======================  ====================================================
+"""
+
+from __future__ import annotations
+
+import http.client
+import json
+from typing import Iterable, Iterator
+
+__all__ = [
+    "DEFAULT_PORT",
+    "HEARTBEAT_INTERVAL_S",
+    "HEARTBEAT_TIMEOUT_S",
+    "FleetError",
+    "http_json",
+    "http_lines",
+    "iter_ndjson",
+    "parse_address",
+]
+
+DEFAULT_PORT = 8757
+#: How often a busy worker reports liveness (and flushes streamed events).
+HEARTBEAT_INTERVAL_S = 0.5
+#: Dispatcher-side deadline: a running job whose worker has not heartbeat
+#: within this window is requeued (blindly resumable — the checkpoint
+#: sidecar makes ``--resume`` safe even if none was written yet).
+HEARTBEAT_TIMEOUT_S = 5.0
+
+
+class FleetError(RuntimeError):
+    """A dispatcher-reported error, carrying the HTTP status and the typed
+    payload (``{"error": code, "detail": ...}``) so callers can branch on
+    ``code`` instead of parsing prose."""
+
+    def __init__(self, status: int, payload: dict):
+        self.status = status
+        self.payload = payload if isinstance(payload, dict) else {}
+        code = self.payload.get("error", "error")
+        detail = self.payload.get("detail", "")
+        super().__init__(f"{code} (HTTP {status}): {detail}")
+
+    @property
+    def code(self) -> str:
+        return str(self.payload.get("error", "error"))
+
+
+def parse_address(addr: str) -> tuple[str, int]:
+    """``"host:port"`` / ``"host"`` / ``":port"`` → (host, port)."""
+    addr = addr.strip()
+    if ":" in addr:
+        host, _, port = addr.rpartition(":")
+        return (host or "127.0.0.1", int(port))
+    return (addr or "127.0.0.1", DEFAULT_PORT)
+
+
+def _request(host: str, port: int, method: str, path: str,
+             body: "bytes | None" = None,
+             content_type: str = "application/json",
+             timeout: "float | None" = 30.0) -> "http.client.HTTPResponse":
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    headers = {"Content-Type": content_type} if body is not None else {}
+    conn.request(method, path, body=body, headers=headers)
+    resp = conn.getresponse()
+    # the caller owns the response; the connection closes with it
+    resp._fleet_conn = conn  # type: ignore[attr-defined]
+    return resp
+
+
+def http_json(host: str, port: int, method: str, path: str,
+              payload: "dict | None" = None,
+              timeout: "float | None" = 30.0) -> dict:
+    """One JSON request/response round trip; raises :class:`FleetError` on a
+    non-2xx status (with the decoded error payload when the body is JSON)."""
+    body = (None if payload is None
+            else json.dumps(payload, separators=(",", ":")).encode("utf-8"))
+    resp = _request(host, port, method, path, body=body, timeout=timeout)
+    try:
+        raw = resp.read()
+    finally:
+        resp.close()
+        resp._fleet_conn.close()  # type: ignore[attr-defined]
+    try:
+        data = json.loads(raw.decode("utf-8")) if raw else {}
+    except ValueError:
+        data = {"error": "bad-response", "detail": raw[:200].decode(
+            "utf-8", "replace")}
+    if not (200 <= resp.status < 300):
+        raise FleetError(resp.status, data)
+    return data if isinstance(data, dict) else {"value": data}
+
+
+def http_lines(host: str, port: int, method: str, path: str,
+               lines: "Iterable[str] | None" = None,
+               timeout: "float | None" = None) -> Iterator[str]:
+    """A line-streaming round trip: optionally send ``lines`` as the NDJSON
+    body, then yield the response's non-empty lines as they arrive (the
+    ``/follow`` and ``/store`` surfaces).  Raises :class:`FleetError` on a
+    non-2xx status."""
+    body = None
+    if lines is not None:
+        body = ("\n".join(lines) + "\n").encode("utf-8")
+    resp = _request(host, port, method, path, body=body,
+                    content_type="application/x-ndjson", timeout=timeout)
+    if not (200 <= resp.status < 300):
+        raw = resp.read()
+        resp.close()
+        resp._fleet_conn.close()  # type: ignore[attr-defined]
+        try:
+            data = json.loads(raw.decode("utf-8"))
+        except ValueError:
+            data = {"error": "bad-response"}
+        raise FleetError(resp.status, data)
+    try:
+        for raw_line in resp:
+            line = raw_line.decode("utf-8").strip()
+            if line:
+                yield line
+    finally:
+        resp.close()
+        resp._fleet_conn.close()  # type: ignore[attr-defined]
+
+
+def iter_ndjson(lines: Iterable[str]) -> Iterator[dict]:
+    """Decode an NDJSON line stream, skipping blank/corrupt lines (stream
+    tolerance mirrors the store's corruption tolerance)."""
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            obj = json.loads(line)
+        except ValueError:
+            continue
+        if isinstance(obj, dict):
+            yield obj

@@ -1,0 +1,669 @@
+"""Fleet dispatcher: ``python -m repro.fleet.server`` — tuning as a service.
+
+The dispatcher is the transport leg of ROADMAP item 1: it accepts
+:class:`~repro.core.session.TuningSpec` JSON submissions and store uploads,
+**lints every spec at the door** (:func:`repro.analysis.lint.lint_spec` — a
+spec that does not resolve, or whose sampled space is entirely statically
+infeasible, is rejected with a typed error instead of burning a measurement
+worker), queues jobs FIFO, hands them to pulling workers, streams NDJSON
+experiment events to followers, and runs the **federation loop** — the
+periodic :meth:`~repro.core.resultstore.ResultStore.merge` daemon PR 5 left
+to the operator — so every worker's results land in one shared store and a
+re-submitted (or subsumed) spec is answered from that cache with zero
+backend dispatches.
+
+Fault tolerance is inherited, not reinvented: a worker that stops
+heartbeating has its job **requeued blindly with ``resume=True``** — the
+session's crash-safe checkpoint sidecar (written under the dispatcher's
+spool, so any local worker can pick it up) makes that safe even when no
+checkpoint was written yet (``resume`` with a missing sidecar starts fresh).
+
+All state lives in :class:`Dispatcher`, which is directly constructible for
+in-process tests; :class:`FleetHTTPServer` is the thin
+``ThreadingHTTPServer`` skin over it.  Stdlib only — sockets, threads,
+``http.server``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import logging
+import os
+import tempfile
+import threading
+import time
+from dataclasses import dataclass, field
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Iterator, Sequence
+
+from repro.core.resultstore import FederationDaemon, ResultStore
+from repro.core.session import TuningSpec
+
+from .protocol import HEARTBEAT_TIMEOUT_S, DEFAULT_PORT
+
+__all__ = ["Dispatcher", "FleetHTTPServer", "Job", "main"]
+
+_log = logging.getLogger("repro.fleet.server")
+
+#: Job lifecycle: queued → running → done | failed (requeues go back to
+#: queued with ``resume=True``).
+JOB_STATES = ("queued", "running", "done", "failed")
+
+
+@dataclass
+class Job:
+    """One submitted tuning job and everything followers can see of it."""
+
+    job_id: str
+    spec: dict                      # normalized TuningSpec document
+    state: str = "queued"
+    resume: bool = False            # requeued jobs resume from the sidecar
+    worker_id: str | None = None
+    requeues: int = 0
+    submitted_at: float = field(default_factory=time.time)
+    finished_at: float | None = None
+    lint: dict | None = None
+    events: list = field(default_factory=list)      # NDJSON event dicts
+    result: dict | None = None      # terminal summary (best, counts, cache)
+    log: dict | None = None         # full TuningLog dict from the worker
+    error: str | None = None
+    _exp_index: dict = field(default_factory=dict, repr=False)
+
+    def record_event(self, ev: dict) -> None:
+        """Record one streamed event; a re-delivered experiment number (a
+        resumed job re-covering the window after its last checkpoint)
+        replaces the original in place, so followers never see duplicates."""
+        if ev.get("event") == "experiment" and "number" in ev:
+            idx = self._exp_index.get(ev["number"])
+            if idx is not None:
+                self.events[idx] = ev
+                return
+            self._exp_index[ev["number"]] = len(self.events)
+        self.events.append(ev)
+
+    def public(self, with_events: bool = False) -> dict:
+        out = {
+            "job_id": self.job_id,
+            "state": self.state,
+            "workload": self.spec.get("workload"),
+            "strategy": self.spec.get("strategy"),
+            "backend": self.spec.get("backend"),
+            "budget": self.spec.get("budget"),
+            "worker": self.worker_id,
+            "requeues": self.requeues,
+            "submitted_at": self.submitted_at,
+            "finished_at": self.finished_at,
+            "lint": self.lint,
+            "result": self.result,
+            "error": self.error,
+            "n_events": len(self.events),
+        }
+        if with_events:
+            out["events"] = list(self.events)
+        return out
+
+
+@dataclass
+class _Worker:
+    worker_id: str
+    name: str
+    host: str = ""
+    registered_at: float = field(default_factory=time.time)
+    last_seen: float = field(default_factory=time.time)
+    job_id: str | None = None
+    jobs_done: int = 0
+    dead: bool = False
+
+
+class Dispatcher:
+    """Queue + worker registry + federation — the fleet's single brain.
+
+    One lock/condition guards all state; followers block on the condition
+    and wake on every recorded event.  The shared federated store lives
+    under ``spool_dir`` by default (``store_target`` overrides — a path or
+    ``jsonl://``/``sqlite://`` URI); uploads are staged in
+    ``spool/uploads.jsonl`` and folded in by the
+    :class:`~repro.core.resultstore.FederationDaemon` every
+    ``federation_interval_s`` seconds.
+    """
+
+    def __init__(
+        self,
+        spool_dir: "str | os.PathLike | None" = None,
+        store_target: str | None = None,
+        *,
+        lint: bool = True,
+        lint_samples: int = 200,
+        heartbeat_timeout_s: float = HEARTBEAT_TIMEOUT_S,
+        federation_interval_s: float = 2.0,
+    ):
+        self.spool_dir = os.path.abspath(
+            os.fspath(spool_dir) if spool_dir
+            else tempfile.mkdtemp(prefix="fleet_spool_"))
+        os.makedirs(os.path.join(self.spool_dir, "jobs"), exist_ok=True)
+        self.lint = lint
+        self.lint_samples = int(lint_samples)
+        self.heartbeat_timeout_s = float(heartbeat_timeout_s)
+
+        self.store_target = (store_target
+                             or os.path.join(self.spool_dir, "store.jsonl"))
+        self.store = ResultStore.shared(self.store_target)
+        self.uploads_path = os.path.join(self.spool_dir, "uploads.jsonl")
+        self.federation = FederationDaemon(
+            self.store, sources=[self.uploads_path],
+            interval_s=federation_interval_s)
+        self._uploads = ResultStore.shared(self.uploads_path)
+
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._jobs: dict[str, Job] = {}
+        self._queue: list[str] = []         # FIFO of queued job ids
+        self._workers: dict[str, _Worker] = {}
+        self._job_seq = itertools.count(1)
+        self._worker_seq = itertools.count(1)
+        self._closed = False
+        self.started_at = time.time()
+
+        self.federation.start()
+        self._monitor = threading.Thread(
+            target=self._monitor_loop, name="fleet-monitor", daemon=True)
+        self._monitor.start()
+
+    # -- client surface ------------------------------------------------------
+
+    def submit(self, spec_doc: dict) -> dict:
+        """Lint + enqueue one spec document.  Raises
+        :class:`repro.analysis.lint.LintError` (typed: ``bad-spec`` /
+        ``infeasible-space``) — the HTTP layer maps it to 400/422 so a bad
+        spec never reaches a worker."""
+        from repro.analysis.lint import lint_spec
+
+        spec = TuningSpec.from_dict(spec_doc)   # raises ValueError → bad-spec
+        report = None
+        if self.lint:
+            report = lint_spec(spec, samples=self.lint_samples)
+        else:
+            # even unlinted, the spec must resolve — that is the cheap half
+            # of the door check and catches every "unknown name" mistake
+            spec.build_space(spec.build_workload())
+            spec.build_backend()
+            spec.build_peers()
+        with self._lock:
+            job_id = f"j{next(self._job_seq):05d}"
+            doc = spec.to_dict()
+            if not doc.get("checkpoint"):
+                # the sidecar under the spool is what makes blind requeue
+                # safe: any local worker resumes a dead worker's job from it
+                doc["checkpoint"] = os.path.join(
+                    self.spool_dir, "jobs", f"{job_id}.ck.pkl")
+            job = Job(job_id=job_id, spec=doc, lint=report)
+            self._jobs[job_id] = job
+            self._queue.append(job_id)
+            job.record_event({"event": "queued", "job_id": job_id})
+            self._cond.notify_all()
+        _log.info("submitted %s (%s/%s on %s)", job_id, job.spec["workload"],
+                  job.spec["strategy"], job.spec["backend"])
+        return job.public()
+
+    def job_status(self, job_id: str) -> "dict | None":
+        with self._lock:
+            job = self._jobs.get(job_id)
+            return job.public() if job else None
+
+    def status(self) -> dict:
+        with self._lock:
+            by_state: dict[str, int] = {}
+            for j in self._jobs.values():
+                by_state[j.state] = by_state.get(j.state, 0) + 1
+            return {
+                "uptime_s": round(time.time() - self.started_at, 3),
+                "jobs": {jid: j.public() for jid, j in self._jobs.items()},
+                "jobs_by_state": by_state,
+                "queued": list(self._queue),
+                "workers": {
+                    w.worker_id: {
+                        "name": w.name, "host": w.host, "job": w.job_id,
+                        "jobs_done": w.jobs_done, "dead": w.dead,
+                        "last_seen_age_s": round(time.time() - w.last_seen, 3),
+                    } for w in self._workers.values()},
+                "store": {"target": self.store_target,
+                          "records": self.store.count()},
+                "federation": self.federation.stats(),
+            }
+
+    def follow(self, job_id: str, timeout_s: "float | None" = None
+               ) -> Iterator[dict]:
+        """Yield the job's events from the beginning, then live as they land,
+        until the job is terminal (a final synthetic ``done``/``failed``
+        event closes the stream).  Not found yields a single error event."""
+        deadline = None if timeout_s is None else time.time() + timeout_s
+        sent = 0
+        while True:
+            with self._lock:
+                job = self._jobs.get(job_id)
+                if job is None:
+                    yield {"event": "error", "error": "not-found",
+                           "detail": f"unknown job {job_id!r}"}
+                    return
+                fresh = job.events[sent:]
+                sent = len(job.events)
+                terminal = job.state in ("done", "failed")
+                if not fresh and not terminal:
+                    wait = (None if deadline is None
+                            else max(0.0, deadline - time.time()))
+                    if wait == 0.0 or self._closed:
+                        yield {"event": "error", "error": "timeout"}
+                        return
+                    self._cond.wait(timeout=wait if wait is not None else 1.0)
+                    continue
+            for ev in fresh:
+                yield ev
+            if terminal:
+                return
+
+    def upload(self, lines: Sequence[str]) -> dict:
+        """The store-upload path: canonical JSONL record lines land in the
+        staging store; the federation daemon folds them into the shared
+        store on its next cycle (``flush_federation`` forces it)."""
+        stats = self._uploads.ingest_lines(lines)
+        _log.info("upload: %s", stats)
+        return stats
+
+    def export_store_lines(self) -> list[str]:
+        """The store-download path (``GET /store``): flush federation first
+        so a worker warm-pulling right after an upload sees those records."""
+        self.federation.merge_now()
+        return self.store.export_lines()
+
+    def flush_federation(self) -> "dict | None":
+        return self.federation.merge_now()
+
+    # -- worker surface ------------------------------------------------------
+
+    def register_worker(self, name: str = "", host: str = "") -> dict:
+        with self._lock:
+            worker_id = f"w{next(self._worker_seq):04d}"
+            self._workers[worker_id] = _Worker(
+                worker_id=worker_id, name=name or worker_id, host=host)
+        _log.info("worker %s (%s) registered", worker_id, name or worker_id)
+        return {"worker_id": worker_id,
+                "heartbeat_timeout_s": self.heartbeat_timeout_s,
+                "store_target": self.store_target}
+
+    def poll(self, worker_id: str) -> "dict | None":
+        """Assign the oldest queued job to this worker (None when idle)."""
+        with self._lock:
+            w = self._workers.get(worker_id)
+            if w is None or w.dead:
+                # a requeue marked this worker dead (or it never registered):
+                # make it re-register so stale ownership can never revive
+                raise KeyError(f"unknown or dead worker {worker_id!r}")
+            w.last_seen = time.time()
+            if not self._queue:
+                return None
+            job = self._jobs[self._queue.pop(0)]
+            job.state = "running"
+            job.worker_id = worker_id
+            w.job_id = job.job_id
+            job.record_event({"event": "assigned", "job_id": job.job_id,
+                              "worker": worker_id, "resume": job.resume})
+            self._cond.notify_all()
+            return {"job_id": job.job_id, "spec": dict(job.spec),
+                    "resume": job.resume}
+
+    def heartbeat(self, worker_id: str, job_id: "str | None" = None,
+                  events: "Sequence[dict] | None" = None) -> dict:
+        """Liveness + streamed experiment events.  Returns ``{"abort": True}``
+        when the named job is no longer owned by this worker (it was
+        requeued after a missed deadline) — the worker should drop it."""
+        with self._lock:
+            w = self._workers.get(worker_id)
+            if w is None:
+                return {"abort": True}
+            w.last_seen = time.time()
+            job = self._jobs.get(job_id) if job_id else None
+            owned = (job is not None and job.state == "running"
+                     and job.worker_id == worker_id)
+            if job is not None and owned and events:
+                for ev in events:
+                    if isinstance(ev, dict):
+                        job.record_event(ev)
+                self._cond.notify_all()
+            return {"abort": bool(job_id) and not owned}
+
+    def done(self, worker_id: str, job_id: str, *,
+             ok: bool, log: "dict | None" = None,
+             events: "Sequence[dict] | None" = None,
+             error: "str | None" = None) -> dict:
+        """Terminal job report from a worker."""
+        with self._lock:
+            job = self._jobs.get(job_id)
+            w = self._workers.get(worker_id)
+            if w is not None:
+                w.last_seen = time.time()
+                if w.job_id == job_id:
+                    w.job_id = None
+                    w.jobs_done += 1
+            if job is None:
+                return {"ok": False, "detail": f"unknown job {job_id!r}"}
+            if job.worker_id != worker_id or job.state != "running":
+                # a requeued job's original worker finishing late: its
+                # report is stale — the requeue owns the truth now
+                return {"ok": False, "detail": "job not owned"}
+            for ev in events or ():
+                if isinstance(ev, dict):
+                    job.record_event(ev)
+            job.state = "done" if ok else "failed"
+            job.finished_at = time.time()
+            job.log = log
+            job.error = error
+            if log and isinstance(log.get("experiments"), list):
+                exps = log["experiments"]
+                oks = [e for e in exps
+                       if e.get("status") == "ok"
+                       and e.get("time_s") is not None]
+                best = (min(oks, key=lambda e: e["time_s"]) if oks else None)
+                job.result = {
+                    "experiments": len(exps),
+                    "best": ({"number": best["number"],
+                              "time_s": best["time_s"]} if best else None),
+                    "cache": log.get("cache"),
+                }
+            job.record_event({"event": job.state, "job_id": job_id,
+                              "worker": worker_id, "error": error,
+                              "result": job.result})
+            self._cond.notify_all()
+        _log.info("job %s %s (worker %s)", job_id,
+                  "done" if ok else f"failed: {error}", worker_id)
+        return {"ok": True}
+
+    # -- supervision ---------------------------------------------------------
+
+    def _monitor_loop(self) -> None:
+        interval = max(0.05, self.heartbeat_timeout_s / 4.0)
+        while not self._closed:
+            time.sleep(interval)
+            self.requeue_dead()
+
+    def requeue_dead(self) -> list[str]:
+        """Requeue every running job whose worker missed the heartbeat
+        deadline — blindly resumable: the job re-enters the queue with
+        ``resume=True`` and the next worker continues from the checkpoint
+        sidecar (or starts fresh if none was written)."""
+        requeued: list[str] = []
+        now = time.time()
+        with self._lock:
+            for job in self._jobs.values():
+                if job.state != "running":
+                    continue
+                w = self._workers.get(job.worker_id or "")
+                if w is not None and now - w.last_seen <= \
+                        self.heartbeat_timeout_s:
+                    continue
+                if w is not None:
+                    w.dead = True
+                    w.job_id = None
+                job.state = "queued"
+                job.worker_id = None
+                job.resume = True
+                job.requeues += 1
+                self._queue.append(job.job_id)
+                job.record_event({"event": "requeued", "job_id": job.job_id,
+                                  "resume": True, "requeues": job.requeues})
+                requeued.append(job.job_id)
+            if requeued:
+                self._cond.notify_all()
+        for jid in requeued:
+            _log.warning("job %s requeued (worker heartbeat missed)", jid)
+        return requeued
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._cond.notify_all()
+        self.federation.stop(final_merge=True)
+
+    def __enter__(self) -> "Dispatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# The HTTP skin
+# ---------------------------------------------------------------------------
+
+
+class _Handler(BaseHTTPRequestHandler):
+    # HTTP/1.0 + connection-close framing: every request is its own
+    # connection, streams end by EOF — no chunked-encoding bookkeeping.
+    server_version = "repro-fleet/1.0"
+
+    @property
+    def dispatcher(self) -> Dispatcher:
+        return self.server.dispatcher    # type: ignore[attr-defined]
+
+    def log_message(self, fmt, *args):      # noqa: A003 — stdlib signature
+        _log.debug("%s %s", self.address_string(), fmt % args)
+
+    def _send_json(self, payload: dict, status: int = 200) -> None:
+        body = json.dumps(payload, separators=(",", ":"),
+                          default=float).encode("utf-8")
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _read_body(self) -> bytes:
+        length = int(self.headers.get("Content-Length") or 0)
+        return self.rfile.read(length) if length else b""
+
+    def _read_json(self) -> dict:
+        raw = self._read_body()
+        if not raw:
+            return {}
+        obj = json.loads(raw.decode("utf-8"))
+        if not isinstance(obj, dict):
+            raise ValueError("request body must be a JSON object")
+        return obj
+
+    # -- routes --------------------------------------------------------------
+
+    def do_GET(self) -> None:       # noqa: N802 — stdlib naming
+        try:
+            if self.path == "/status":
+                self._send_json(self.dispatcher.status())
+            elif self.path.startswith("/status/"):
+                doc = self.dispatcher.job_status(self.path[len("/status/"):])
+                if doc is None:
+                    self._send_json({"error": "not-found",
+                                     "detail": self.path}, status=404)
+                else:
+                    self._send_json(doc)
+            elif self.path.startswith("/follow/"):
+                self._stream_follow(self.path[len("/follow/"):])
+            elif self.path == "/store":
+                lines = self.dispatcher.export_store_lines()
+                body = ("\n".join(lines) + ("\n" if lines else "")
+                        ).encode("utf-8")
+                self.send_response(200)
+                self.send_header("Content-Type", "application/x-ndjson")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+            else:
+                self._send_json({"error": "not-found",
+                                 "detail": self.path}, status=404)
+        except (BrokenPipeError, ConnectionResetError):
+            pass        # follower went away — nothing to clean up
+        except Exception as e:      # noqa: BLE001 — surface, don't crash
+            self._safe_error(e)
+
+    def do_POST(self) -> None:      # noqa: N802 — stdlib naming
+        from repro.analysis.lint import LintError
+
+        d = self.dispatcher
+        try:
+            if self.path == "/submit":
+                req = self._read_json()
+                spec = req.get("spec")
+                if not isinstance(spec, dict):
+                    self._send_json({"error": "bad-spec",
+                                     "detail": "body must be "
+                                               "{\"spec\": {...}}"},
+                                    status=400)
+                    return
+                try:
+                    self._send_json(d.submit(spec))
+                except LintError as e:
+                    self._send_json(e.to_dict(),
+                                    status=400 if e.code == "bad-spec"
+                                    else 422)
+                except (ValueError, TypeError) as e:
+                    self._send_json({"error": "bad-spec", "detail": str(e)},
+                                    status=400)
+            elif self.path == "/upload":
+                text = self._read_body().decode("utf-8", "replace")
+                self._send_json(d.upload(text.splitlines()))
+            elif self.path == "/worker/register":
+                req = self._read_json()
+                self._send_json(d.register_worker(
+                    name=str(req.get("name", "")),
+                    host=str(req.get("host", ""))))
+            elif self.path == "/worker/poll":
+                req = self._read_json()
+                try:
+                    job = d.poll(str(req.get("worker_id", "")))
+                except KeyError as e:
+                    self._send_json({"error": "unknown-worker",
+                                     "detail": str(e)}, status=410)
+                    return
+                self._send_json({"job": job})
+            elif self.path == "/worker/heartbeat":
+                req = self._read_json()
+                self._send_json(d.heartbeat(
+                    str(req.get("worker_id", "")),
+                    job_id=req.get("job_id"),
+                    events=req.get("events") or []))
+            elif self.path == "/worker/done":
+                req = self._read_json()
+                self._send_json(d.done(
+                    str(req.get("worker_id", "")),
+                    str(req.get("job_id", "")),
+                    ok=bool(req.get("ok")),
+                    log=req.get("log"),
+                    events=req.get("events") or [],
+                    error=req.get("error")))
+            else:
+                self._send_json({"error": "not-found",
+                                 "detail": self.path}, status=404)
+        except (BrokenPipeError, ConnectionResetError):
+            pass
+        except Exception as e:      # noqa: BLE001
+            self._safe_error(e)
+
+    def _stream_follow(self, job_id: str) -> None:
+        self.send_response(200)
+        self.send_header("Content-Type", "application/x-ndjson")
+        self.end_headers()      # no Content-Length: EOF ends the stream
+        for ev in self.dispatcher.follow(job_id):
+            self.wfile.write(json.dumps(
+                ev, separators=(",", ":"), default=float).encode("utf-8")
+                + b"\n")
+            self.wfile.flush()
+
+    def _safe_error(self, e: Exception) -> None:
+        _log.exception("request failed: %s", self.path)
+        try:
+            self._send_json({"error": "internal",
+                             "detail": f"{type(e).__name__}: {e}"},
+                            status=500)
+        except OSError:
+            pass
+
+
+class FleetHTTPServer(ThreadingHTTPServer):
+    """The dispatcher behind a threading HTTP server.  ``with
+    FleetHTTPServer(dispatcher, ("127.0.0.1", 0)) as srv:`` binds an
+    ephemeral port (``srv.port``); ``serve_forever`` runs it."""
+
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, dispatcher: Dispatcher,
+                 address: tuple[str, int] = ("127.0.0.1", DEFAULT_PORT)):
+        super().__init__(address, _Handler)
+        self.dispatcher = dispatcher
+
+    @property
+    def port(self) -> int:
+        return self.server_address[1]
+
+    def server_close(self) -> None:
+        super().server_close()
+        self.dispatcher.close()
+
+
+def main(argv: "Sequence[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fleet.server",
+        description="Fleet dispatcher: accepts TuningSpec submissions and "
+                    "store uploads, lints specs at the door, queues jobs "
+                    "for pulling workers, streams NDJSON results, and runs "
+                    "the periodic store-federation merge.")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=DEFAULT_PORT,
+                    help=f"listen port (default {DEFAULT_PORT}; 0 = "
+                         f"ephemeral, printed on startup)")
+    ap.add_argument("--spool", default=None, metavar="DIR",
+                    help="spool directory for job sidecars, the shared "
+                         "store, and upload staging (default: a fresh "
+                         "temp dir)")
+    ap.add_argument("--store", default=None, metavar="TARGET",
+                    help="federated store target (path or jsonl:// / "
+                         "sqlite:// URI; default <spool>/store.jsonl)")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the static door lint (specs must still "
+                         "resolve)")
+    ap.add_argument("--lint-samples", type=int, default=200,
+                    help="schedules the door lint samples per spec "
+                         "(default 200)")
+    ap.add_argument("--heartbeat-timeout", type=float,
+                    default=HEARTBEAT_TIMEOUT_S, metavar="S",
+                    help="requeue a running job after S seconds without a "
+                         f"worker heartbeat (default {HEARTBEAT_TIMEOUT_S})")
+    ap.add_argument("--federation-interval", type=float, default=2.0,
+                    metavar="S",
+                    help="seconds between federation merge cycles "
+                         "(default 2.0)")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(
+        level=logging.INFO,
+        format="[%(asctime)s] %(name)s %(levelname)s: %(message)s")
+    dispatcher = Dispatcher(
+        spool_dir=args.spool, store_target=args.store,
+        lint=not args.no_lint, lint_samples=args.lint_samples,
+        heartbeat_timeout_s=args.heartbeat_timeout,
+        federation_interval_s=args.federation_interval)
+    srv = FleetHTTPServer(dispatcher, (args.host, args.port))
+    print(f"[fleet.server] listening on {args.host}:{srv.port} "
+          f"(spool {dispatcher.spool_dir}, store {dispatcher.store_target})",
+          flush=True)
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        srv.server_close()
+    return 0
+
+
+if __name__ == "__main__":
+    from repro.fleet.server import main as _canonical_main
+
+    raise SystemExit(_canonical_main())

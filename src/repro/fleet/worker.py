@@ -1,0 +1,268 @@
+"""Fleet worker: ``python -m repro.fleet.worker --connect host:port``.
+
+A worker is deliberately thin: it registers, pulls jobs from the
+dispatcher, and runs each one through the **unchanged**
+:class:`~repro.core.session.TuningSession` stack (spec → ``spec.run``),
+so every session feature — retries, quarantine, checkpoints, surrogate,
+async pipeline — works identically under the fleet.  While a job runs, a
+heartbeat thread reports liveness every
+:data:`~repro.fleet.protocol.HEARTBEAT_INTERVAL_S` seconds and flushes the
+experiment events the session streamed since the last beat; if the worker
+dies (kill -9 included), the dispatcher notices the silence and requeues
+the job with ``resume=True`` against its checkpoint sidecar.
+
+Warm starts come from the federation: a job whose spec leaves ``store``
+unset (``null``) gets a worker-local store that is first primed from
+``GET /store`` — so a re-submitted spec replays entirely from cached
+records, with zero backend dispatches — and is uploaded back
+(``POST /upload``) when the job finishes.  A spec that pins ``store`` to a
+path, or opts out with ``false``, is left alone.
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+import os
+import queue
+import socket
+import tempfile
+import threading
+import time
+from typing import Sequence
+
+from repro.core.autotuner import NoSuccessfulExperiment
+from repro.core.resultstore import ResultStore
+from repro.core.session import TuningSpec
+
+from .protocol import (HEARTBEAT_INTERVAL_S, FleetError, http_json,
+                       http_lines, parse_address)
+
+__all__ = ["FleetWorker", "main"]
+
+_log = logging.getLogger("repro.fleet.worker")
+
+
+class FleetWorker:
+    """One polling measurement host.  ``run_forever`` is the CLI loop;
+    ``run_one`` (poll + execute a single job, False when the queue was
+    empty) is the test surface."""
+
+    def __init__(self, host: str, port: int, *, name: str = "",
+                 workdir: "str | None" = None,
+                 store_path: "str | None" = None,
+                 poll_interval_s: float = 0.2,
+                 heartbeat_interval_s: float = HEARTBEAT_INTERVAL_S):
+        self.host, self.port = host, port
+        self.name = name or f"{socket.gethostname()}-{os.getpid()}"
+        self.workdir = os.path.abspath(
+            workdir or tempfile.mkdtemp(prefix="fleet_worker_"))
+        os.makedirs(self.workdir, exist_ok=True)
+        self.store_path = store_path or os.path.join(
+            self.workdir, "store.jsonl")
+        self.poll_interval_s = float(poll_interval_s)
+        self.heartbeat_interval_s = float(heartbeat_interval_s)
+        self.worker_id: "str | None" = None
+        self.jobs_done = 0
+
+    # -- dispatcher round trips ---------------------------------------------
+
+    def _call(self, path: str, payload: dict) -> dict:
+        return http_json(self.host, self.port, "POST", path, payload)
+
+    def register(self) -> str:
+        hello = self._call("/worker/register",
+                           {"name": self.name,
+                            "host": socket.gethostname()})
+        self.worker_id = hello["worker_id"]
+        _log.info("registered as %s (%s)", self.worker_id, self.name)
+        return self.worker_id
+
+    def _poll(self) -> "dict | None":
+        if self.worker_id is None:
+            self.register()
+        try:
+            return self._call("/worker/poll",
+                              {"worker_id": self.worker_id})["job"]
+        except FleetError as e:
+            if e.code == "unknown-worker":
+                # the dispatcher declared us dead (a requeue won the race,
+                # or it restarted) — re-register and try again next tick
+                _log.warning("dispatcher dropped us (%s); re-registering", e)
+                self.worker_id = None
+                return None
+            raise
+
+    def pull_warm_store(self) -> dict:
+        """Prime the worker-local store from the federated one."""
+        local = ResultStore.shared(self.store_path)
+        lines = list(http_lines(self.host, self.port, "GET", "/store",
+                                timeout=30.0))
+        stats = local.ingest_lines(lines)
+        _log.info("warm store pull: %s", stats)
+        return stats
+
+    def push_store(self) -> dict:
+        """Upload the worker-local store into the federation intake."""
+        local = ResultStore.shared(self.store_path)
+        lines = local.export_lines()
+        if not lines:
+            return {"ingested": 0, "skipped": 0, "corrupt": 0}
+        # /upload takes the raw JSONL body, not a JSON object
+        for _ in http_lines(self.host, self.port, "POST", "/upload",
+                            lines=lines):
+            pass
+        _log.info("uploaded %d store lines", len(lines))
+        return {"uploaded": len(lines)}
+
+    # -- job execution -------------------------------------------------------
+
+    def run_one(self) -> bool:
+        """Poll once; run the job if one was assigned.  Returns whether a
+        job was executed (False = queue empty)."""
+        job = self._poll()
+        if job is None:
+            return False
+        self._execute(job)
+        self.jobs_done += 1
+        return True
+
+    def _execute(self, job: dict) -> None:
+        job_id = job["job_id"]
+        resume = bool(job.get("resume"))
+        doc = dict(job["spec"])
+        _log.info("job %s: %s/%s on %s (budget %s%s)", job_id,
+                  doc.get("workload"), doc.get("strategy"),
+                  doc.get("backend"), doc.get("budget"),
+                  ", resume" if resume else "")
+
+        # federation store policy: an unset store gets the worker-local one,
+        # warm-primed from the dispatcher; False / explicit targets are the
+        # spec author's call and stay untouched.
+        if doc.get("store") is None:
+            doc["store"] = self.store_path
+            try:
+                self.pull_warm_store()
+            except (FleetError, OSError) as e:
+                _log.warning("warm store pull failed (%s) — running cold", e)
+
+        events: "queue.SimpleQueue[dict]" = queue.SimpleQueue()
+        stop_beats = threading.Event()
+
+        def on_experiment(exp) -> None:
+            events.put({"event": "experiment", **exp.to_dict()})
+
+        def drain() -> list[dict]:
+            out: list[dict] = []
+            while True:
+                try:
+                    out.append(events.get_nowait())
+                except queue.Empty:
+                    return out
+
+        def beat_loop() -> None:
+            while not stop_beats.wait(self.heartbeat_interval_s):
+                try:
+                    resp = self._call("/worker/heartbeat",
+                                      {"worker_id": self.worker_id,
+                                       "job_id": job_id,
+                                       "events": drain()})
+                except (FleetError, OSError) as e:
+                    _log.warning("heartbeat failed: %s", e)
+                    continue
+                if resp.get("abort"):
+                    # the job was requeued away from us; keep quiet — our
+                    # eventual done-report will be rejected as stale
+                    _log.warning("job %s no longer ours — "
+                                 "dispatcher requeued it", job_id)
+                    return
+
+        beats = threading.Thread(target=beat_loop,
+                                 name=f"fleet-heartbeat-{job_id}",
+                                 daemon=True)
+        beats.start()
+        ok, log_doc, error = False, None, None
+        try:
+            spec = TuningSpec.from_dict(doc)
+            log = spec.run(on_experiment, resume=resume)
+            log_doc, ok = log.to_dict(), True
+        except NoSuccessfulExperiment as e:
+            error = f"all experiments failed: {e}"
+        except Exception as e:      # noqa: BLE001 — report, stay alive
+            _log.exception("job %s crashed in-session", job_id)
+            error = f"{type(e).__name__}: {e}"
+        finally:
+            stop_beats.set()
+            beats.join(timeout=5.0)
+
+        if doc.get("store") == self.store_path:
+            try:
+                self.push_store()
+            except (FleetError, OSError) as e:
+                _log.warning("store upload failed: %s", e)
+        try:
+            self._call("/worker/done",
+                       {"worker_id": self.worker_id, "job_id": job_id,
+                        "ok": ok, "log": log_doc, "events": drain(),
+                        "error": error})
+        except (FleetError, OSError) as e:
+            _log.warning("done report failed: %s", e)
+
+    def run_forever(self, max_jobs: "int | None" = None) -> int:
+        self.register()
+        while max_jobs is None or self.jobs_done < max_jobs:
+            try:
+                if not self.run_one():
+                    time.sleep(self.poll_interval_s)
+            except (FleetError, OSError) as e:
+                _log.warning("dispatcher unreachable (%s); retrying", e)
+                time.sleep(max(self.poll_interval_s, 0.5))
+        return self.jobs_done
+
+
+def main(argv: "Sequence[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fleet.worker",
+        description="Fleet measurement worker: pulls jobs from the "
+                    "dispatcher, runs them through the unchanged "
+                    "TuningSession, heartbeats, and federates results.")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="dispatcher address")
+    ap.add_argument("--name", default="",
+                    help="worker display name (default host-pid)")
+    ap.add_argument("--workdir", default=None, metavar="DIR",
+                    help="scratch dir for the worker-local store "
+                         "(default: a fresh temp dir)")
+    ap.add_argument("--store", default=None, metavar="PATH",
+                    help="worker-local store path "
+                         "(default <workdir>/store.jsonl)")
+    ap.add_argument("--max-jobs", type=int, default=None, metavar="N",
+                    help="exit after N jobs (default: run forever)")
+    ap.add_argument("--poll-interval", type=float, default=0.2, metavar="S",
+                    help="idle poll period in seconds (default 0.2)")
+    ap.add_argument("--heartbeat-interval", type=float,
+                    default=HEARTBEAT_INTERVAL_S, metavar="S",
+                    help="heartbeat/event-flush period "
+                         f"(default {HEARTBEAT_INTERVAL_S})")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(
+        level=logging.INFO,
+        format="[%(asctime)s] %(name)s %(levelname)s: %(message)s")
+    host, port = parse_address(args.connect)
+    worker = FleetWorker(host, port, name=args.name, workdir=args.workdir,
+                         store_path=args.store,
+                         poll_interval_s=args.poll_interval,
+                         heartbeat_interval_s=args.heartbeat_interval)
+    try:
+        done = worker.run_forever(max_jobs=args.max_jobs)
+    except KeyboardInterrupt:
+        done = worker.jobs_done
+    print(f"[fleet.worker] {worker.name}: {done} job(s) done", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    from repro.fleet.worker import main as _canonical_main
+
+    raise SystemExit(_canonical_main())

@@ -17,21 +17,54 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import logging
 import time
+
+_log = logging.getLogger("repro.launch.serve")
 
 
 def apply_tuned_schedules(cfg, path):
     """Install tuned kernel schedules (``{"attention": {"block_q": ...},
-    "ssd": {"chunk": ...}}``) into a :class:`ModelConfig`.  Unknown kernels
-    in the file raise — a schedule that silently fails to apply would
-    invalidate the tokens/sec comparison."""
+    "ssd": {"chunk": ...}}``) into a :class:`ModelConfig`.
+
+    The file is validated entry by entry: a kernel this build does not
+    serve, a non-object params entry, or a block value that is not an
+    integer (booleans included — JSON ``true`` is not a block size) is
+    **warned about and skipped**, and every valid entry still applies.  A
+    schedules file routinely outlives the build that wrote it — a tuning
+    sweep may cover kernels a given serving config never installs — and
+    rejecting the whole file over one stale row would silently throw away
+    the tuned schedules that *do* apply.  The skips are loud (one warning
+    per entry) so the tokens/sec comparison is never quietly mis-scoped.
+    """
     from repro.core.kernelworkload import serve_overrides
 
     with open(path, encoding="utf-8") as f:
         schedules = json.load(f)
+    if not isinstance(schedules, dict):
+        raise ValueError(
+            f"tuned schedules {path!r}: expected a JSON object of "
+            f"{{kernel: params}}, got {type(schedules).__name__}")
     overrides = {}
     for kernel, params in schedules.items():
-        overrides.update(serve_overrides(kernel, params))
+        if not isinstance(params, dict):
+            _log.warning(
+                "tuned schedules %s: %r params must be an object, got %s "
+                "— skipping", path, kernel, type(params).__name__)
+            continue
+        bad = {k: v for k, v in params.items()
+               if not isinstance(v, int) or isinstance(v, bool)}
+        if bad:
+            _log.warning(
+                "tuned schedules %s: %r has non-integer block values %r "
+                "— skipping", path, kernel, bad)
+            continue
+        try:
+            overrides.update(serve_overrides(kernel, params))
+        except (ValueError, KeyError) as e:
+            _log.warning(
+                "tuned schedules %s: unknown kernel %r (%s) — skipping",
+                path, kernel, e)
     return dataclasses.replace(cfg, **overrides), overrides
 
 

@@ -406,3 +406,42 @@ class TestSupervisedPool:
         assert statuses[0] == "ok"
         assert "exec_error" in statuses[1:]
         assert pool.faults.get("deadline_skips", 0) >= 1
+
+    def test_utilization_accumulates_across_kill_and_respawn(self):
+        """utilization() is a lifetime accounting surface: a killed worker's
+        busy seconds and served tasks survive the respawn (the slot, not
+        the process, owns the counters)."""
+        with SupervisedPool("costmodel", {}, workers=1) as pool:
+            res1 = pool.run(GEMM, _configs(3))
+            assert all(r.ok for r in res1)
+            u1 = pool.utilization()
+            assert u1["workers"] == 1 and len(u1["per_worker"]) == 1
+            assert u1["tasks"] == 3 and u1["busy_s"] > 0.0
+
+            pool._retire(0)                     # hard-kill the worker
+            res2 = pool.run(GEMM, _configs(2))  # lazily respawned
+            assert all(r.ok for r in res2)
+            u2 = pool.utilization()
+        # counters accumulate across the kill/respawn boundary
+        assert u2["tasks"] == 5
+        assert u2["per_worker"][0]["tasks"] == 5
+        assert u2["busy_s"] >= u1["busy_s"]
+        assert u2["wall_s"] >= u1["wall_s"]
+        assert 0.0 < u2["busy_frac"] <= 1.0
+        # busy + idle partition the slot's wall clock
+        pw = u2["per_worker"][0]
+        assert pw["busy_s"] + pw["idle_s"] == pytest.approx(
+            u2["wall_s"], abs=0.05)
+
+    def test_utilization_counts_deadline_kills(self):
+        """A deadline SIGKILL lands in both the aggregate and the per-slot
+        kill counters — the utilization surface is how bench_async (and the
+        fleet dispatcher's status page) see supervision events."""
+        spec = {"inner": {"kind": "costmodel"}, "hang": 1.0, "hang_s": 600.0}
+        with SupervisedPool("fault", spec, workers=1,
+                            deadline_s=1.0) as pool:
+            res = pool.run(GEMM, _configs(1))
+            util = pool.utilization()
+        assert res[0].status == "exec_error"
+        assert util["kills"] == 1
+        assert util["per_worker"][0]["kills"] == 1

@@ -1,0 +1,239 @@
+"""Fleet dispatcher/worker tests (PR 10, ROADMAP item 1).
+
+The :class:`~repro.fleet.server.Dispatcher` is tested in-process (no
+sockets — queue semantics, door lint, requeue-on-silence, federation), and
+end-to-end over HTTP (marked ``net``, deselected from tier-1 via
+pytest.ini) with a real :class:`~repro.fleet.worker.FleetWorker` driving
+the unchanged session stack.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.analysis.lint import LintError
+from repro.core import Result, ResultStore
+from repro.fleet import (Dispatcher, FleetError, FleetHTTPServer,
+                         FleetWorker, parse_address)
+from repro.fleet.client import follow, submit
+
+SPEC = {"workload": "gemm", "strategy": "random", "budget": 10,
+        "backend": "costmodel"}
+
+
+def _dispatcher(**kw):
+    kw.setdefault("lint", False)        # queue tests don't need the door lint
+    kw.setdefault("federation_interval_s", 30.0)
+    return Dispatcher(**kw)
+
+
+class TestDispatcherQueue:
+    def test_submit_assigns_fifo_ids_and_spool_checkpoints(self, tmp_path):
+        with _dispatcher(spool_dir=tmp_path) as d:
+            a = d.submit(dict(SPEC))
+            b = d.submit(dict(SPEC))
+            assert [a["job_id"], b["job_id"]] == ["j00001", "j00002"]
+            st = d.status()
+            assert st["queued"] == ["j00001", "j00002"]
+            # every job gets a spool-local checkpoint sidecar so a blind
+            # requeue (--resume) works from any local worker
+            ck = d._jobs["j00001"].spec["checkpoint"]
+            assert ck.startswith(str(tmp_path)) and ck.endswith(".ck.pkl")
+
+    def test_concurrent_submissions_keep_order_and_lose_nothing(self):
+        """Many clients submitting at once: every submission is accepted
+        exactly once, ids are unique, and the queue drains in submission
+        (id) order."""
+        n_clients, per_client = 8, 10
+        results: list[list[dict]] = [[] for _ in range(n_clients)]
+        with _dispatcher() as d:
+            start = threading.Barrier(n_clients)
+
+            def client(i: int) -> None:
+                start.wait()
+                for _ in range(per_client):
+                    results[i].append(d.submit(dict(SPEC)))
+
+            threads = [threading.Thread(target=client, args=(i,))
+                       for i in range(n_clients)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+
+            ids = [doc["job_id"] for docs in results for doc in docs]
+            assert len(ids) == n_clients * per_client       # nothing lost
+            assert len(set(ids)) == len(ids)                # nothing doubled
+            st = d.status()
+            assert len(st["jobs"]) == n_clients * per_client
+            # FIFO: the queue is exactly the ids in ascending order
+            assert st["queued"] == sorted(ids)
+            # each client saw its own submissions in monotonic id order
+            for docs in results:
+                seq = [doc["job_id"] for doc in docs]
+                assert seq == sorted(seq)
+
+            # draining via poll hands jobs out in the same FIFO order
+            w = d.register_worker(name="drain")["worker_id"]
+            polled = []
+            while True:
+                job = d.poll(w)
+                if job is None:
+                    break
+                polled.append(job["job_id"])
+            assert polled == sorted(ids)
+
+    def test_bad_spec_rejected_at_the_door(self):
+        with _dispatcher() as d:
+            with pytest.raises((LintError, ValueError)):
+                d.submit({"workload": "nope"})
+            with pytest.raises((LintError, ValueError)):
+                d.submit({"workload": "gemm", "no_such_field": 1})
+            assert d.status()["jobs"] == {}     # nothing was queued
+
+    def test_linted_submit_attaches_report(self):
+        with Dispatcher(lint=True, lint_samples=25,
+                        federation_interval_s=30.0) as d:
+            doc = d.submit(dict(SPEC))
+            assert doc["lint"]["samples"] == 25
+            assert 0 <= doc["lint"]["infeasible"] <= 25
+            assert 0.0 <= doc["lint"]["infeasible_fraction"] <= 1.0
+
+    def test_silent_worker_requeues_job_with_resume(self):
+        with _dispatcher(heartbeat_timeout_s=0.2) as d:
+            d.submit(dict(SPEC))
+            w = d.register_worker(name="doomed")["worker_id"]
+            job = d.poll(w)
+            assert job is not None and not job["resume"]
+            # miss the heartbeat deadline; the monitor thread (or this
+            # explicit sweep — whichever wins the race) requeues the job
+            deadline = time.time() + 5.0
+            while time.time() < deadline:
+                d.requeue_dead()
+                if d.job_status(job["job_id"])["state"] == "queued":
+                    break
+                time.sleep(0.05)
+            st = d.status()
+            assert st["jobs"][job["job_id"]]["state"] == "queued"
+            assert st["jobs"][job["job_id"]]["requeues"] == 1
+            # the dead worker cannot poll anymore; a fresh one resumes
+            with pytest.raises(KeyError):
+                d.poll(w)
+            w2 = d.register_worker(name="rescue")["worker_id"]
+            job2 = d.poll(w2)
+            assert job2["job_id"] == job["job_id"] and job2["resume"]
+
+    def test_stale_done_report_from_requeued_worker_is_rejected(self):
+        with _dispatcher(heartbeat_timeout_s=0.2) as d:
+            d.submit(dict(SPEC))
+            w1 = d.register_worker()["worker_id"]
+            job = d.poll(w1)
+            time.sleep(0.35)
+            d.requeue_dead()
+            w2 = d.register_worker()["worker_id"]
+            assert d.poll(w2)["job_id"] == job["job_id"]
+            # the original worker finishing late must not clobber the retry
+            out = d.done(w1, job["job_id"], ok=True, log={"experiments": []})
+            assert not out["ok"]
+            assert d.status()["jobs"][job["job_id"]]["state"] == "running"
+
+    def test_heartbeat_events_reach_followers(self):
+        with _dispatcher() as d:
+            job = d.submit(dict(SPEC))
+            w = d.register_worker()["worker_id"]
+            d.poll(w)
+            d.heartbeat(w, job_id=job["job_id"],
+                        events=[{"event": "experiment", "number": 0},
+                                {"event": "experiment", "number": 1}])
+            # replace-by-number: a resumed job re-sending an experiment
+            # does not duplicate it in the follower stream
+            d.heartbeat(w, job_id=job["job_id"],
+                        events=[{"event": "experiment", "number": 1,
+                                 "note": "replayed"}])
+            d.done(w, job["job_id"], ok=True, log={"experiments": []})
+            evs = list(d.follow(job["job_id"], timeout_s=5.0))
+            nums = [e["number"] for e in evs if e["event"] == "experiment"]
+            assert nums == [0, 1]
+            assert [e for e in evs if e["event"] == "experiment"
+                    and e["number"] == 1][0]["note"] == "replayed"
+            assert evs[-1]["event"] == "done"
+
+
+class TestFederation:
+    def test_upload_is_folded_into_the_shared_store(self, tmp_path):
+        src = ResultStore.open(str(tmp_path / "worker_store.jsonl"))
+        src.append_many("fp:test", "scope:test",
+                        [((("i", 8, False, True, 1, 1, False),),
+                          Result("ok", time_s=0.25))])
+        lines = src.export_lines()
+        assert lines
+        with _dispatcher(spool_dir=tmp_path / "spool") as d:
+            stats = d.upload(lines)
+            assert stats["ingested"] == 1
+            # GET /store flushes the federation first, so the upload is
+            # visible to the very next warm pull
+            assert d.export_store_lines() == lines
+            assert d.federation.stats()["cycles"] >= 1
+
+
+@pytest.mark.net
+class TestFleetOverHTTP:
+    @pytest.fixture()
+    def server(self, tmp_path):
+        d = Dispatcher(spool_dir=tmp_path, lint=True, lint_samples=25,
+                       federation_interval_s=0.5)
+        srv = FleetHTTPServer(d, ("127.0.0.1", 0))
+        t = threading.Thread(target=srv.serve_forever, daemon=True)
+        t.start()
+        try:
+            yield srv
+        finally:
+            srv.shutdown()
+            srv.server_close()
+
+    def test_submit_run_follow_end_to_end(self, server, tmp_path):
+        port = server.port
+        job = submit("127.0.0.1", port, dict(SPEC))
+        assert job["state"] == "queued" and job["lint"]["samples"] == 25
+
+        w = FleetWorker("127.0.0.1", port, name="t", workdir=tmp_path / "w",
+                        heartbeat_interval_s=0.05)
+        w.register()
+        assert w.run_one()
+
+        evs = list(follow("127.0.0.1", port, job["job_id"]))
+        assert evs[-1]["event"] == "done"
+        exps = [e for e in evs if e["event"] == "experiment"]
+        assert len(exps) == SPEC["budget"]
+        assert evs[-1]["result"]["best"] is not None
+
+        # the worker federated its results: the shared store now replays
+        # a re-submitted spec from cache
+        job2 = submit("127.0.0.1", port, dict(SPEC))
+        assert w.run_one()
+        evs2 = list(follow("127.0.0.1", port, job2["job_id"]))
+        cache = evs2[-1]["result"]["cache"]
+        assert cache["preloaded"] > 0 and cache["hits"] > 0
+
+    def test_http_bad_spec_is_a_typed_400(self, server):
+        with pytest.raises(FleetError) as ei:
+            submit("127.0.0.1", server.port, {"workload": "nope"})
+        assert ei.value.status == 400 and ei.value.code == "bad-spec"
+
+    def test_unknown_job_follow_and_status(self, server):
+        evs = list(follow("127.0.0.1", server.port, "jXXXXX"))
+        assert evs == [{"event": "error", "error": "not-found",
+                        "detail": "unknown job 'jXXXXX'"}]
+        with pytest.raises(FleetError) as ei:
+            from repro.fleet.protocol import http_json
+            http_json("127.0.0.1", server.port, "GET", "/status/jXXXXX")
+        assert ei.value.status == 404
+
+
+def test_parse_address():
+    assert parse_address("example.org:9000") == ("example.org", 9000)
+    assert parse_address(":9000") == ("127.0.0.1", 9000)
+    assert parse_address("example.org") == ("example.org", 8757)

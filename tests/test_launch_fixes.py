@@ -7,6 +7,10 @@
   flag to a user-set ``XLA_FLAGS``, and must keep its module docstring.
 * ``serve/engine.py::_install_prefix`` must raise on an unmergeable prefill
   cache leaf instead of silently serving from the zeroed preallocation.
+* ``launch/serve.py::apply_tuned_schedules`` must warn-and-skip invalid
+  schedule entries (unknown kernels, non-integer block values) while still
+  applying every valid one — a stale schedules file must not reject the
+  tuned schedules that do apply.
 """
 
 from __future__ import annotations
@@ -85,3 +89,52 @@ def test_install_prefix_rejects_unmergeable_leaf():
     bad_rank = {"k": jnp.ones((4, 5, 8)), "len": jnp.array([5])}
     with pytest.raises(ValueError, match="cannot merge prefill cache leaf"):
         _install_prefix(dst, bad_rank, 32)
+
+
+class TestApplyTunedSchedules:
+    def _apply(self, tmp_path, schedules, caplog):
+        import json
+        import logging
+
+        from repro.configs.base import get_config
+        from repro.launch.serve import apply_tuned_schedules
+
+        path = tmp_path / "kernel_schedules.json"
+        path.write_text(json.dumps(schedules))
+        cfg = get_config("internlm2_1_8b").reduced()
+        with caplog.at_level(logging.WARNING, logger="repro.launch.serve"):
+            return apply_tuned_schedules(cfg, str(path))
+
+    def test_valid_entries_apply(self, tmp_path, caplog):
+        cfg, overrides = self._apply(
+            tmp_path,
+            {"attention": {"block_q": 64}, "ssd": {"chunk": 16}}, caplog)
+        assert overrides == {"attn_q_chunk": 64, "ssd_chunk": 16}
+        assert cfg.attn_q_chunk == 64 and cfg.ssd_chunk == 16
+        assert not caplog.records
+
+    def test_unknown_kernel_warns_and_skips(self, tmp_path, caplog):
+        cfg, overrides = self._apply(
+            tmp_path,
+            {"attention": {"block_q": 64},
+             "flashfusion": {"block_q": 128}}, caplog)
+        # the valid entry still applies; the unknown one is skipped loudly
+        assert overrides == {"attn_q_chunk": 64}
+        assert cfg.attn_q_chunk == 64
+        assert any("flashfusion" in r.message and "skipping" in r.message
+                   for r in caplog.records)
+
+    def test_non_int_blocks_warn_and_skip(self, tmp_path, caplog):
+        cfg, overrides = self._apply(
+            tmp_path,
+            {"attention": {"block_q": "64"},    # strings are not block sizes
+             "ssd": {"chunk": True},            # neither are JSON booleans
+             "other": 64},                      # nor non-object params
+            caplog)
+        assert overrides == {}
+        assert len(caplog.records) == 3
+        assert all("skipping" in r.message for r in caplog.records)
+
+    def test_non_object_file_raises(self, tmp_path, caplog):
+        with pytest.raises(ValueError, match="expected a JSON object"):
+            self._apply(tmp_path, ["attention"], caplog)

@@ -52,7 +52,12 @@ class TestFeatureExtraction:
     def test_vector_length_matches_names(self):
         items = _ok_keys_and_times(GEMM, n=5)
         f = structure_features(items[0][0], GEMM)
-        assert len(f) == len(feature_names(GEMM)) == 47
+        assert len(f) == len(feature_names(GEMM)) == 56
+        # the historical syntactic vector is still available as the
+        # "tokens" feature set (the bench_surrogate baseline arm)
+        tok = structure_features(items[0][0], GEMM, feature_set="tokens")
+        assert len(tok) == len(feature_names(GEMM, feature_set="tokens")) == 47
+        assert np.array_equal(f[:47], tok)
 
     def test_pure_function_of_key(self):
         key = _ok_keys_and_times(GEMM, n=1)[0][0]
